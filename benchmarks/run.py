@@ -1,0 +1,66 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Order: characterization (Fig 3) → run lengths (Fig 4) → breakdown (Fig 6) →
+scalability (Fig 7) → kernel bench. Results land in experiments/*.json and a
+combined experiments/bench_summary.json.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def main() -> int:
+    from . import breakdown, characterization, kernel_bench, runlength, scalability
+
+    summary = {}
+    t0 = time.perf_counter()
+
+    print("=" * 72)
+    print("Fig 3 analogue — snapshot image composition")
+    print("=" * 72)
+    characterization.main()
+    summary["characterization"] = json.loads((OUT / "characterization.json").read_text())["average"]
+
+    print("\n" + "=" * 72)
+    print("Fig 4 analogue — hot-set run-length distribution")
+    print("=" * 72)
+    runlength.main()
+    summary["runlength"] = json.loads((OUT / "runlength.json").read_text())["aggregate"]
+
+    print("\n" + "=" * 72)
+    print("Fig 6 analogue — invocation breakdown (chameleon @32)")
+    print("=" * 72)
+    breakdown.main()
+    b = json.loads((OUT / "breakdown.json").read_text())
+    summary["breakdown"] = {
+        "speedup_vs_firecracker": b["speedup_vs_firecracker"],
+        "speedup_vs_faasnap": b["speedup_vs_faasnap"],
+        "restore_bit_identical": b["restore_bit_identical"],
+    }
+
+    print("\n" + "=" * 72)
+    print("Fig 7 analogue — scalability 1..32 + headline geomeans")
+    print("=" * 72)
+    scalability.main()
+    summary["scalability"] = json.loads((OUT / "scalability.json").read_text())["geomean_speedups_at_32"]
+
+    print("\n" + "=" * 72)
+    print("kernel bench — snapshot-pipeline kernels")
+    print("=" * 72)
+    kernel_bench.main()
+
+    summary["wall_s"] = time.perf_counter() - t0
+    (OUT / "bench_summary.json").write_text(json.dumps(summary, indent=2))
+    print(f"\nall benchmarks done in {summary['wall_s']:.1f}s -> experiments/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

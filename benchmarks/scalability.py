@@ -1,0 +1,68 @@
+"""Fig. 7 analogue: end-to-end invocation time vs concurrency (1..32) across
+all nine workloads × five strategies, plus the headline geomean speedups.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.serve.strategies import STRATEGIES, run_strategy
+from .workloads import all_workloads, get_workload
+
+OUT = Path(__file__).resolve().parents[1] / "experiments"
+CONCURRENCY = (1, 2, 4, 8, 12, 16, 24, 32)
+
+
+def run() -> dict:
+    results = {}
+    for name in all_workloads():
+        spec = get_workload(name).spec()
+        per = {}
+        for strat in STRATEGIES:
+            per[strat] = {str(n): run_strategy(strat, spec, concurrency=n).total_s
+                          for n in CONCURRENCY}
+        results[name] = per
+
+    # geomean speedups at n=32 (paper's headline setting)
+    def geomean(xs):
+        return float(np.exp(np.mean(np.log(xs))))
+
+    speedups = {}
+    for base in ("firecracker", "faasnap", "reap", "fctiered"):
+        ratios = [results[w][base]["32"] / results[w]["aquifer"]["32"]
+                  for w in results]
+        speedups[f"vs_{base}"] = geomean(ratios)
+    ratios_no_ffmpeg = [results[w]["reap"]["32"] / results[w]["aquifer"]["32"]
+                        for w in results if w != "ffmpeg"]
+    speedups["vs_reap_excl_ffmpeg"] = geomean(ratios_no_ffmpeg)
+    fastest = {w: min(results[w], key=lambda s: results[w][s]["32"]) for w in results}
+
+    out = {
+        "results": results,
+        "geomean_speedups_at_32": speedups,
+        "fastest_strategy_per_workload": fastest,
+        "paper": {"vs_firecracker": 2.2, "vs_faasnap": 1.3, "vs_reap": 1.1,
+                  "note": "REAP beats Aquifer on ffmpeg (zero pages in WS)"},
+    }
+    OUT.mkdir(exist_ok=True)
+    (OUT / "scalability.json").write_text(json.dumps(out, indent=2))
+    return out
+
+
+def main():
+    out = run()
+    print("end-to-end invocation time @concurrency=32 (modeled s):")
+    print(f"{'workload':14s}" + "".join(f"{s:>13s}" for s in STRATEGIES))
+    for w, per in out["results"].items():
+        print(f"{w:14s}" + "".join(f"{per[s]['32']:13.3f}" for s in STRATEGIES))
+    g = out["geomean_speedups_at_32"]
+    print(f"\ngeomean speedup of Aquifer @32: vs firecracker {g['vs_firecracker']:.2f}x "
+          f"(paper 2.2x) | vs faasnap {g['vs_faasnap']:.2f}x (paper 1.3x) | "
+          f"vs reap {g['vs_reap']:.2f}x (paper 1.1x)")
+    print(f"fastest per workload: {out['fastest_strategy_per_workload']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""The nine serverless workloads (Table 2 analogues) as model-serving
+instances over real framework state.
+
+Each workload is a reduced-config model server whose paged state image holds:
+  * model params (always read by an invocation → hot, except embedding rows);
+  * a `runtime` segment (guest kernel + Python + libs analogue: non-zero
+    bytes of which only a small, scattered fraction is touched → the cold
+    mass of §2.3.3);
+  * a KV-cache arena + activation workspace (zero at snapshot time → the
+    zero-page mass; positions written during an invocation are its dirtied
+    pages — ffmpeg-style zero-pages-in-working-set arise here);
+  * for MoE archs, expert hotness is structural: only routed experts' pages
+    are touched.
+
+Page classes are MEASURED by the real profiler + zero-detector, not assumed;
+only segment sizing is calibrated so compositions span the paper's observed
+range (zero 46.9%–90.7%, Fig. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import StateImage
+from repro.core.profiler import AccessRecorder, WorkloadProfile
+from repro.models.model_zoo import build
+from repro.serve.strategies import WorkloadSpec
+
+PAPER_INSTANCE_BYTES = 1.5 * (1 << 30)   # Azure default 1.5 GiB (§2.3.3)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadDef:
+    name: str
+    arch: str
+    domain: str
+    runtime_mb: int          # non-zero runtime/libs segment
+    arena_mb: int            # KV arena (zero at snapshot)
+    workspace_mb: int        # activation workspace (zero at snapshot)
+    runtime_touch_frac: float  # fraction of runtime pages touched / invocation
+    prompt_len: int          # arena rows written per invocation
+    arena_rows: int          # arena leading dim
+    compute_s: float         # modeled function execution compute
+    arena_touch_extra: float = 0.0  # extra arena (zero-page) churn → ffmpeg
+
+
+# Calibrated so the MEASURED compositions span the paper's Fig-3 range
+# (zero 46.9%–90.7%, hot ≈5.5% avg, cold = bulk of non-zero).
+WORKLOADS: Dict[str, WorkloadDef] = {w.name: w for w in [
+    WorkloadDef("chameleon",   "qwen2.5-14b",        "web",        24, 88, 44, 0.18, 128, 1024, 0.08),
+    WorkloadDef("compression", "phi4-mini-3.8b",     "web",        22, 100, 40, 0.15, 96, 1024, 0.25),
+    WorkloadDef("json",        "qwen2.5-32b",        "web",        18, 120, 56, 0.12, 64, 1024, 0.04),
+    WorkloadDef("ffmpeg",      "seamless-m4t-medium","multimedia", 26, 84, 36, 0.18, 192, 1024, 0.90,
+                arena_touch_extra=0.62),
+    WorkloadDef("image",       "qwen2-vl-72b",       "multimedia", 24, 84, 40, 0.16, 128, 1024, 0.18),
+    WorkloadDef("matmul",      "mistral-large-123b", "scientific", 30, 64, 32, 0.20, 96, 1024, 1.00),
+    WorkloadDef("pagerank",    "zamba2-2.7b",        "scientific", 24, 92, 40, 0.15, 96, 1024, 0.45),
+    WorkloadDef("pyaes",       "xlstm-125m",         "scientific", 10, 140, 56, 0.10, 32, 1024, 1.30),
+    WorkloadDef("recognition", "deepseek-v3-671b",   "ml",         52, 26, 12, 0.30, 128, 1024, 2.00),
+]}
+
+
+@dataclasses.dataclass
+class BuiltWorkload:
+    wdef: WorkloadDef
+    image: StateImage
+    profile: WorkloadProfile
+    invocation_touched: np.ndarray     # pages touched by one (measured) invocation
+    scale: float
+
+    def spec(self) -> WorkloadSpec:
+        return WorkloadSpec(
+            name=self.wdef.name,
+            image=self.image,
+            working_set=self.profile.working_set,
+            touched=self.invocation_touched,
+            compute_s=self.wdef.compute_s,
+            scale=self.scale,
+        )
+
+
+def _expert_elements(extent, layer: int, expert: int, n_layers: int, n_experts: int):
+    per_layer = 1
+    for d in extent.shape[1:]:
+        per_layer *= d
+    per_expert = per_layer // n_experts
+    base = layer * per_layer + expert * per_expert
+    return base, base + per_expert
+
+
+def build_workload(name: str, seed: int = 0, n_invocations: int = 16) -> BuiltWorkload:
+    wdef = WORKLOADS[name]
+    cfg = get_config(wdef.arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    from repro.checkpoint.ckpt import flatten_state
+    arrays = dict(flatten_state(params))
+    rng = np.random.default_rng(seed)
+    # runtime/libs bytes: low-entropy like real code+data pages (repeated
+    # motifs over a small alphabet) so the zstd cold tier sees realistic input
+    motifs = rng.integers(1, 64, (256, 1024), dtype=np.uint8)
+    picks = rng.integers(0, 256, (wdef.runtime_mb << 10,))
+    arrays["runtime"] = motifs[picks].reshape(-1)
+    arena_cols = (wdef.arena_mb << 20) // (4 * wdef.arena_rows)
+    arrays["kv_arena"] = np.zeros((wdef.arena_rows, arena_cols), np.float32)
+    arrays["workspace"] = np.zeros((wdef.workspace_mb << 20) // 4, np.float32)
+    image = StateImage.build(arrays)
+    extents = image.manifest.by_name()
+
+    moe_names = [n for n in arrays if "/moe/w" in n]
+    n_moe_layers = extents[moe_names[0]].shape[0] if moe_names else 0
+
+    def one_invocation(rec: AccessRecorder, i: int) -> List[int]:
+        r = np.random.default_rng((seed, i))
+        before = set(rec.pages)
+        # 1) token embeddings: Zipf-distributed rows of the (padded) table
+        toks = np.minimum(r.zipf(1.4, size=wdef.prompt_len) - 1, cfg.vocab - 1)
+        rec.touch_rows("embed/table", np.unique(toks))
+        # 2) layer weights: everything except embeddings and routed experts
+        for n in arrays:
+            if n.startswith(("embed",)) or n in ("runtime", "kv_arena", "workspace"):
+                continue
+            if "/moe/w" in n:
+                continue
+            rec.touch_array(n)
+        # 3) MoE: only routed experts (top-k per layer, Zipf-hot experts)
+        if moe_names:
+            for l in range(n_moe_layers):
+                hot_e = np.minimum(r.zipf(1.3, size=cfg.top_k) - 1, cfg.n_experts - 1)
+                for n in moe_names:
+                    for e in set(int(x) for x in hot_e):
+                        lo, hi = _expert_elements(extents[n], l, e, n_moe_layers, cfg.n_experts)
+                        rec.touch_elements(n, lo, hi)
+        # 4) runtime/libs: scattered short spans (Fig-4 fragmentation).
+        # 85% of spans come from a workload-stable rng — the same interpreter
+        # and library pages every invocation — plus a small per-input tail,
+        # so the cumulative working set stays bounded (paper Fig. 2/3).
+        rt_pages = extents["runtime"].page_count
+        n_touch = int(rt_pages * wdef.runtime_touch_frac)
+        stable = np.random.default_rng((seed, 777))
+        for src, frac in ((stable, 0.85), (r, 0.15)):
+            starts = src.integers(0, max(1, rt_pages - 4),
+                                  size=max(1, int(n_touch * frac) // 2))
+            for s in starts:
+                span = int(src.integers(1, 4))
+                rec.touch_pages(range(extents["runtime"].first_page + s,
+                                      extents["runtime"].first_page + s + span))
+        # 5) KV arena: the request's cache slot. Slots are reused heavily
+        # within a keep-alive window (one slot per in-flight request), with
+        # an occasional fresh slot — the fresh slot's pages are the zero
+        # pages a restored instance still faults on.
+        stable2 = np.random.default_rng((seed, 778))
+        rows = [int(stable2.integers(0, 14)), int(stable2.integers(0, 14))]
+        if i % 4 == 0:
+            rows.append(int(r.integers(14, wdef.arena_rows)))
+        rec.touch_rows("kv_arena", sorted(set(rows)))
+        if wdef.arena_touch_extra:
+            extra = int(extents["kv_arena"].page_count * wdef.arena_touch_extra)
+            ps = r.integers(0, extents["kv_arena"].page_count, size=extra)
+            rec.touch_pages(extents["kv_arena"].first_page + ps)
+        # 6) workspace: leading region reused every invocation
+        rec.touch_elements("workspace", 0, min(arrays["workspace"].size,
+                                               wdef.prompt_len * 4096))
+        return sorted(set(rec.pages) - before)
+
+    rec = AccessRecorder(image.manifest)
+    for i in range(n_invocations):
+        one_invocation(rec, i)
+    profile = WorkloadProfile(name, n_invocations, rec.working_set())
+
+    # The snapshot is taken AFTER the profiling invocations ran (§3.2): pages
+    # they dirtied hold non-zero content (guest state, init_on_free=1 zeroes
+    # only *freed* pages).  Fill the dirtied arena slots and the reused
+    # workspace region so they classify as hot, exactly as in the paper —
+    # ffmpeg's extra churn pages stay zero (freed+zeroed) though they are in
+    # the WS, reproducing the paper's ffmpeg anomaly.
+    fill = np.random.default_rng((seed, 779))
+    arena = image.read_array("kv_arena").copy()
+    stable2 = np.random.default_rng((seed, 778))
+    dirtied_rows = sorted({int(stable2.integers(0, 14)) for _ in range(2 * n_invocations)})
+    arena[dirtied_rows] = fill.standard_normal((len(dirtied_rows), arena.shape[1])).astype(np.float32)
+    image.write_array("kv_arena", arena)
+    ws_arr = image.read_array("workspace").copy()
+    n_ws = min(ws_arr.size, wdef.prompt_len * 4096)
+    ws_arr[:n_ws] = fill.standard_normal(n_ws).astype(np.float32)
+    image.write_array("workspace", ws_arr)
+
+    # the measured invocation: replay one more (not added to the profile —
+    # its stable accesses are in the WS, its random tail is distribution
+    # shift landing on cold/zero pages)
+    rec2 = AccessRecorder(image.manifest)
+    first_touched = one_invocation(rec2, n_invocations + 1)
+
+    scale = PAPER_INSTANCE_BYTES / image.buf.nbytes
+    return BuiltWorkload(wdef, image, profile,
+                         np.asarray(first_touched, dtype=np.int64), scale)
+
+
+_cache: Dict[str, BuiltWorkload] = {}
+
+
+def get_workload(name: str) -> BuiltWorkload:
+    if name not in _cache:
+        _cache[name] = build_workload(name)
+    return _cache[name]
+
+
+def all_workloads() -> List[str]:
+    return list(WORKLOADS)

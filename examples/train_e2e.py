@@ -1,0 +1,85 @@
+"""End-to-end training driver with Aquifer fault tolerance.
+
+    PYTHONPATH=src python examples/train_e2e.py                      # demo
+    PYTHONPATH=src python examples/train_e2e.py --preset 100m        # ~124M
+    PYTHONPATH=src python examples/train_e2e.py --arch olmoe-1b-7b   # any arch
+    PYTHONPATH=src python examples/train_e2e.py --resume             # restart
+
+The `100m` preset is a GPT-2-small-class dense model (~124M params) for a
+few hundred steps; `demo` is a ~10M model that finishes in about a minute on
+this CPU container.  A mid-run simulated crash + restore is exercised with
+--crash-at N.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig, get_config
+from repro.core import HierarchicalPool, PoolMaster
+from repro.data.pipeline import DataConfig, SyntheticLMData
+from repro.models.model_zoo import build
+from repro.train.loop import LoopConfig, Trainer
+
+PRESETS = {
+    "demo": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=4, d_ff=1024,
+                 vocab=2048, d_head=64, seq=128, batch=8, steps=60),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+                 vocab=50304, d_head=64, seq=512, batch=8, steps=300),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="demo", choices=list(PRESETS))
+    ap.add_argument("--arch", default="qwen2.5-14b",
+                    help="assigned arch whose family the preset reduces")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="simulate a crash after N steps, then auto-restore")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    steps = args.steps or p["steps"]
+    cfg = get_config(args.arch).reduced(
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"], vocab=p["vocab"],
+        d_head=p["d_head"], scan_layers=True)
+    model = build(cfg)
+    n_params = cfg.param_count()
+    print(f"arch={cfg.name} family={cfg.family} params≈{n_params/1e6:.0f}M "
+          f"steps={steps}")
+
+    data = SyntheticLMData(DataConfig(vocab=cfg.vocab, seq_len=p["seq"],
+                                      global_batch=p["batch"]))
+    pool = HierarchicalPool(cxl_capacity=2 << 30, rdma_capacity=4 << 30)
+    master = PoolMaster(pool)
+
+    if args.crash_at:
+        t1 = Trainer(model, data, master=master,
+                     loop_cfg=LoopConfig(steps=args.crash_at,
+                                         ckpt_every=max(1, args.crash_at // 2),
+                                         log_every=10, async_checkpoint=False))
+        t1.run()
+        print(f"--- simulated crash after step {args.crash_at} ---")
+        args.resume = True
+
+    trainer = Trainer(model, data, master=master,
+                      loop_cfg=LoopConfig(steps=steps, ckpt_every=50, log_every=10))
+    t0 = time.perf_counter()
+    trainer.run(resume=args.resume)
+    wall = time.perf_counter() - t0
+    losses = [(m["step"], round(m["loss"], 3)) for m in trainer.metrics_log if "loss" in m]
+    print("loss curve:", losses)
+    if trainer.ckpt_stats:
+        s = trainer.ckpt_stats[-1]
+        print(f"last checkpoint: {s['total_pages']} pages "
+              f"(zero={s['zero']} hot={s['hot']} cold={s['cold']}) "
+              f"publish={s['publish_s']*1e3:.0f}ms (async, off critical path)")
+    print(f"wall={wall:.1f}s  tokens/s={steps*p['seq']*p['batch']/wall:,.0f} (CPU container)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Aquifer-backed checkpointing: TrainState / serving state ⇄ paged snapshots.
+
+This is where the paper becomes a first-class framework feature:
+
+* **save** — flatten the state pytree into named arrays, build a
+  ``StateImage``, zero-detect (optimizer moments are predominantly zero
+  early in training; KV arenas and workspaces are zero at snapshot time),
+  profile hotness, and publish to the two-tier pool through the pool master
+  (ownership protocol, §3.3).
+* **restore** — borrow + clflush + pre-install the hot set (params), then
+  demand-page the cold set (optimizer moments / rare vocab rows) — compute
+  can resume on the hot set before the RDMA tier finishes (§3.4).
+* **elastic restore** — pages are location-independent (offset-array
+  indirection), so the restored arrays can be device_put onto a *different*
+  mesh than the one that saved them.
+
+Hotness defaults for training state: params hot, Adam moments cold.
+Serving-state hotness comes from the offline profiler (core/profiler.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    Manifest,
+    Orchestrator,
+    PoolMaster,
+    StateImage,
+)
+from ..core.profiler import AccessRecorder
+
+
+# --------------------------------------------------------------------------
+# pytree <-> named arrays
+# --------------------------------------------------------------------------
+
+def flatten_state(tree) -> Dict[str, np.ndarray]:
+    flat: Dict[str, np.ndarray] = {}
+
+    def walk(path, leaf):
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+        )
+        flat[name] = np.asarray(leaf)
+
+    jax.tree_util.tree_map_with_path(walk, tree)
+    return flat
+
+
+def unflatten_state(template, arrays: Dict[str, np.ndarray]):
+    names: List[str] = []
+
+    def collect(path, leaf):
+        names.append("/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+        ))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(collect, template)
+    leaves, treedef = jax.tree.flatten(template)
+    new_leaves = []
+    for name, leaf in zip(names, leaves):
+        arr = arrays[name]
+        new_leaves.append(jnp.asarray(arr.reshape(np.shape(leaf))))
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+# --------------------------------------------------------------------------
+# save / restore
+# --------------------------------------------------------------------------
+
+def default_train_hotness(manifest: Manifest) -> np.ndarray:
+    """Params hot; Adam moments (opt/m, opt/v) cold; step counter hot."""
+    rec = AccessRecorder(manifest)
+    for e in manifest.extents:
+        if not ("/m/" in f"/{e.name}/" or "/v/" in f"/{e.name}/"
+                or e.name.startswith(("opt/m", "opt/v", "1/m", "1/v"))):
+            rec.touch_array(e.name)
+    return rec.working_set()
+
+
+def save_checkpoint(
+    master: PoolMaster,
+    name: str,
+    state,
+    step: int,
+    working_set: Optional[Sequence[int]] = None,
+    metadata: Optional[dict] = None,
+) -> Tuple[StateImage, dict]:
+    """Publish `state` as snapshot `name`. Returns (image, stats)."""
+    arrays = flatten_state(state)
+    image = StateImage.build(arrays)
+    if working_set is None:
+        working_set = default_train_hotness(image.manifest)
+    meta = {"step": step, **(metadata or {})}
+    t0 = time.perf_counter()
+    regions = master.publish(name, image, working_set, metadata=meta)
+    stats = {
+        "publish_s": time.perf_counter() - t0,
+        "total_pages": regions.total_pages,
+        "zero": regions.n_zero,
+        "hot": regions.n_hot,
+        "cold": regions.n_cold,
+        "cxl_bytes": regions.cxl_size,
+        "rdma_bytes": regions.rdma_size,
+    }
+    return image, stats
+
+
+def restore_checkpoint(
+    orch: Orchestrator,
+    name: str,
+    template,
+) -> Tuple[Any, dict]:
+    """Borrow + restore `name`; returns (state, stats).
+
+    The hot set (params) is pre-installed from the CXL tier; cold pages
+    (optimizer moments) are demand-paged from the RDMA tier — we record the
+    time-to-hot separately from time-to-full, which is the paper's headline
+    effect (resume before the slow tier finishes).
+    """
+    t0 = time.perf_counter()
+    ri = orch.restore(name)
+    if ri is None:
+        raise FileNotFoundError(f"no published snapshot named {name!r}")
+    t_hot = time.perf_counter() - t0
+
+    # demand-page everything else (async RDMA engine fills; we touch to force)
+    for page in range(ri.instance.image.total_pages):
+        if not ri.instance.present[page]:
+            ri.engine.access(page)
+    t_full = time.perf_counter() - t0
+
+    manifest, meta = ri.engine.reader.machine_state()
+    arrays = {e.name: ri.instance.image.read_array(e.name) for e in manifest.extents}
+    state = unflatten_state(template, arrays)
+    stats = {
+        "time_to_hot_s": t_hot,
+        "time_to_full_s": t_full,
+        "modeled": dict(ri.ledger.seconds),
+        "instance": dict(ri.instance.stats),
+        "meta": meta,
+    }
+    ri.shutdown()
+    return state, stats
+
+
+def reshard(state, mesh, spec_tree):
+    """Elastic restore: place a host-resident state onto a (new) mesh."""
+    from jax.sharding import NamedSharding
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, state, spec_tree)

@@ -1,0 +1,54 @@
+"""Aquifer core: hierarchical CXL+RDMA memory pooling for state snapshots.
+
+The paper's contribution as a composable library:
+
+- :mod:`pagestore`  — paged flat address space over model/server state
+- :mod:`pool`       — two-tier pool, cost models, incoherent host views
+- :mod:`snapshot`   — hotness-based compact snapshot format (§3.2)
+- :mod:`coherence`  — ownership-based coherence protocol (§3.3)
+- :mod:`serving`    — copy-based page serving, async RDMA demand paging (§3.4)
+- :mod:`profiler`   — offline hotness profiling (§3.2)
+- :mod:`master`     — pool master: publish/update/delete, eviction (§3.6)
+- :mod:`orchestrator` — node agent: borrow → flush → pre-install → resume
+- :mod:`dedup`      — content-hash snapshot deduplication (§3.6)
+"""
+from .pagestore import PAGE_SIZE, ArrayExtent, Manifest, StateImage, runs_from_pages
+from .pool import (
+    CXL_COST,
+    RDMA_COST,
+    TIER_CXL,
+    TIER_RDMA,
+    CostModel,
+    HierarchicalPool,
+    HostView,
+    MemoryTier,
+    TimeLedger,
+)
+from .snapshot import (
+    ZERO_SENTINEL,
+    PageClasses,
+    SnapshotReader,
+    SnapshotRegions,
+    build_snapshot,
+    classify_pages,
+    decode_slot,
+    encode_slot,
+    free_snapshot,
+)
+from .coherence import (
+    STATE_FREE,
+    STATE_PUBLISHED,
+    STATE_TOMBSTONE,
+    AtomicU64,
+    Borrow,
+    Catalog,
+    CatalogEntry,
+    LeaseFallback,
+)
+from .serving import AsyncRDMAEngine, BufferPool, Instance, RestoreEngine
+from .profiler import AccessRecorder, WorkloadProfile, profile_invocations
+from .master import PoolMaster
+from .orchestrator import Orchestrator, RestoredInstance
+from .dedup import DedupStore, fnv1a_page, fnv1a_pages
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,91 @@
+"""Snapshot deduplication layer (§3.6 extension).
+
+Serverless snapshots share runtime pages (interpreter, shared libraries); in
+our analogue, snapshots of fine-tuned variants share base-model pages.  The
+offset array can point anywhere in a tier, so dedup integrates at publish
+time: pages are content-hashed (FNV-1a 64-bit — same function as the
+``page_checksum`` Pallas kernel) and identical pages are stored once with a
+reference count.
+
+Restore-path consequence recorded by the cost model: a deduplicated snapshot
+can no longer clflush one contiguous CXL extent; the orchestrator must walk
+the offset array and flush per page (§3.6).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .pagestore import PAGE_SIZE
+from .pool import MemoryTier
+
+FNV_OFFSET = np.uint64(0xCBF29CE484222325)
+FNV_PRIME = np.uint64(0x100000001B3)
+
+
+def fnv1a_page(page: np.ndarray) -> int:
+    """FNV-1a over a 4 KiB page, processed as u64 lanes (vector-friendly —
+    this exact formulation is what kernels/page_checksum implements)."""
+    lanes = page.view(np.uint64)
+    h = FNV_OFFSET
+    with np.errstate(over="ignore"):
+        for lane in lanes:
+            h = (h ^ lane) * FNV_PRIME
+    return int(h)
+
+
+def fnv1a_pages(pages_matrix: np.ndarray) -> np.ndarray:
+    """Vectorized FNV-1a per page row. pages_matrix: uint8[N, PAGE_SIZE]."""
+    lanes = pages_matrix.view(np.uint64).reshape(pages_matrix.shape[0], -1)
+    h = np.full(pages_matrix.shape[0], FNV_OFFSET, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        for j in range(lanes.shape[1]):
+            h = (h ^ lanes[:, j]) * FNV_PRIME
+    return h
+
+
+class DedupStore:
+    """Content-addressed page store inside one tier, with refcounts."""
+
+    def __init__(self, tier: MemoryTier):
+        self.tier = tier
+        self._by_hash: Dict[int, Tuple[int, int]] = {}  # hash -> (offset, refcount)
+        self._lock = threading.Lock()
+        self.stats = {"unique": 0, "dedup_hits": 0}
+
+    def put(self, page: np.ndarray) -> int:
+        """Store (or reuse) a page; returns its tier byte offset."""
+        h = fnv1a_page(page)
+        with self._lock:
+            hit = self._by_hash.get(h)
+            if hit is not None:
+                off, rc = hit
+                # hash collision guard: verify bytes
+                if np.array_equal(self.tier.buf[off : off + PAGE_SIZE], page.view(np.uint8).reshape(-1)):
+                    self._by_hash[h] = (off, rc + 1)
+                    self.stats["dedup_hits"] += 1
+                    return off
+            off = self.tier.alloc(PAGE_SIZE)
+            self.tier.write(off, page)
+            self._by_hash[h] = (off, 1)
+            self.stats["unique"] += 1
+            return off
+
+    def drop(self, page: np.ndarray) -> None:
+        h = fnv1a_page(page)
+        with self._lock:
+            hit = self._by_hash.get(h)
+            if hit is None:
+                return
+            off, rc = hit
+            if rc <= 1:
+                self.tier.free(off, PAGE_SIZE)
+                del self._by_hash[h]
+            else:
+                self._by_hash[h] = (off, rc - 1)
+
+    def dedup_ratio(self) -> float:
+        total = self.stats["unique"] + self.stats["dedup_hits"]
+        return self.stats["dedup_hits"] / total if total else 0.0

@@ -1,0 +1,135 @@
+"""Pool master: sole owner of pool-side snapshot storage (§3.1, §3.3, §3.6).
+
+Responsibilities: publish / update / delete snapshots under the ownership
+protocol, reclaim tombstoned regions once their refcount drains, and run the
+borrow-counter based CXL eviction policy (§3.6).  Content-hash deduplication
+(§3.6) is an optional layer applied at publish time.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .coherence import STATE_TOMBSTONE, Catalog, CatalogEntry
+from .pagestore import StateImage
+from .pool import HierarchicalPool
+from .snapshot import SnapshotRegions, build_snapshot, free_snapshot
+
+
+class PoolMaster:
+    def __init__(self, pool: HierarchicalPool, catalog: Optional[Catalog] = None):
+        self.pool = pool
+        self.catalog = catalog or Catalog()
+        self._versions: Dict[str, int] = {}
+        self._pending_reclaim: List[CatalogEntry] = []
+        self._pending_regions: Dict[int, SnapshotRegions] = {}
+        self._lock = threading.Lock()
+
+    # -- snapshot lifecycle (§3.3 Owner protocol) -------------------------------
+    def publish(
+        self,
+        name: str,
+        image: StateImage,
+        working_set: Sequence[int],
+        metadata: Optional[dict] = None,
+        zero_bitmap: Optional[np.ndarray] = None,
+        gather_fn=None,
+        compress_cold: bool = False,
+    ) -> SnapshotRegions:
+        with self._lock:
+            version = self._versions.get(name, -1) + 1
+            self._versions[name] = version
+        existing = self.catalog.find(name)
+        if existing is None:
+            regions = build_snapshot(
+                self.pool, image, working_set, name,
+                version=version, metadata=metadata,
+                zero_bitmap=zero_bitmap, gather_fn=gather_fn,
+                compress_cold=compress_cold,
+            )
+            self.catalog.publish_new(name, regions, version)
+            return regions
+        # Update (§3.3): tombstone → wait for borrows to drain → rewrite the
+        # data regions → republish.  Freeing before rebuilding lets first-fit
+        # reuse the same pool addresses (the paper writes in place), which is
+        # exactly why borrowers must clflushopt after a successful borrow.
+        old = existing.regions
+        self.catalog.tombstone(name)
+        if not self.catalog.wait_unborrowed(existing):
+            raise TimeoutError(f"borrows of {name} did not drain")
+        if old is not None:
+            free_snapshot(self.pool, old)
+        regions = build_snapshot(
+            self.pool, image, working_set, name,
+            version=version, metadata=metadata,
+            zero_bitmap=zero_bitmap, gather_fn=gather_fn,
+            compress_cold=compress_cold,
+        )
+        self.catalog.republish(existing, regions, version)
+        return regions
+
+    def delete(self, name: str) -> bool:
+        entry = self.catalog.tombstone(name)
+        if entry is None:
+            return False
+        with self._lock:
+            self._pending_reclaim.append(entry)
+            if entry.regions is not None:
+                self._pending_regions[entry.index] = entry.regions
+        self.gc()
+        return True
+
+    def gc(self) -> int:
+        """Reclaim tombstoned entries whose refcount has drained (§3.3)."""
+        freed = 0
+        with self._lock:
+            remaining: List[CatalogEntry] = []
+            for entry in self._pending_reclaim:
+                if entry.refcount.load() == 0 and entry.state.load() == STATE_TOMBSTONE:
+                    regions = self._pending_regions.pop(entry.index, None)
+                    if regions is not None:
+                        free_snapshot(self.pool, regions)
+                    self.catalog.reclaim(entry)
+                    freed += 1
+                else:
+                    remaining.append(entry)
+            self._pending_reclaim = remaining
+        return freed
+
+    # -- §3.6 CXL pool eviction ---------------------------------------------------
+    def collect_borrow_counters(self) -> Dict[str, int]:
+        """Periodic collection; resets counters to build the ranked candidate
+        list (temporal locality = recency of this window, frequency = count)."""
+        out: Dict[str, int] = {}
+        for entry in self.catalog.entries:
+            if entry.regions is not None and entry.name:
+                out[entry.name] = entry.borrow_counter.exchange(0)
+        return out
+
+    def evict_for(self, needed_bytes: int) -> List[str]:
+        """Delete lowest-ranked snapshots until `needed_bytes` of CXL frees."""
+        counters = self.collect_borrow_counters()
+        ranked = sorted(counters.items(), key=lambda kv: kv[1])
+        evicted: List[str] = []
+        freed = 0
+        for name, _count in ranked:
+            if freed >= needed_bytes:
+                break
+            entry = self.catalog.find(name)
+            if entry is None or entry.regions is None:
+                continue
+            freed += entry.regions.cxl_size
+            self.delete(name)
+            evicted.append(name)
+        return evicted
+
+    # -- introspection ---------------------------------------------------------
+    def capacity_report(self) -> Dict[str, int]:
+        return {
+            "cxl_in_use": self.pool.cxl.bytes_in_use,
+            "cxl_capacity": self.pool.cxl.capacity,
+            "rdma_in_use": self.pool.rdma.bytes_in_use,
+            "rdma_capacity": self.pool.rdma.capacity,
+        }

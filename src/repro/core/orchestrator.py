@@ -1,0 +1,82 @@
+"""Node-side orchestrator (§3.1): MicroVM lifecycle on one server host.
+
+Each orchestrator owns a host-private (incoherent) view of the CXL tier and
+restores instances by: borrow → clflushopt the snapshot's CXL sections →
+load machine state → pre-install hot set → resume, with cold pages
+demand-paged asynchronously from RDMA.  Falls back to cold start when the
+borrow CAS fails (§3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional
+
+from .coherence import Borrow, Catalog
+from .pagestore import StateImage
+from .pool import HierarchicalPool, HostView, TimeLedger
+from .serving import AsyncRDMAEngine, BufferPool, Instance, RestoreEngine
+from .snapshot import SnapshotReader
+
+
+@dataclasses.dataclass
+class RestoredInstance:
+    name: str
+    instance: Instance
+    engine: RestoreEngine
+    borrow: Borrow
+    ledger: TimeLedger
+    cold_start: bool = False
+
+    def shutdown(self) -> None:
+        self.engine.stop()
+        self.borrow.release()
+
+
+class Orchestrator:
+    """One per server node; connected to the pod's shared pool + catalog."""
+
+    def __init__(
+        self,
+        host: str,
+        pool: HierarchicalPool,
+        catalog: Catalog,
+        use_async_rdma: bool = True,
+        buffer_pool_pages: int = 256,
+    ):
+        self.host = host
+        self.pool = pool
+        self.catalog = catalog
+        self.use_async_rdma = use_async_rdma
+        self.buffer_pool_pages = buffer_pool_pages
+        self.stats = {"warm_restores": 0, "cold_starts": 0}
+        self._lock = threading.Lock()
+
+    def restore(self, name: str, pre_install: bool = True) -> Optional[RestoredInstance]:
+        """Warm-restore an instance from the pool; None ⇒ caller cold-boots."""
+        borrow = self.catalog.borrow(name)
+        if borrow is None or borrow.regions is None:
+            with self._lock:
+                self.stats["cold_starts"] += 1
+            return None
+
+        ledger = TimeLedger()
+        view = self.pool.host_view(self.host, ledger)
+        reader = SnapshotReader(borrow.regions, view, self.pool.rdma)
+        # §3.3: after a successful borrow, invalidate potentially-stale lines
+        reader.invalidate_cxl()
+        manifest, _meta = reader.machine_state()
+
+        instance = Instance(StateImage.empty_like(manifest), ledger)
+        rdma_engine = (
+            AsyncRDMAEngine(self.pool.rdma, ledger) if self.use_async_rdma else None
+        )
+        engine = RestoreEngine(
+            reader, instance, rdma_engine, BufferPool(self.buffer_pool_pages)
+        )
+        if pre_install:
+            engine.pre_install_hot()
+        engine.start_completion_handler()
+        with self._lock:
+            self.stats["warm_restores"] += 1
+        return RestoredInstance(name, instance, engine, borrow, ledger)

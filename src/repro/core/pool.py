@@ -1,0 +1,210 @@
+"""Hierarchical memory pool: pod-local CXL tier + cluster-wide RDMA tier.
+
+Emulation strategy (this container has no CXL MHD or RNIC):
+
+* **Data movement is real** — tiers are backed by numpy buffers and every
+  read/write actually copies bytes, so restore correctness is testable
+  end-to-end (restored state must be bit-identical to the published one).
+* **Time is modeled** — each tier carries a calibrated ``CostModel`` and the
+  pool accumulates modeled seconds per operation class.  Benchmarks report
+  modeled time (CPU wall-clock on this box says nothing about CXL/RDMA).
+* **Non-coherence is emulated** — the CXL tier hands out per-host
+  ``HostView``s with a private "CPU cache": reads are served from cached
+  lines when present, so a host that skips the protocol's ``invalidate()``
+  (clflushopt analogue) observably reads stale data.  Tests rely on this.
+
+Cost-model constants (see DESIGN.md §8 for sources):
+  CXL   ~400 ns load-to-use, ~26 GB/s per-host link, uffd.copy ~1.1 µs/page,
+        mmap install 2.6x uffd.copy (paper §2.3.4), clflushopt ~50 ns/line.
+  RDMA  ~3 µs one-sided read latency, 100 Gb/s link, many ops in flight.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .pagestore import PAGE_SIZE
+
+CACHELINE = 64
+
+# Backend tags (encoded in the offset array's top bits, see snapshot.py).
+TIER_CXL = 0
+TIER_RDMA = 1
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Per-tier latency/bandwidth model; times in seconds, sizes in bytes."""
+
+    op_latency_s: float          # fixed per-operation cost (load-to-use / RDMA op)
+    bandwidth_Bps: float         # sustained sequential bandwidth
+    max_inflight: int = 1        # concurrent ops the fabric sustains (RDMA QP depth)
+
+    def xfer_time(self, nbytes: int, ops: int = 1) -> float:
+        """Modeled time for `ops` transfers totalling `nbytes`, serialized."""
+        return ops * self.op_latency_s + nbytes / self.bandwidth_Bps
+
+    def xfer_time_pipelined(self, nbytes: int, ops: int) -> float:
+        """Latency hidden by max_inflight concurrent ops (one-sided RDMA)."""
+        serial_ops = -(-ops // max(1, self.max_inflight))
+        return serial_ops * self.op_latency_s + nbytes / self.bandwidth_Bps
+
+
+# Calibrated defaults (DESIGN.md §8).
+CXL_COST = CostModel(op_latency_s=400e-9, bandwidth_Bps=50e9, max_inflight=1)
+RDMA_COST = CostModel(op_latency_s=3e-6, bandwidth_Bps=100e9 / 8, max_inflight=64)
+UFFD_COPY_PER_PAGE_S = 1.1e-6          # uffd.copy() per 4 KiB page
+UFFD_ZEROPAGE_PER_PAGE_S = 0.55e-6     # uffd.zeropage(): no source read
+MMAP_PER_RANGE_S = UFFD_COPY_PER_PAGE_S * 2.6  # paper: mmap 2.6x slower per page
+CLFLUSH_PER_LINE_S = 2e-9   # clflushopt of *uncached* lines: ~issue cost
+
+
+class AllocError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TimeLedger:
+    """Accumulated modeled time, by operation class."""
+
+    seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, key: str, t: float) -> None:
+        self.seconds[key] = self.seconds.get(key, 0.0) + t
+
+    def total(self) -> float:
+        return sum(self.seconds.values())
+
+    def merge(self, other: "TimeLedger") -> None:
+        for k, v in other.seconds.items():
+            self.add(k, v)
+
+
+class MemoryTier:
+    """One tier of the pool: a byte arena + first-fit allocator + cost model."""
+
+    def __init__(self, name: str, capacity: int, cost: CostModel):
+        self.name = name
+        self.capacity = capacity
+        self.cost = cost
+        self.buf = np.zeros(capacity, dtype=np.uint8)
+        self._lock = threading.Lock()
+        self._free: List[Tuple[int, int]] = [(0, capacity)]  # (offset, size)
+        self.bytes_in_use = 0
+
+    # -- allocator --------------------------------------------------------
+    def alloc(self, nbytes: int) -> int:
+        nbytes = max(1, -(-nbytes // PAGE_SIZE) * PAGE_SIZE)
+        with self._lock:
+            for i, (off, size) in enumerate(self._free):
+                if size >= nbytes:
+                    if size == nbytes:
+                        self._free.pop(i)
+                    else:
+                        self._free[i] = (off + nbytes, size - nbytes)
+                    self.bytes_in_use += nbytes
+                    return off
+        raise AllocError(f"tier {self.name}: cannot alloc {nbytes} B "
+                         f"({self.bytes_in_use}/{self.capacity} in use)")
+
+    def free(self, offset: int, nbytes: int) -> None:
+        nbytes = max(1, -(-nbytes // PAGE_SIZE) * PAGE_SIZE)
+        with self._lock:
+            self._free.append((offset, nbytes))
+            self._free.sort()
+            merged: List[Tuple[int, int]] = []
+            for off, size in self._free:
+                if merged and merged[-1][0] + merged[-1][1] == off:
+                    merged[-1] = (merged[-1][0], merged[-1][1] + size)
+                else:
+                    merged.append((off, size))
+            self._free = merged
+            self.bytes_in_use -= nbytes
+
+    # -- raw access (owner-side; bypasses host caches) ---------------------
+    def write(self, offset: int, data: np.ndarray) -> None:
+        raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+        self.buf[offset : offset + raw.nbytes] = raw
+
+    def read(self, offset: int, nbytes: int) -> np.ndarray:
+        return self.buf[offset : offset + nbytes].copy()
+
+
+class HostView:
+    """A host's view of the CXL tier, with an *incoherent* private cache.
+
+    Reads populate the cache; later reads hit it even if the underlying pool
+    bytes changed — exactly the CXL 2.0 MHD hazard (§2.3.2).  ``invalidate``
+    is the clflushopt analogue and also charges the modeled flush cost.
+    """
+
+    def __init__(self, host: str, tier: MemoryTier, ledger: Optional[TimeLedger] = None):
+        self.host = host
+        self.tier = tier
+        self.ledger = ledger or TimeLedger()
+        self._cache: Dict[int, np.ndarray] = {}  # line index -> 64B snapshot
+        self.stats = {"cached_reads": 0, "pool_reads": 0, "flushed_lines": 0}
+
+    def read(self, offset: int, nbytes: int) -> np.ndarray:
+        out = np.empty(nbytes, dtype=np.uint8)
+        first = offset // CACHELINE
+        last = (offset + nbytes - 1) // CACHELINE
+        pos = 0
+        for line in range(first, last + 1):
+            lo = max(offset, line * CACHELINE)
+            hi = min(offset + nbytes, (line + 1) * CACHELINE)
+            cached = self._cache.get(line)
+            if cached is None:
+                cached = self.tier.buf[line * CACHELINE : (line + 1) * CACHELINE].copy()
+                self._cache[line] = cached
+                self.stats["pool_reads"] += 1
+            else:
+                self.stats["cached_reads"] += 1
+            out[pos : pos + hi - lo] = cached[lo - line * CACHELINE : hi - line * CACHELINE]
+            pos += hi - lo
+        self.ledger.add("cxl_read", self.tier.cost.xfer_time(nbytes))
+        return out
+
+    def read_page(self, offset: int) -> np.ndarray:
+        return self.read(offset, PAGE_SIZE)
+
+    def invalidate(self, offset: int, nbytes: int) -> None:
+        """clflushopt over [offset, offset+nbytes): drop cached lines."""
+        first = offset // CACHELINE
+        last = (offset + nbytes - 1) // CACHELINE
+        n = 0
+        for line in range(first, last + 1):
+            if self._cache.pop(line, None) is not None:
+                n += 1
+        self.stats["flushed_lines"] += last - first + 1
+        self.ledger.add("clflush", (last - first + 1) * CLFLUSH_PER_LINE_S)
+
+    def drop_all(self) -> None:
+        self._cache.clear()
+
+
+class HierarchicalPool:
+    """The two-tier pool a pod sees: CXL (fast/near) + RDMA (big/far)."""
+
+    def __init__(
+        self,
+        cxl_capacity: int = 256 << 20,
+        rdma_capacity: int = 1 << 30,
+        cxl_cost: CostModel = CXL_COST,
+        rdma_cost: CostModel = RDMA_COST,
+    ):
+        self.cxl = MemoryTier("cxl", cxl_capacity, cxl_cost)
+        self.rdma = MemoryTier("rdma", rdma_capacity, rdma_cost)
+
+    def tier(self, tag: int) -> MemoryTier:
+        if tag == TIER_CXL:
+            return self.cxl
+        if tag == TIER_RDMA:
+            return self.rdma
+        raise ValueError(f"unknown tier tag {tag}")
+
+    def host_view(self, host: str, ledger: Optional[TimeLedger] = None) -> HostView:
+        return HostView(host, self.cxl, ledger)

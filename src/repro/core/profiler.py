@@ -1,0 +1,89 @@
+"""Offline hotness profiling (§3.2).
+
+The orchestrator replays sampled invocations against a freshly restored
+instance and records every page it serves into a *working-set array*.  Since
+read-only pages are negligible (0.05% of pages, §2.3.3), we do not separate
+reads from writes — only touched/untouched matters.
+
+`AccessRecorder` is the framework-side hook: model code (embedding gathers,
+MoE routing, KV writes, layer weight reads) reports logical accesses and the
+recorder resolves them to page indices through the image manifest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+import numpy as np
+
+from .pagestore import Manifest, runs_from_pages
+
+
+class AccessRecorder:
+    def __init__(self, manifest: Manifest):
+        self.manifest = manifest
+        self._extents = manifest.by_name()
+        self.pages: Set[int] = set()
+
+    # -- logical access APIs ---------------------------------------------------
+    def touch_array(self, name: str) -> None:
+        self.pages.update(self._extents[name].pages())
+
+    def touch_rows(self, name: str, rows: Iterable[int]) -> None:
+        """Leading-axis rows (embedding rows, expert slices, cache slots)."""
+        e = self._extents[name]
+        row_elems = int(np.prod(e.shape[1:])) if len(e.shape) > 1 else 1
+        for r in rows:
+            self.pages.update(e.row_pages(int(r), row_elems))
+
+    def touch_elements(self, name: str, start: int, stop: int) -> None:
+        e = self._extents[name]
+        self.pages.update(e.element_pages(start, stop))
+
+    def touch_pages(self, pages: Iterable[int]) -> None:
+        self.pages.update(int(p) for p in pages)
+
+    # -- results ---------------------------------------------------------------
+    def working_set(self) -> np.ndarray:
+        return np.asarray(sorted(self.pages), dtype=np.int64)
+
+    def run_lengths(self) -> List[int]:
+        return [n for _, n in runs_from_pages(sorted(self.pages))]
+
+
+@dataclasses.dataclass
+class WorkloadProfile:
+    """Result of replaying N invocations: the recorded working set + stats."""
+
+    name: str
+    invocations: int
+    working_set: np.ndarray
+
+    def fragment_stats(self) -> Dict[str, float]:
+        runs = runs_from_pages(self.working_set.tolist())
+        lens = np.asarray([n for _, n in runs], dtype=np.float64)
+        if lens.size == 0:
+            return {"n_runs": 0, "mean_run": 0.0, "p90_run": 0.0}
+        return {
+            "n_runs": int(lens.size),
+            "mean_run": float(lens.mean()),
+            "p90_run": float(np.percentile(lens, 90)),
+            "frac_runs_lt4": float((lens < 4).mean()),
+        }
+
+
+def profile_invocations(
+    manifest: Manifest,
+    invocation_fn,
+    n_invocations: int = 16,
+    name: str = "workload",
+) -> WorkloadProfile:
+    """Replay `n_invocations` calls of ``invocation_fn(recorder, i)`` (§3.2).
+
+    16 is the paper's default: 80% of production invocation streaks are ≤16
+    per keep-alive window (Fig. 2).
+    """
+    rec = AccessRecorder(manifest)
+    for i in range(n_invocations):
+        invocation_fn(rec, i)
+    return WorkloadProfile(name, n_invocations, rec.working_set())

@@ -1,0 +1,281 @@
+"""Copy-based page serving (§3.4, §4).
+
+Restore = (1) pre-install the hot set from CXL *before* resume, then
+(2) demand-page cold pages asynchronously from RDMA while the instance runs.
+
+All installs go through the ``uffd.copy()`` analogue (`Instance.uffd_copy`),
+which writes a *private copy* into the instance's address space — the
+pool-resident snapshot is never modified, preserving immutability across
+concurrent restores without file-backed CoW.  Zero-page faults take the
+``uffd.zeropage()`` fast path (§4).
+
+Async RDMA fault handling mirrors the paper: the fault handler grabs a free
+buffer page, posts a one-sided read, and returns immediately; a completion
+thread drains the CQ (hybrid busy-poll then event wait) and installs fetched
+pages.  The fault handler is never blocked on the network.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .pagestore import PAGE_SIZE, StateImage, runs_from_pages
+from .pool import (
+    MMAP_PER_RANGE_S,
+    UFFD_COPY_PER_PAGE_S,
+    UFFD_ZEROPAGE_PER_PAGE_S,
+    MemoryTier,
+    TimeLedger,
+)
+from .snapshot import SnapshotReader
+
+
+class Instance:
+    """A restoring/running instance's guest address space + present bitmap."""
+
+    def __init__(self, image: StateImage, ledger: Optional[TimeLedger] = None):
+        self.image = image
+        self.present = np.zeros(image.total_pages, dtype=bool)
+        self.ledger = ledger or TimeLedger()
+        self.stats = {
+            "pre_installed": 0,
+            "fault_zero": 0,
+            "fault_cxl": 0,
+            "fault_rdma": 0,
+            "uffd_copies": 0,
+            "uffd_zeropages": 0,
+        }
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+
+    # -- uffd analogues ------------------------------------------------------
+    def uffd_copy(self, page: int, src: np.ndarray) -> None:
+        with self._cv:
+            if self.present[page]:
+                return
+            self.image.write_page(page, src)
+            self.present[page] = True
+            self.stats["uffd_copies"] += 1
+            self.ledger.add("uffd_copy", UFFD_COPY_PER_PAGE_S)
+            self._cv.notify_all()
+
+    def uffd_zeropage(self, page: int) -> None:
+        with self._cv:
+            if self.present[page]:
+                return
+            # image buffers start zeroed; mark present only
+            self.present[page] = True
+            self.stats["uffd_zeropages"] += 1
+            self.ledger.add("uffd_zeropage", UFFD_ZEROPAGE_PER_PAGE_S)
+            self._cv.notify_all()
+
+    def wait_present(self, page: int, timeout_s: float = 30.0) -> bool:
+        with self._cv:
+            return self._cv.wait_for(lambda: self.present[page], timeout=timeout_s)
+
+    def all_present(self) -> bool:
+        return bool(self.present.all())
+
+
+class BufferPool:
+    """Local pool of free page buffers for in-flight RDMA reads (§3.4)."""
+
+    def __init__(self, n_pages: int = 256):
+        self._q: "queue.Queue[np.ndarray]" = queue.Queue()
+        for _ in range(n_pages):
+            self._q.put(np.empty(PAGE_SIZE, dtype=np.uint8))
+
+    def acquire(self) -> np.ndarray:
+        return self._q.get()
+
+    def release(self, buf: np.ndarray) -> None:
+        self._q.put(buf)
+
+
+class AsyncRDMAEngine:
+    """Emulated one-sided RDMA read engine with a completion queue.
+
+    A worker thread performs the actual byte copies (so data paths are real);
+    modeled time is charged per-op on the ledger.  The completion handler
+    busy-polls up to ``poll_budget`` iterations after each completion before
+    falling back to blocking on the CQ (the paper's hybrid strategy, §4).
+    """
+
+    def __init__(self, tier: MemoryTier, ledger: TimeLedger, poll_budget: int = 1024):
+        self.tier = tier
+        self.ledger = ledger
+        self.poll_budget = poll_budget
+        self._sq: "queue.Queue" = queue.Queue()
+        self._cq: "queue.Queue" = queue.Queue()
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self.stats = {"reads": 0, "busy_polls": 0, "event_waits": 0}
+
+    def submit_read(self, pool_off: int, buf: np.ndarray, token) -> None:
+        self._sq.put((pool_off, buf, token))
+
+    def poll_completion(self, block: bool, timeout_s: float = 0.05):
+        """-> (buf, token) or None. Emulates CQ poll / completion channel."""
+        try:
+            if block:
+                self.stats["event_waits"] += 1
+                return self._cq.get(timeout=timeout_s)
+            return self._cq.get_nowait()
+        except queue.Empty:
+            return None
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                pool_off, buf, token = self._sq.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            nbytes = token[1] if isinstance(token, tuple) else PAGE_SIZE
+            buf[:nbytes] = self.tier.buf[pool_off : pool_off + nbytes]
+            self.stats["reads"] += 1
+            self.ledger.add("rdma_read", self.tier.cost.op_latency_s + nbytes / self.tier.cost.bandwidth_Bps)
+            self._cq.put((buf, token))
+
+    def close(self) -> None:
+        self._stop.set()
+        self._worker.join(timeout=1.0)
+
+
+class RestoreEngine:
+    """Per-instance page server: hot pre-install + async cold demand-paging."""
+
+    def __init__(
+        self,
+        reader: SnapshotReader,
+        instance: Instance,
+        rdma_engine: Optional[AsyncRDMAEngine] = None,
+        buffer_pool: Optional[BufferPool] = None,
+    ):
+        self.reader = reader
+        self.instance = instance
+        self.ledger = instance.ledger
+        self.rdma_engine = rdma_engine
+        self.buffers = buffer_pool or BufferPool()
+        self._inflight: Dict[int, bool] = {}
+        self._inflight_lock = threading.Lock()
+        self._completion_thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- phase 1: hot-set pre-installation (§3.4) ------------------------------
+    def pre_install_hot(self) -> int:
+        """uffd.copy every hot page from CXL before resume. Serialized (§5.2)."""
+        hot = self.reader.hot_page_indices()
+        for page in hot:
+            kind, off = self.reader.lookup(int(page))
+            assert kind == "cxl"
+            src = self.reader.view.read(off, PAGE_SIZE)
+            self.instance.uffd_copy(int(page), src)
+            self.instance.stats["pre_installed"] += 1
+        return int(hot.size)
+
+    # -- phase 2: demand faults -------------------------------------------------
+    def start_completion_handler(self) -> None:
+        if self.rdma_engine is None:
+            return
+        self._completion_thread = threading.Thread(target=self._completion_loop, daemon=True)
+        self._completion_thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._completion_thread is not None:
+            self._completion_thread.join(timeout=1.0)
+
+    def handle_fault(self, page: int) -> None:
+        """userfaultfd fault for `page`; never blocks on RDMA (§3.4)."""
+        if self.instance.present[page]:
+            return
+        kind, off = self.reader.lookup(page)
+        if kind == "zero":
+            self.instance.stats["fault_zero"] += 1
+            self.instance.uffd_zeropage(page)
+            return
+        if kind == "cxl":
+            self.instance.stats["fault_cxl"] += 1
+            src = self.reader.view.read(off, PAGE_SIZE)
+            self.instance.uffd_copy(page, src)
+            return
+        # cold page → async RDMA read (optionally zstd per-page)
+        self.instance.stats["fault_rdma"] += 1
+        if kind == "rdma_z":
+            pool_off, nbytes, raw = self.reader.cold_extent(off)
+        else:
+            pool_off, nbytes, raw = off, PAGE_SIZE, True
+        if self.rdma_engine is None:
+            payload = self.reader.rdma.read(pool_off, nbytes)
+            self.ledger.add(
+                "rdma_read",
+                self.reader.rdma.cost.op_latency_s + nbytes / self.reader.rdma.cost.bandwidth_Bps,
+            )
+            self.instance.uffd_copy(page, self.reader.decompress_page(payload, raw)
+                                    if kind == "rdma_z" else payload)
+            return
+        with self._inflight_lock:
+            if self._inflight.get(page):
+                return
+            self._inflight[page] = True
+        buf = self.buffers.acquire()
+        self.rdma_engine.submit_read(pool_off, buf, (page, nbytes, raw, kind))
+
+    def access(self, page: int, timeout_s: float = 30.0) -> None:
+        """Guest touch: fault if needed and wait for install (test/replay API)."""
+        if self.instance.present[page]:
+            return
+        self.handle_fault(page)
+        if not self.instance.wait_present(page, timeout_s):
+            raise TimeoutError(f"page {page} not installed within {timeout_s}s")
+
+    def _completion_loop(self) -> None:
+        eng = self.rdma_engine
+        assert eng is not None
+        while not self._stop.is_set():
+            item = eng.poll_completion(block=True)
+            if item is None:
+                continue
+            while item is not None:
+                buf, token = item
+                if isinstance(token, tuple):
+                    page, nbytes, raw, kind = token
+                    data = (self.reader.decompress_page(buf[:nbytes], raw)
+                            if kind == "rdma_z" else buf[:PAGE_SIZE])
+                else:
+                    page, data = token, buf
+                self.instance.uffd_copy(int(page), data)
+                self.buffers.release(buf)
+                with self._inflight_lock:
+                    self._inflight.pop(int(page), None)
+                # hybrid poll: batch further completions without sleeping
+                polled = None
+                for _ in range(eng.poll_budget):
+                    polled = eng.poll_completion(block=False)
+                    if polled is not None:
+                        eng.stats["busy_polls"] += 1
+                        break
+                item = polled
+
+    # -- bulk restore (used by tests / eager baselines) --------------------------
+    def install_all_sync(self) -> None:
+        for page in range(self.instance.image.total_pages):
+            if not self.instance.present[page]:
+                kind, off = self.reader.lookup(page)
+                if kind == "zero":
+                    self.instance.uffd_zeropage(page)
+                elif kind == "cxl":
+                    self.instance.uffd_copy(page, self.reader.view.read(off, PAGE_SIZE))
+                else:
+                    self.instance.uffd_copy(page, self.reader.read_page(page))
+
+
+def mmap_install_cost(pages: Sequence[int]) -> float:
+    """Modeled cost of installing `pages` via per-range mmap (the rejected
+    alternative, §2.3.4): one mmap per contiguous run, 2.6x uffd.copy per page."""
+    runs = runs_from_pages(pages)
+    return sum(n * MMAP_PER_RANGE_S for _, n in runs) + len(runs) * 0.0

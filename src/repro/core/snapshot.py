@@ -1,0 +1,362 @@
+"""Hotness-based snapshot format (§3.2).
+
+A snapshot of a paged ``StateImage`` is stored as:
+
+* **offset array** — one ``uint64`` slot per guest page.
+    - sentinel ``0xFFFF_FFFF_FFFF_FFFF`` → zero page (not stored at all);
+    - top 2 bits → memory-backend tag (``TIER_CXL`` / ``TIER_RDMA``);
+    - low 62 bits → byte offset of the page *within that tier's data region*.
+* **hot data region** (CXL tier) — compacted content of hot pages.
+* **cold data region** (RDMA tier) — compacted content of cold pages.
+* **machine state** (CXL tier) — serialized manifest + metadata (the vCPU /
+  devices analogue), needed to resume without touching the RDMA tier.
+
+The offset array and machine state live in CXL next to the hot data, so the
+restore index is reachable via load/store without RDMA round trips (§3.2).
+
+CXL-region layout (all sections page-aligned):
+    [ machine_state | offset_array | hot page data ]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+try:
+    import zstandard as _zstd
+except Exception:  # pragma: no cover
+    _zstd = None
+
+from .pagestore import PAGE_SIZE, Manifest, StateImage, num_pages
+from .pool import TIER_CXL, TIER_RDMA, HierarchicalPool, HostView, MemoryTier
+
+ZERO_SENTINEL = np.uint64(0xFFFF_FFFF_FFFF_FFFF)
+TIER_SHIFT = np.uint64(62)
+OFFSET_MASK = np.uint64((1 << 62) - 1)
+
+
+def encode_slot(tier: int, offset: int) -> np.uint64:
+    return (np.uint64(tier) << TIER_SHIFT) | np.uint64(offset)
+
+
+def decode_slot(slot: np.uint64) -> Tuple[int, int]:
+    return int(slot >> TIER_SHIFT), int(slot & OFFSET_MASK)
+
+
+def _align_pages(nbytes: int) -> int:
+    return num_pages(nbytes) * PAGE_SIZE
+
+
+# --------------------------------------------------------------------------
+# Page classification (§2.3.3 semantics)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PageClasses:
+    zero_bitmap: np.ndarray       # bool[total_pages]
+    hot_pages: np.ndarray         # sorted int64 page indices (non-zero ∩ working set)
+    cold_pages: np.ndarray        # sorted int64 page indices (non-zero ∖ working set)
+
+    @property
+    def n_zero(self) -> int:
+        return int(self.zero_bitmap.sum())
+
+    def summary(self) -> Dict[str, int]:
+        return {
+            "total": int(self.zero_bitmap.size),
+            "zero": self.n_zero,
+            "hot": int(self.hot_pages.size),
+            "cold": int(self.cold_pages.size),
+        }
+
+
+def classify_pages(
+    image: StateImage,
+    working_set: Sequence[int],
+    zero_bitmap: Optional[np.ndarray] = None,
+) -> PageClasses:
+    """Partition the image's pages into zero / hot / cold (§3.2).
+
+    hot  = recorded working set, minus pages whose content is zero
+    cold = non-zero pages not in the working set
+    """
+    if zero_bitmap is None:
+        zero_bitmap = image.zero_page_bitmap()
+    ws = np.zeros(image.total_pages, dtype=bool)
+    if len(working_set):
+        ws[np.asarray(sorted(set(working_set)), dtype=np.int64)] = True
+    nonzero = ~zero_bitmap
+    hot = np.nonzero(nonzero & ws)[0].astype(np.int64)
+    cold = np.nonzero(nonzero & ~ws)[0].astype(np.int64)
+    return PageClasses(zero_bitmap, hot, cold)
+
+
+# --------------------------------------------------------------------------
+# Stored snapshot
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SnapshotRegions:
+    """Where one snapshot's sections live inside the pool tiers."""
+
+    name: str
+    version: int
+    # CXL region
+    cxl_off: int
+    cxl_size: int
+    ms_size: int                  # machine-state section bytes (aligned)
+    oa_size: int                  # offset-array section bytes (aligned)
+    hot_bytes: int                # hot data payload bytes
+    # RDMA region
+    rdma_off: int
+    rdma_size: int
+    cold_bytes: int
+    total_pages: int
+    n_hot: int
+    n_cold: int
+    n_zero: int
+    # beyond-paper: zstd-compressed cold tier (Snapipeline/Sabre-inspired).
+    # When set, cold offset-array slots hold the page RANK (not a byte
+    # offset) and a uint32 per-cold-page length table lives in CXL after
+    # the offset array (ci_size bytes, page-aligned).
+    cold_compressed: bool = False
+    ci_size: int = 0
+    cold_raw_bytes: int = 0       # uncompressed cold payload (for ratio)
+
+    @property
+    def ms_off(self) -> int:
+        return self.cxl_off
+
+    @property
+    def oa_off(self) -> int:
+        return self.cxl_off + self.ms_size
+
+    @property
+    def ci_off(self) -> int:
+        return self.cxl_off + self.ms_size + self.oa_size
+
+    @property
+    def hot_off(self) -> int:
+        return self.cxl_off + self.ms_size + self.oa_size + self.ci_size
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "SnapshotRegions":
+        return SnapshotRegions(**d)
+
+
+def _serialize_machine_state(manifest: Manifest, metadata: dict) -> bytes:
+    blob = json.dumps({"manifest": manifest.to_dict(), "metadata": metadata}).encode()
+    return len(blob).to_bytes(8, "little") + blob
+
+
+def _deserialize_machine_state(raw: np.ndarray) -> Tuple[Manifest, dict]:
+    n = int.from_bytes(raw[:8].tobytes(), "little")
+    d = json.loads(raw[8 : 8 + n].tobytes().decode())
+    return Manifest.from_dict(d["manifest"]), d["metadata"]
+
+
+def _compress_cold(cold_pages: np.ndarray):
+    """Per-page zstd: (blob, lengths uint32). Pages that don't shrink are
+    stored raw with the high bit of their length set."""
+    cctx = _zstd.ZstdCompressor(level=3)
+    chunks: List[bytes] = []
+    lengths = np.zeros(cold_pages.shape[0], dtype=np.uint32)
+    RAW = np.uint32(0x8000_0000)
+    for i in range(cold_pages.shape[0]):
+        raw = cold_pages[i].tobytes()
+        z = cctx.compress(raw)
+        if len(z) < PAGE_SIZE:
+            chunks.append(z)
+            lengths[i] = len(z)
+        else:
+            chunks.append(raw)
+            lengths[i] = RAW | PAGE_SIZE
+    return b"".join(chunks), lengths
+
+
+def build_snapshot(
+    pool: HierarchicalPool,
+    image: StateImage,
+    working_set: Sequence[int],
+    name: str,
+    version: int = 0,
+    metadata: Optional[dict] = None,
+    zero_bitmap: Optional[np.ndarray] = None,
+    gather_fn=None,
+    compress_cold: bool = False,
+) -> SnapshotRegions:
+    """Write one snapshot into the pool tiers; returns its region record.
+
+    ``gather_fn(pages_matrix, page_indices) -> compact`` lets callers swap in
+    the Pallas ``page_gather`` kernel; default is the numpy oracle.
+    ``compress_cold`` stores the RDMA tier zstd-compressed per page.
+    """
+    compress_cold = compress_cold and _zstd is not None
+    classes = classify_pages(image, working_set, zero_bitmap)
+    hot, cold = classes.hot_pages, classes.cold_pages
+
+    gather = gather_fn or (lambda mat, idx: mat[idx])
+    mat = image.pages_matrix()
+    hot_data = gather(mat, hot).reshape(-1).view(np.uint8) if hot.size else np.zeros(0, np.uint8)
+    cold_mat = np.asarray(gather(mat, cold)) if cold.size else np.zeros((0, PAGE_SIZE), np.uint8)
+    cold_raw_bytes = cold_mat.size
+
+    ci = np.zeros(0, dtype=np.uint32)
+    if compress_cold and cold.size:
+        blob, ci = _compress_cold(cold_mat)
+        cold_data = np.frombuffer(blob, dtype=np.uint8)
+    else:
+        compress_cold = False
+        cold_data = cold_mat.reshape(-1).view(np.uint8) if cold.size else np.zeros(0, np.uint8)
+
+    # Offset array: slot per guest page (cold slots: byte offset, or rank
+    # when the cold tier is compressed).
+    oa = np.full(image.total_pages, ZERO_SENTINEL, dtype=np.uint64)
+    if hot.size:
+        oa[hot] = (np.uint64(TIER_CXL) << TIER_SHIFT) | (
+            np.arange(hot.size, dtype=np.uint64) * np.uint64(PAGE_SIZE)
+        )
+    if cold.size:
+        stride = np.uint64(1) if compress_cold else np.uint64(PAGE_SIZE)
+        oa[cold] = (np.uint64(TIER_RDMA) << TIER_SHIFT) | (
+            np.arange(cold.size, dtype=np.uint64) * stride
+        )
+
+    ms = _serialize_machine_state(image.manifest, metadata or {})
+    ms_size = _align_pages(len(ms))
+    oa_size = _align_pages(oa.nbytes)
+    ci_size = _align_pages(ci.nbytes) if compress_cold else 0
+    hot_size = _align_pages(hot_data.nbytes) if hot_data.nbytes else 0
+    cxl_size = ms_size + oa_size + ci_size + hot_size
+    cold_size = _align_pages(cold_data.nbytes) if cold_data.nbytes else 0
+
+    cxl_off = pool.cxl.alloc(cxl_size)
+    rdma_off = pool.rdma.alloc(max(cold_size, PAGE_SIZE))
+
+    regions = SnapshotRegions(
+        name=name, version=version,
+        cxl_off=cxl_off, cxl_size=cxl_size,
+        ms_size=ms_size, oa_size=oa_size, hot_bytes=hot_data.nbytes,
+        rdma_off=rdma_off, rdma_size=max(cold_size, PAGE_SIZE),
+        cold_bytes=cold_data.nbytes,
+        total_pages=image.total_pages,
+        n_hot=int(hot.size), n_cold=int(cold.size), n_zero=classes.n_zero,
+        cold_compressed=compress_cold, ci_size=ci_size,
+        cold_raw_bytes=int(cold_raw_bytes),
+    )
+
+    pool.cxl.write(regions.ms_off, np.frombuffer(ms, dtype=np.uint8))
+    pool.cxl.write(regions.oa_off, oa.view(np.uint8))
+    if compress_cold and ci.size:
+        pool.cxl.write(regions.ci_off, ci.view(np.uint8))
+    if hot_data.nbytes:
+        pool.cxl.write(regions.hot_off, hot_data)
+    if cold_data.nbytes:
+        pool.rdma.write(rdma_off, cold_data)
+    return regions
+
+
+def free_snapshot(pool: HierarchicalPool, regions: SnapshotRegions) -> None:
+    pool.cxl.free(regions.cxl_off, regions.cxl_size)
+    pool.rdma.free(regions.rdma_off, regions.rdma_size)
+
+
+class SnapshotReader:
+    """Borrower-side reader over a published snapshot (read-only!).
+
+    CXL sections are read through the host's (incoherent) ``HostView``; the
+    caller must have run the borrow protocol, which invalidates the relevant
+    cache lines first (§3.3).  RDMA reads go to the tier directly (one-sided
+    reads are uncached).
+    """
+
+    def __init__(self, regions: SnapshotRegions, cxl_view: HostView, rdma: MemoryTier):
+        self.regions = regions
+        self.view = cxl_view
+        self.rdma = rdma
+        self._oa: Optional[np.ndarray] = None
+        self._manifest: Optional[Manifest] = None
+        self._metadata: Optional[dict] = None
+        self._ci: Optional[np.ndarray] = None       # cold lengths (compressed tier)
+        self._ci_starts: Optional[np.ndarray] = None
+        self._dctx = _zstd.ZstdDecompressor() if _zstd is not None else None
+
+    # -- protocol hook ------------------------------------------------------
+    def invalidate_cxl(self) -> None:
+        """clflushopt over machine state + offset array + hot data (§3.3)."""
+        r = self.regions
+        self.view.invalidate(r.cxl_off, r.ms_size + r.oa_size + max(r.hot_bytes, 0))
+
+    # -- index + machine state ----------------------------------------------
+    def machine_state(self) -> Tuple[Manifest, dict]:
+        if self._manifest is None:
+            raw = self.view.read(self.regions.ms_off, self.regions.ms_size)
+            self._manifest, self._metadata = _deserialize_machine_state(raw)
+        return self._manifest, self._metadata
+
+    def offset_array(self) -> np.ndarray:
+        if self._oa is None:
+            raw = self.view.read(self.regions.oa_off, self.regions.total_pages * 8)
+            self._oa = raw.view(np.uint64)
+        return self._oa
+
+    def cold_index(self):
+        """(starts, lengths) for the compressed cold tier (cached)."""
+        if self._ci is None:
+            raw = self.view.read(self.regions.ci_off, self.regions.n_cold * 4)
+            self._ci = raw.view(np.uint32)
+            lens = (self._ci & np.uint32(0x7FFF_FFFF)).astype(np.int64)
+            self._ci_starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        return self._ci_starts, self._ci
+
+    # -- page lookup ----------------------------------------------------------
+    def lookup(self, page: int) -> Tuple[str, int]:
+        """-> ("zero", 0) | ("cxl", pool_byte_offset) | ("rdma", pool_byte_offset)
+        | ("rdma_z", cold_rank) when the cold tier is compressed."""
+        slot = self.offset_array()[page]
+        if slot == ZERO_SENTINEL:
+            return "zero", 0
+        tier, off = decode_slot(slot)
+        if tier == TIER_CXL:
+            return "cxl", self.regions.hot_off + off
+        if self.regions.cold_compressed:
+            return "rdma_z", off          # off == cold rank
+        return "rdma", self.regions.rdma_off + off
+
+    def cold_extent(self, rank: int) -> Tuple[int, int, bool]:
+        """-> (pool_byte_offset, length, is_raw) for compressed cold page."""
+        starts, lens = self.cold_index()
+        raw = bool(lens[rank] & np.uint32(0x8000_0000))
+        n = int(lens[rank] & np.uint32(0x7FFF_FFFF))
+        return self.regions.rdma_off + int(starts[rank]), n, raw
+
+    def decompress_page(self, payload: np.ndarray, is_raw: bool) -> np.ndarray:
+        if is_raw:
+            return payload[:PAGE_SIZE]
+        out = self._dctx.decompress(payload.tobytes(), max_output_size=PAGE_SIZE)
+        return np.frombuffer(out, dtype=np.uint8)
+
+    def read_page(self, page: int) -> np.ndarray:
+        kind, off = self.lookup(page)
+        if kind == "zero":
+            return np.zeros(PAGE_SIZE, np.uint8)
+        if kind == "cxl":
+            return self.view.read(off, PAGE_SIZE)
+        if kind == "rdma_z":
+            pool_off, n, raw = self.cold_extent(off)
+            return self.decompress_page(self.rdma.read(pool_off, n), raw)
+        return self.rdma.read(off, PAGE_SIZE)
+
+    def hot_page_indices(self) -> np.ndarray:
+        oa = self.offset_array()
+        return np.nonzero((oa != ZERO_SENTINEL) & ((oa >> TIER_SHIFT) == TIER_CXL))[0]
+
+    def cold_page_indices(self) -> np.ndarray:
+        oa = self.offset_array()
+        return np.nonzero((oa != ZERO_SENTINEL) & ((oa >> TIER_SHIFT) == TIER_RDMA))[0]

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for Aquifer-JAX's compute hot-spots.
+
+Snapshot pipeline (the paper's data-plane, rethought as device-side
+bandwidth-bound walks over sharded state — DESIGN.md §7):
+  - zero_detect    : zero-page bitmap (snapshot build walk, §3.2)
+  - page_gather    : compact hot/cold regions by offset array (§3.2)
+  - page_scatter   : bulk pre-install into the instance image (§3.4)
+  - page_checksum  : per-page polynomial hash for dedup (§3.6)
+
+Model hot-spot:
+  - flash_attention: blocked online-softmax GQA attention
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with CPU fallback), ref.py (pure-jnp oracle).  All kernels are
+validated in interpret mode against their oracle over shape/dtype sweeps
+(tests/test_kernels.py).
+"""
+from .zero_detect.ops import zero_detect
+from .page_gather.ops import page_gather
+from .page_scatter.ops import page_scatter
+from .page_checksum.ops import page_checksum
+from .flash_attention.ops import flash_attention
+
+__all__ = ["zero_detect", "page_gather", "page_scatter", "page_checksum", "flash_attention"]

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles: naive GQA attention (small-shape test oracle) and a
+chunked online-softmax formulation (the CPU/compile path for long sequences —
+same FLOPs and working-set structure as the Pallas kernel, so dry-run
+cost/memory analysis reflects the TPU kernel rather than a naive S×S blowup).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Hq, Sq, Dk); k: (B, Hkv, Skv, Dk); v: (B, Hkv, Skv, Dv).
+
+    Hq must be a multiple of Hkv (grouped-query attention).
+    Returns (B, Hq, Sq, Dv) in q.dtype; softmax in f32.
+    """
+    b, hq, sq, dk = q.shape
+    hkv, skv, dv = k.shape[1], k.shape[2], v.shape[3]
+    group = hq // hkv
+    if scale is None:
+        scale = dk ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    if causal:
+        # query i attends to kv positions <= i + (skv - sq)  (suffix alignment)
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_attention_ref(q, k, v, *, causal: bool = True,
+                          scale: float | None = None, block_k: int = 512):
+    """Online-softmax attention scanning KV in blocks (flash-style, pure jnp).
+
+    q: (B, Hq, Sq, Dk); k/v: (B, Hkv, Skv, Dk/Dv) -> (B, Hq, Sq, Dv).
+    Peak intermediate is (B, Hq, Sq, block_k) instead of (B, Hq, Sq, Skv).
+    """
+    b, hq, sq, dk = q.shape
+    hkv, skv, dv = k.shape[1], k.shape[2], v.shape[3]
+    group = hq // hkv
+    if scale is None:
+        scale = dk ** -0.5
+    pad = (-skv) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = k.shape[2] // block_k
+    kb = k.reshape(b, hkv, nk, block_k, dk).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nk, block_k, dv).transpose(2, 0, 1, 3, 4)
+    qf = q.astype(jnp.float32) * scale
+    qpos = jnp.arange(sq) + (skv - sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ik, kblk, vblk = inp
+        kf = kblk.astype(jnp.float32)
+        vf = vblk.astype(jnp.float32)
+        kk = jnp.repeat(kf, group, axis=1)
+        vv = jnp.repeat(vf, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kk)
+        kpos = ik * block_k + jnp.arange(block_k)
+        invalid = kpos[None, :] >= skv  # padding
+        if causal:
+            invalid = invalid | (kpos[None, :] > qpos[:, None])
+        s = jnp.where(invalid[None, None], -1e30, s)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = alpha * l + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    a0 = jnp.zeros((b, hq, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

@@ -1,0 +1,37 @@
+"""Pallas TPU kernel: per-page polynomial checksum (dedup layer, §3.6).
+
+Streams (block_pages, n_lanes) uint32 tiles HBM→VMEM, multiplies by the
+precomputed power-of-P weight vector and row-reduces with wraparound uint32
+arithmetic.  Bandwidth-bound like zero_detect; the two walks are fused at the
+ops level when dedup is enabled (one HBM pass computes both).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _checksum_block(pages_ref, w_ref, out_ref):
+    tile = pages_ref[...]
+    w = w_ref[...]
+    out_ref[...] = (tile * w[None, :]).sum(axis=1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_pages", "interpret"))
+def page_checksum_pallas(pages_u32: jnp.ndarray, weights: jnp.ndarray,
+                         *, block_pages: int = 256, interpret: bool = False):
+    n_pages, n_lanes = pages_u32.shape
+    assert n_pages % block_pages == 0
+    grid = (n_pages // block_pages,)
+    return pl.pallas_call(
+        _checksum_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_pages, n_lanes), lambda i: (i, 0)),
+            pl.BlockSpec((n_lanes,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_pages,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pages,), jnp.uint32),
+        interpret=interpret,
+    )(pages_u32, weights)

@@ -1,0 +1,34 @@
+"""jit'd wrapper for page checksums with CPU fallback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import page_checksum_pallas
+from .ref import page_checksum_ref, poly_weights
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def page_checksum(pages_bytes, *, block_pages: int = 256,
+                  use_pallas: bool | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """pages_bytes: (n_pages, page_bytes) uint8 -> uint32[n_pages]."""
+    arr = np.ascontiguousarray(pages_bytes)
+    pages_u32 = jnp.asarray(arr.view(np.uint32).reshape(arr.shape[0], -1))
+    w = poly_weights(pages_u32.shape[1])
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return page_checksum_ref(pages_u32, w)
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = pages_u32.shape[0]
+    pad = (-n) % block_pages
+    if pad:
+        pages_u32 = jnp.concatenate(
+            [pages_u32, jnp.zeros((pad, pages_u32.shape[1]), jnp.uint32)], axis=0
+        )
+    out = page_checksum_pallas(pages_u32, w, block_pages=block_pages, interpret=interpret)
+    return out[:n]

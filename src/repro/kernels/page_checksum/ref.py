@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the per-page polynomial checksum.
+
+TPU-native hash choice (hardware adaptation, DESIGN.md §2): FNV-1a is an
+inherently sequential byte fold and TPUs have no 64-bit vector lanes, so the
+device kernel uses a *polynomial rolling hash* over uint32 lanes instead:
+
+    h(page) = sum_i lane_i * P^(E-1-i)   (mod 2^32),  P = 0x01000193
+
+which is a single vector multiply + reduction — VPU-shaped.  Same collision
+structure as Rabin-Karp; the host-side dedup path (core/dedup.py) keeps
+FNV-1a-64 and both are accepted by DedupStore.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+POLY_P = np.uint32(0x01000193)  # FNV prime reused as the polynomial base
+
+
+def poly_weights(n_lanes: int) -> jnp.ndarray:
+    """uint32[ n_lanes ] = [P^(n-1), ..., P, 1] mod 2^32."""
+    w = np.empty(n_lanes, dtype=np.uint32)
+    acc = np.uint32(1)
+    with np.errstate(over="ignore"):
+        for i in range(n_lanes - 1, -1, -1):
+            w[i] = acc
+            acc = acc * POLY_P
+    return jnp.asarray(w)
+
+
+def page_checksum_ref(pages_u32: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """pages_u32: (n_pages, n_lanes) uint32 -> uint32[n_pages]."""
+    return (pages_u32 * weights[None, :]).sum(axis=1, dtype=jnp.uint32)

@@ -1,0 +1,25 @@
+"""jit'd wrapper for page gather with CPU fallback."""
+import jax
+import jax.numpy as jnp
+
+from .kernel import page_gather_pallas
+from .ref import page_gather_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def page_gather(pages, indices, *, use_pallas: bool | None = None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    pages = jnp.asarray(pages)
+    indices = jnp.asarray(indices, dtype=jnp.int32)
+    if indices.shape[0] == 0:
+        return jnp.zeros((0, pages.shape[1]), pages.dtype)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return page_gather_ref(pages, indices)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return page_gather_pallas(pages, indices, interpret=interpret)

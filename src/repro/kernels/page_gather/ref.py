@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for page gather (snapshot compaction)."""
+import jax.numpy as jnp
+
+
+def page_gather_ref(pages: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """pages: (N, E); indices: int32[M] -> (M, E) compacted pages."""
+    return jnp.take(pages, indices, axis=0)

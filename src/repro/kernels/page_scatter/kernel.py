@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: scatter compact pages into the instance image (§3.4).
+
+The device-side bulk analogue of hot-set pre-installation: M compacted pages
+stream VMEM→HBM into their guest page slots.  The destination image is
+donated (input_output_aliases) so unwritten pages keep their prior contents —
+the kernel only touches the scattered rows, mirroring uffd.copy semantics
+(private copy, pool source untouched).
+
+Scalar-prefetched indices drive the *output* BlockSpec's index_map.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_kernel(idx_ref, compact_ref, dest_ref, out_ref):
+    del idx_ref, dest_ref  # dest is aliased to out; untouched rows persist
+    out_ref[...] = compact_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def page_scatter_pallas(dest: jnp.ndarray, compact: jnp.ndarray, indices: jnp.ndarray,
+                        *, interpret: bool = False):
+    """dest: (N, E) donated; compact: (M, E); indices: int32[M] -> updated dest."""
+    n, e = dest.shape
+    m = compact.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, e), lambda i, idx_ref: (i, 0)),          # compact row i
+            pl.BlockSpec((1, e), lambda i, idx_ref: (idx_ref[i], 0)),  # dest row idx[i]
+        ],
+        out_specs=pl.BlockSpec((1, e), lambda i, idx_ref: (idx_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, e), dest.dtype),
+        input_output_aliases={2: 0},  # alias dest (input incl. scalar prefetch) -> output
+        interpret=interpret,
+    )(indices, compact, dest)

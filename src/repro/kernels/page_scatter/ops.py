@@ -1,0 +1,26 @@
+"""jit'd wrapper for page scatter with CPU fallback."""
+import jax
+import jax.numpy as jnp
+
+from .kernel import page_scatter_pallas
+from .ref import page_scatter_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def page_scatter(dest, compact, indices, *, use_pallas: bool | None = None,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    dest = jnp.asarray(dest)
+    compact = jnp.asarray(compact)
+    indices = jnp.asarray(indices, dtype=jnp.int32)
+    if indices.shape[0] == 0:
+        return dest
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return page_scatter_ref(dest, compact, indices)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return page_scatter_pallas(dest, compact, indices, interpret=interpret)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for page scatter (restore pre-install)."""
+import jax.numpy as jnp
+
+
+def page_scatter_ref(dest: jnp.ndarray, compact: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """dest: (N, E); compact: (M, E); indices: int32[M] -> dest with
+    dest[indices[i]] = compact[i] (indices unique)."""
+    return dest.at[indices].set(compact)

@@ -1,0 +1,39 @@
+"""jit'd wrapper: pad-to-block, dispatch Pallas on TPU / interpret elsewhere."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import zero_detect_pallas
+from .ref import zero_detect_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def zero_detect(pages, *, block_pages: int = 256, use_pallas: bool | None = None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """int32[n_pages] zero-page bitmap; pads ragged tails with a nonzero
+    sentinel so padding never reports zero."""
+    pages = jnp.asarray(pages)
+    n = pages.shape[0]
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return zero_detect_ref(pages)
+    if interpret is None:
+        interpret = not _on_tpu()
+    pad = (-n) % block_pages
+    if pad:
+        filler = jnp.ones((pad, pages.shape[1]), dtype=pages.dtype)
+        pages = jnp.concatenate([pages, filler], axis=0)
+    out = zero_detect_pallas(pages, block_pages=block_pages, interpret=interpret)
+    return out[:n]
+
+
+def zero_bitmap_numpy(buf: np.ndarray, page_bytes: int = 4096) -> np.ndarray:
+    """Host-side fast path used by core/ when no accelerator is attached."""
+    mat = buf.reshape(-1, page_bytes)
+    return ~mat.any(axis=1)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for zero-page detection."""
+import jax.numpy as jnp
+
+
+def zero_detect_ref(pages: jnp.ndarray) -> jnp.ndarray:
+    """pages: (n_pages, page_elems) any dtype -> int32[n_pages], 1 where the
+    page is entirely zero (bitwise: we compare values to 0, which matches the
+    paper's byte-walk because state buffers are IEEE arrays where +0.0 is the
+    all-zero pattern; -0.0 is treated as zero content by design)."""
+    return (pages == 0).all(axis=1).astype(jnp.int32)

@@ -1,0 +1,195 @@
+"""Encoder-decoder backbone (SeamlessM4T-style, audio family).
+
+The audio frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, T_frames, d_model).  Encoder blocks use
+bidirectional self-attention; decoder blocks use causal self-attention +
+cross-attention over the encoder output.
+
+Decode caches: per-layer self-attn KV plus cross-attn K/V computed once from
+the encoder output at prefill.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.partition import constrain
+from . import attention as attn_mod
+from .common import (
+    cast_tree,
+    dense_init,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+from ..kernels.flash_attention.ops import flash_attention
+from .transformer import _stack_init
+
+
+# -- cross attention -------------------------------------------------------
+
+def init_cross_attn(key, cfg: ModelConfig, dtype) -> Dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * dh), dtype),
+        "wk": dense_init(ks[1], (d, h * dh), dtype),
+        "wv": dense_init(ks[2], (d, h * dh), dtype),
+        "wo": dense_init(ks[3], (h * dh, d), dtype, fan_in=h * dh),
+    }
+
+
+def cross_kv(params: Dict, enc_out: jnp.ndarray, cfg: ModelConfig):
+    b, t, _ = enc_out.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    k = jnp.einsum("btd,de->bte", enc_out, params["wk"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = jnp.einsum("btd,de->bte", enc_out, params["wv"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def cross_attn(params: Dict, x: jnp.ndarray, k, v, cfg: ModelConfig) -> jnp.ndarray:
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    o = flash_attention(q, k, v, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bse,ed->bsd", o, params["wo"])
+
+
+# -- blocks -----------------------------------------------------------------
+
+def init_enc_block(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_mod.init_gqa(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def enc_block(params, x, cfg: ModelConfig):
+    x = constrain(x, ("pod", "data"), None, None)
+    x = x + attn_mod.gqa_attention(params["attn"], rmsnorm(params["ln1"], x), cfg, causal=False)
+    x = x + mlp(params["mlp"], rmsnorm(params["ln2"], x))
+    return constrain(x, ("pod", "data"), None, None)
+
+
+def init_dec_block(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "self": attn_mod.init_gqa(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "cross": init_cross_attn(k2, cfg, dtype),
+        "ln3": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dec_block(params, x, enc_out, cfg: ModelConfig):
+    x = constrain(x, ("pod", "data"), None, None)
+    x = x + attn_mod.gqa_attention(params["self"], rmsnorm(params["ln1"], x), cfg, causal=True)
+    k, v = cross_kv(params["cross"], enc_out, cfg)
+    x = x + cross_attn(params["cross"], rmsnorm(params["ln2"], x), k, v, cfg)
+    x = x + mlp(params["mlp"], rmsnorm(params["ln3"], x))
+    return constrain(x, ("pod", "data"), None, None)
+
+
+# -- model ------------------------------------------------------------------
+
+def init_encdec(key, cfg: ModelConfig) -> Dict:
+    dtype = cfg.pdtype()
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": init_embedding(ks[0], cfg.vocab, cfg.d_model, dtype, cfg.tie_embeddings,
+                                padded_vocab=cfg.padded_vocab),
+        "enc_layers": _stack_init(ks[1], cfg.n_enc_layers, lambda k: init_enc_block(k, cfg, dtype)),
+        "dec_layers": _stack_init(ks[2], cfg.n_dec_layers, lambda k: init_dec_block(k, cfg, dtype)),
+        "enc_norm": init_rmsnorm(cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def encode(params: Dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B, T, D) stub frontend embeddings -> encoder output."""
+    cdt = cfg.cdtype()
+    cparams = cast_tree(params, cdt)
+    x = frames.astype(cdt)
+    blk = jax.checkpoint(lambda p, h: enc_block(p, h, cfg)) if cfg.remat else (
+        lambda p, h: enc_block(p, h, cfg))
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda h, p: (blk(p, h), None), x, cparams["enc_layers"])
+    else:
+        n = jax.tree.leaves(cparams["enc_layers"])[0].shape[0]
+        for i in range(n):
+            x = blk(jax.tree.map(lambda t: t[i], cparams["enc_layers"]), x)
+    return rmsnorm(cparams["enc_norm"], x)
+
+
+def encdec_forward(params: Dict, frames: jnp.ndarray, tokens: jnp.ndarray,
+                   cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (decoder logits, aux=0)."""
+    cdt = cfg.cdtype()
+    cparams = cast_tree(params, cdt)
+    enc_out = encode(params, frames, cfg)
+    x = embed(cparams["embed"], tokens, cdt)
+    blk = jax.checkpoint(lambda p, h: dec_block(p, h, enc_out, cfg)) if cfg.remat else (
+        lambda p, h: dec_block(p, h, enc_out, cfg))
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda h, p: (blk(p, h), None), x, cparams["dec_layers"])
+    else:
+        n = jax.tree.leaves(cparams["dec_layers"])[0].shape[0]
+        for i in range(n):
+            x = blk(jax.tree.map(lambda t: t[i], cparams["dec_layers"]), x)
+    x = rmsnorm(cparams["final_norm"], x)
+    logits = unembed(cparams["embed"], x, cfg.logits_fp32, vocab=cfg.vocab)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_encdec_caches(params: Dict, cfg: ModelConfig, batch: int, max_len: int,
+                       enc_out: Optional[jnp.ndarray] = None, enc_len: int = 0):
+    """Self-attn KV caches + cross K/V (from enc_out if given, zeros else)."""
+    cdt = cfg.cdtype()
+    self_kv = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.n_dec_layers, *t.shape)).copy(),
+        attn_mod.init_gqa_cache(cfg, batch, max_len, cdt),
+    )
+    h, dh = cfg.n_heads, cfg.head_dim
+    t = enc_out.shape[1] if enc_out is not None else enc_len
+    if enc_out is not None:
+        cparams = cast_tree(params, cdt)
+        def one(p):
+            return jnp.stack(cross_kv(p, enc_out, cfg))   # (2, B, H, T, dh)
+        ck = jax.vmap(one)(cparams["dec_layers"]["cross"])
+    else:
+        ck = jnp.zeros((cfg.n_dec_layers, 2, batch, h, t, dh), cdt)
+    return {"self": self_kv, "cross": ck}
+
+
+def encdec_decode_step(params: Dict, tokens: jnp.ndarray, caches, pos: jnp.ndarray,
+                       cfg: ModelConfig):
+    cdt = cfg.cdtype()
+    cparams = cast_tree(params, cdt)
+    x = embed(cparams["embed"], tokens, cdt)
+
+    def step(h, pc):
+        p, c_self, c_cross = pc
+        hh, c_self = attn_mod.gqa_decode(p["self"], rmsnorm(p["ln1"], h), c_self, pos, cfg)
+        h = h + hh
+        k, v = c_cross[0], c_cross[1]
+        h = h + cross_attn(p["cross"], rmsnorm(p["ln2"], h), k, v, cfg)
+        h = h + mlp(p["mlp"], rmsnorm(p["ln3"], h))
+        return h, c_self
+
+    x, new_self = jax.lax.scan(step, x, (cparams["dec_layers"], caches["self"], caches["cross"]))
+    x = rmsnorm(cparams["final_norm"], x)
+    logits = unembed(cparams["embed"], x, cfg.logits_fp32, vocab=cfg.vocab)
+    return logits, {"self": new_self, "cross": caches["cross"]}

@@ -1,0 +1,138 @@
+"""Uniform model interface over all assigned architecture families.
+
+``build(cfg)`` returns a ``Model`` with:
+  init(key) -> params
+  forward(params, batch) -> (logits, aux)           # train/prefill
+  init_caches(params, batch, max_len) -> caches     # decode state
+  decode_step(params, batch, caches) -> (logits, caches)
+  input_specs(shape) -> {name: ShapeDtypeStruct}    # dry-run stand-ins
+  make_batch(rng, shape) -> concrete small batch    # smoke tests
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeSpec
+from . import encdec as encdec_mod
+from . import transformer as tf_mod
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    init_caches: Callable
+    decode_step: Callable
+    input_specs: Callable
+    make_batch: Callable
+
+
+def _frames_len(seq_len: int) -> int:
+    return seq_len  # stub frontend: one embedding per "frame" position
+
+
+def build(cfg: ModelConfig) -> Model:
+    cdt = cfg.cdtype()
+
+    if cfg.is_encdec:
+        def init(key):
+            return encdec_mod.init_encdec(key, cfg)
+
+        def forward(params, batch):
+            return encdec_mod.encdec_forward(params, batch["frames"], batch["tokens"], cfg)
+
+        def init_caches(params, batch_size, max_len, enc_out=None):
+            return encdec_mod.init_encdec_caches(
+                params, cfg, batch_size, max_len,
+                enc_out=enc_out, enc_len=_frames_len(max_len),
+            )
+
+        def decode_step(params, batch, caches):
+            return encdec_mod.encdec_decode_step(params, batch["tokens"], caches, batch["pos"], cfg)
+
+        def input_specs(shape: ShapeSpec) -> Dict[str, Any]:
+            b, s = shape.global_batch, shape.seq_len
+            if shape.kind == "train":
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, _frames_len(s), cfg.d_model), cdt),
+                    "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                }
+            if shape.kind == "prefill":
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, _frames_len(s), cfg.d_model), cdt),
+                    "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                }
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+
+        def make_batch(rng: np.random.Generator, shape: ShapeSpec):
+            b, s = shape.global_batch, shape.seq_len
+            out = {
+                "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, max(1, s) if shape.kind != "decode" else 1)), jnp.int32),
+            }
+            if shape.kind != "decode":
+                out["frames"] = jnp.asarray(
+                    rng.standard_normal((b, _frames_len(s), cfg.d_model)), cdt)
+            if shape.kind == "train":
+                out["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+            if shape.kind == "decode":
+                out["pos"] = jnp.asarray(s // 2, jnp.int32)
+            return out
+
+        return Model(cfg, init, forward, init_caches, decode_step, input_specs, make_batch)
+
+    # -- decoder-only families ------------------------------------------------
+    def init(key):
+        return tf_mod.init_lm(key, cfg)
+
+    def forward(params, batch):
+        return tf_mod.lm_forward(params, batch["tokens"], cfg,
+                                 vision_embeds=batch.get("vision_embeds"))
+
+    def init_caches(params, batch_size, max_len, enc_out=None):
+        del params, enc_out
+        return tf_mod.init_lm_caches(cfg, batch_size, max_len)
+
+    def decode_step(params, batch, caches):
+        return tf_mod.lm_decode_step(params, batch["tokens"], caches, batch["pos"], cfg)
+
+    def input_specs(shape: ShapeSpec) -> Dict[str, Any]:
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct((b, cfg.vision_prefix, cfg.d_model), cdt)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+
+    def make_batch(rng: np.random.Generator, shape: ShapeSpec):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {
+                "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, 1)), jnp.int32),
+                "pos": jnp.asarray(s // 2, jnp.int32),
+            }
+        out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = jnp.asarray(
+                rng.standard_normal((b, cfg.vision_prefix, cfg.d_model)), cdt)
+        if shape.kind == "train":
+            out["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+        return out
+
+    return Model(cfg, init, forward, init_caches, decode_step, input_specs, make_batch)

@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN: shared experts + routed top-k with capacity-factor
+dispatch/combine einsums (GShard-style "dropping" baseline).
+
+This is deliberately the *baseline* formulation — the §Perf hillclimb swaps
+the (tokens, experts, capacity) dispatch for a sort-based formulation and
+records the delta.  Router softmax runs in f32; an auxiliary load-balancing
+loss (Switch-style) is returned for the train step.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.partition import constrain
+from .common import dense_init, init_mlp, mlp
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Dict:
+    d, fe, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "wi": dense_init(ks[1], (e, d, fe), dtype),
+        "wg": dense_init(ks[2], (e, d, fe), dtype),
+        "wo": dense_init(ks[3], (e, fe, d), dtype, fan_in=fe),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, fe * cfg.n_shared_experts, dtype)
+    return p
+
+
+def moe_ffn_sorted(params: Dict, x: jnp.ndarray, cfg: ModelConfig
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """§Perf alternative: sort-based dropless dispatch (MegaBlocks-style).
+
+    Tokens are argsorted by expert id and run through `jax.lax.ragged_dot`
+    grouped GEMMs — no (tokens, experts, capacity) one-hot tensors, no
+    drops.  Working set is tokens x top_k x d instead of tokens x 10 x d
+    (~e*c/(k) smaller dispatch state at DeepSeek shapes)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                     # (t, k)
+    topw = topw / (topw.sum(-1, keepdims=True) + 1e-9)
+
+    flat_e = topi.reshape(t * k)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = topw.reshape(t * k)
+    order = jnp.argsort(flat_e)                              # stable
+    tok_sorted = flat_tok[order]
+    w_sorted = flat_w[order]
+    xs = jnp.take(xt, tok_sorted, axis=0)                    # (t*k, d)
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+
+    h = jax.lax.ragged_dot(xs, params["wi"], group_sizes)
+    g = jax.lax.ragged_dot(xs, params["wg"], group_sizes)
+    act = jax.nn.silu(g) * h
+    out = jax.lax.ragged_dot(act, params["wo"], group_sizes)  # (t*k, d)
+
+    y = jnp.zeros((t, d), x.dtype).at[tok_sorted].add(
+        out * w_sorted[:, None].astype(out.dtype))
+
+    top1 = jax.nn.one_hot(topi[:, 0], e, dtype=jnp.float32)
+    aux = (top1.mean(axis=0) * probs.mean(axis=0)).sum() * e
+
+    y = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        y = y + mlp(params["shared"], x)
+    return y, aux.astype(jnp.float32)
+
+
+def moe_ffn(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+            group_size: int = 2048) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Tokens are processed in groups with per-group expert capacity
+    C = group_size * top_k / E * capacity_factor (overflow tokens drop to the
+    residual path, standard for dropping MoE).  cfg.moe_impl="sorted" routes
+    to the dropless sort-based formulation instead.
+    """
+    if getattr(cfg, "moe_impl", "dispatch") == "sorted":
+        return moe_ffn_sorted(params, x, cfg)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g = max(1, t // group_size)
+    gs = t // g
+    xt = x.reshape(g, gs, d)
+
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (g, s, e)
+    topw, topi = jax.lax.top_k(probs, k)                         # (g, s, k)
+    topw = topw / (topw.sum(-1, keepdims=True) + 1e-9)
+
+    cap = max(1, int(gs * k / e * cfg.capacity_factor))
+    # position of each (token, choice) in its expert's queue
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)          # (g, s, k, e)
+    pos_in_e = (jnp.cumsum(onehot.sum(2), axis=1) - onehot.sum(2))  # (g, s, e)
+    # per-choice slot: recover via gather of pos + intra-token offset
+    prior_within = jnp.cumsum(onehot, axis=2) - onehot            # (g, s, k, e)
+    slot = jnp.einsum("gske,gse->gsk", onehot, pos_in_e) + jnp.einsum(
+        "gske,gske->gsk", onehot, prior_within
+    )
+    keep = slot < cap
+    w = topw * keep
+
+    # dispatch/combine tensors — bf16: they are 0/1 masks (disp) and softmax
+    # weights (comb); the (g,s,e,c) materialization is the structural cost of
+    # dropping-MoE and dominates MoE-train memory, so halving its bytes
+    # matters (§Perf)
+    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), cap, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("gske,gskc->gsec", onehot, slot_oh).astype(x.dtype)
+    comb = jnp.einsum("gsk,gske,gskc->gsec", w, onehot, slot_oh).astype(x.dtype)
+
+    xin = jnp.einsum("gsec,gsd->gecd", disp.astype(x.dtype), xt)  # (g, e, c, d)
+    # expert-parallel layout: dispatched tokens live on the expert's shard
+    # (all-to-all at this boundary), groups ride the DP axes
+    xin = constrain(xin, ("pod", "data"), "model", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xin, params["wi"])
+    gate = jnp.einsum("gecd,edf->gecf", xin, params["wg"])
+    act = jax.nn.silu(gate) * h
+    xout = jnp.einsum("gecf,efd->gecd", act, params["wo"])
+    xout = constrain(xout, ("pod", "data"), "model", None, None)
+    y = jnp.einsum("gsec,gecd->gsd", comb.astype(x.dtype), xout)
+
+    # Switch aux loss: fraction of tokens per expert x mean router prob
+    frac = onehot[:, :, 0, :].mean(axis=1)                       # top-1 assignment share
+    mean_p = probs.mean(axis=1)
+    aux = (frac * mean_p).sum(-1).mean() * e
+
+    y = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        y = y + mlp(params["shared"], x)
+    return y, aux.astype(jnp.float32)

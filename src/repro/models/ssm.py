@@ -1,0 +1,314 @@
+"""Sequence-mixing state-space cells: Mamba2 (SSD) and xLSTM (sLSTM/mLSTM).
+
+All three support two modes:
+  * full-sequence (training / prefill) — chunked formulations: quadratic
+    within a chunk, linear state passing across chunks (lax.scan);
+  * single-step decode — constant-size recurrent state per layer, which is
+    what makes the long_500k cell tractable for ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import dense_init, init_rmsnorm, rmsnorm
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable 'segment sum' producing lower-triangular cumulative sums:
+    out[..., i, j] = sum_{j < k <= i} x[..., k]  (−inf above diagonal)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+# ==========================================================================
+# Mamba2 / SSD
+# ==========================================================================
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = h * p
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * n + h), dtype),
+        "conv_w": dense_init(ks[1], (4, d_in + 2 * n), dtype, fan_in=4),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": init_rmsnorm(d_in, dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype, fan_in=d_in),
+    }
+
+
+def _mamba2_inputs(params, x, cfg: ModelConfig):
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = h * p
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n], axis=-1)
+    # causal depthwise conv (width 4) over x,B,C
+    w = params["conv_w"]
+    xbc_pad = jnp.pad(xbc, ((0, 0), (3, 0), (0, 0)))
+    conv = sum(xbc_pad[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(4))
+    xbc = jax.nn.silu(conv)
+    xs, B, C = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    return z, xs, B, C, dt, A
+
+
+def mamba2_ssd(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence chunked SSD. x: (B, L, D); L % chunk == 0."""
+    bsz, L, _ = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    q = min(cfg.ssm_chunk, L)
+    assert L % q == 0
+    nc = L // q
+    z, xs, B, C, dt, A = _mamba2_inputs(params, x, cfg)
+    xh = xs.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    Bh = B.reshape(bsz, nc, q, n).astype(jnp.float32)
+    Ch = C.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dth = dt.reshape(bsz, nc, q, h)
+    dA = dth * A[None, None, None, :]                     # (b, c, q, h)
+
+    # within-chunk (diagonal) term; dt folds into the input side (x_k * dt_k)
+    xdt = xh * dth[..., None]                             # (b, c, q, h, p)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))     # (b, c, h, q, q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Ch, Bh)        # (b, c, q, k)
+    y_diag = jnp.einsum("bchqk,bcqk,bckhp->bcqhp", Lmat, scores, xdt)
+
+    # chunk-final states
+    decay_out = jnp.exp(dA.sum(axis=2, keepdims=True) - jnp.cumsum(dA, axis=2))
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", dth * decay_out, Bh, xh)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA.sum(axis=2))                 # (b, c, h)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit state *entering* chunk
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (b, c, h, p, n)
+
+    decay_in = jnp.exp(jnp.cumsum(dA, axis=2))             # (b, c, q, h)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Ch, decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, L, h, p)
+    y = y + xh.reshape(bsz, L, h, p) * params["D"][None, None, :, None]
+    y = y.reshape(bsz, L, h * p).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"])
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int):
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, 4, h * p + 2 * n), jnp.float32),
+    }
+
+
+def mamba2_decode(params: Dict, x: jnp.ndarray, state: Dict,
+                  cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent step. x: (B, 1, D)."""
+    bsz = x.shape[0]
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = h * p
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])[:, 0]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n], axis=-1)
+    conv_buf = jnp.concatenate(
+        [state["conv"][:, 1:], xbc.astype(jnp.float32)[:, None]], axis=1
+    )
+    w = params["conv_w"].astype(jnp.float32)
+    conv = jax.nn.silu((conv_buf * w[None]).sum(axis=1)).astype(x.dtype)
+    xs, B, C = jnp.split(conv, [d_in, d_in + n], axis=-1)
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (b, h)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt1 * A[None, :])                                       # (b, h)
+    xhead = xs.reshape(bsz, h, p).astype(jnp.float32)
+    ssm = state["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt1, B.astype(jnp.float32), xhead
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), ssm)
+    y = y + xhead * params["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z[:, None]))
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    return out, {"ssm": ssm, "conv": conv_buf}
+
+
+# ==========================================================================
+# mLSTM (xLSTM matrix-memory cell) — chunked parallel / recurrent decode
+# ==========================================================================
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * dh), dtype),
+        "wk": dense_init(ks[1], (d, h * dh), dtype),
+        "wv": dense_init(ks[2], (d, h * dh), dtype),
+        "wif": dense_init(ks[3], (d, 2 * h), jnp.float32),
+        "fb": jnp.full((h,), 3.0, jnp.float32),           # forget-gate bias >0
+        "norm": init_rmsnorm(h * dh, dtype),
+        "wo": dense_init(ks[4], (h * dh, d), dtype, fan_in=h * dh),
+        "wog": dense_init(ks[5], (d, h * dh), dtype),     # output gate
+    }
+
+
+def _mlstm_qkvif(params, x, cfg: ModelConfig):
+    b, L, _ = x.shape
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    q = jnp.einsum("bld,de->ble", x, params["wq"]).reshape(b, L, h, dh)
+    k = jnp.einsum("bld,de->ble", x, params["wk"]).reshape(b, L, h, dh)
+    v = jnp.einsum("bld,de->ble", x, params["wv"]).reshape(b, L, h, dh)
+    gif = jnp.einsum("bld,de->ble", x.astype(jnp.float32), params["wif"])
+    i_pre, f_pre = jnp.split(gif, 2, axis=-1)             # (b, L, h)
+    f_pre = f_pre + params["fb"][None, None, :]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_parallel(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Chunked stabilized mLSTM (training). x: (B, L, D)."""
+    b, L, _ = x.shape
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, x, cfg)
+    logf = jax.nn.log_sigmoid(f_pre)                       # (b, L, h)
+    scale = dh ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # decay matrix in log space: D[i,j] = sum_{j<t<=i} logf_t + i_pre_j
+    lcs = jnp.cumsum(logf, axis=1)                          # (b, L, h)
+    Dlog = lcs[:, :, None, :] - lcs[:, None, :, :] + i_pre[:, None, :, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+    Dlog = jnp.where(mask, Dlog, -jnp.inf)
+    m = Dlog.max(axis=2, keepdims=True)                     # row-stabilizer
+    Dmat = jnp.exp(Dlog - m)                                # (b, L, L, h)
+    s = jnp.einsum("blhd,bthd->blth", qf, kf)               # (b, L, T, h)
+    sw = s * Dmat
+    norm = jnp.maximum(jnp.abs(sw.sum(axis=2)), jnp.exp(-m[:, :, 0]))  # (b, L, h)
+    yt = jnp.einsum("blth,bthd->blhd", sw, vf) / (norm[..., None] + 1e-6)
+    og = jax.nn.sigmoid(jnp.einsum("bld,de->ble", x, params["wog"]))
+    y = (yt.reshape(b, L, h * dh)).astype(x.dtype) * og.astype(x.dtype)
+    y = rmsnorm(params["norm"], y)
+    return jnp.einsum("ble,ed->bld", y, params["wo"])
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params: Dict, x: jnp.ndarray, state: Dict,
+                 cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    b = x.shape[0]
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, x, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                     # (b, h, dh)
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]                 # (b, h)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    fg = jnp.exp(logf + state["m"] - m_new)
+    ig = jnp.exp(i_pre - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = state["C"] * fg[..., None, None] + jnp.einsum("bhk,bhv->bhkv", ig[..., None] * kf, vf)
+    n = state["n"] * fg[..., None] + ig[..., None] * kf
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), jnp.exp(-m_new))
+    yt = num / (den[..., None] + 1e-6)
+    og = jax.nn.sigmoid(jnp.einsum("bld,de->ble", x, params["wog"]))[:, 0]
+    y = (yt.reshape(b, 1, h * dh)).astype(x.dtype) * og[:, None].astype(x.dtype)
+    y = rmsnorm(params["norm"], y)
+    out = jnp.einsum("ble,ed->bld", y, params["wo"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ==========================================================================
+# sLSTM (xLSTM scalar cell) — sequential scan
+# ==========================================================================
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wx": dense_init(ks[0], (d, 4 * h * dh), dtype),           # i,f,z,o from input
+        "wr": dense_init(ks[1], (h, dh, 4 * dh), jnp.float32),     # block-diag recurrent
+        "fb": jnp.full((h, dh), 3.0, jnp.float32),
+        "norm": init_rmsnorm(h * dh, dtype),
+        "wo": dense_init(ks[2], (h * dh, d), dtype, fan_in=h * dh),
+    }
+
+
+def _slstm_step(params, cfg, carry, xg):
+    """xg: (b, h, 4*dh) pre-activations from the input path."""
+    c, n, m, hprev = carry
+    rec = jnp.einsum("bhd,hde->bhe", hprev, params["wr"])   # (b, h, 4*dh)
+    g = xg + rec
+    dh = cfg.ssm_head_dim
+    i_pre, f_pre, z_pre, o_pre = jnp.split(g, 4, axis=-1)
+    f_pre = f_pre + params["fb"][None]
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    ig = jnp.exp(i_pre - m_new)
+    fg = jnp.exp(f_pre + m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c_new = fg * c + ig * z
+    n_new = fg * n + ig
+    hnew = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, hnew), hnew
+
+
+def slstm_scan(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    b, L, _ = x.shape
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    xg = jnp.einsum("bld,de->ble", x, params["wx"]).astype(jnp.float32)
+    xg = xg.reshape(b, L, h, 4 * dh).transpose(1, 0, 2, 3)   # (L, b, h, 4dh)
+    zeros = jnp.zeros((b, h, dh), jnp.float32)
+    carry = (zeros, zeros, jnp.full((b, h, dh), -1e30, jnp.float32), zeros)
+    step = lambda c, g: _slstm_step(params, cfg, c, g)
+    _, ys = jax.lax.scan(step, carry, xg)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, L, h * dh).astype(x.dtype)
+    y = rmsnorm(params["norm"], y)
+    return jnp.einsum("ble,ed->bld", y, params["wo"])
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, h, dh), -1e30, jnp.float32), "h": z}
+
+
+def slstm_decode(params: Dict, x: jnp.ndarray, state: Dict,
+                 cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    b = x.shape[0]
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    xg = jnp.einsum("bld,de->ble", x, params["wx"]).astype(jnp.float32)
+    xg = xg.reshape(b, h, 4 * dh)
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, hh), y = _slstm_step(params, cfg, carry, xg)
+    y = y.reshape(b, 1, h * dh).astype(x.dtype)
+    y = rmsnorm(params["norm"], y)
+    out = jnp.einsum("ble,ed->bld", y, params["wo"])
+    return out, {"c": c, "n": n, "m": m, "h": hh}

@@ -1,0 +1,102 @@
+"""Serverless model serving with Aquifer cold-start mitigation.
+
+`SkeletonPool` is the MicroVM-pool analogue (§3.5): pre-created server
+skeletons with all expensive host resources already provisioned — compiled
+step functions and pre-allocated KV-cache/workspace buffers — so an incoming
+invocation only needs its weights installed (borrow → flush → pre-install →
+resume) instead of paying compile + alloc on the critical path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core import Orchestrator, TimeLedger
+from ..checkpoint.ckpt import restore_checkpoint, unflatten_state
+from ..models.model_zoo import Model, build
+from .engine import ServerInstance, _decode_jit
+
+
+@dataclasses.dataclass
+class Skeleton:
+    """Pre-provisioned host resources for one instance (no weights yet)."""
+
+    cfg: ModelConfig
+    model: Model
+    caches: Any                 # pre-allocated decode state
+    batch: int
+    max_len: int
+    created_at: float = dataclasses.field(default_factory=time.perf_counter)
+
+
+class SkeletonPool:
+    """Continuously replenished pool of pre-created skeletons (§3.5)."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, max_len: int,
+                 target_size: int = 2, background: bool = True):
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.target_size = target_size
+        self.model = build(cfg)
+        _decode_jit(self.model)     # warm the compile cache once
+        self._q: "queue.Queue[Skeleton]" = queue.Queue()
+        self.stats = {"claimed": 0, "created_on_demand": 0, "replenished": 0}
+        for _ in range(target_size):
+            self._q.put(self._make())
+        self._bg = background
+        self._stop = threading.Event()
+        if background:
+            self._t = threading.Thread(target=self._replenish_loop, daemon=True)
+            self._t.start()
+
+    def _make(self) -> Skeleton:
+        caches = self.model.init_caches(None, self.batch, self.max_len)
+        return Skeleton(self.cfg, self.model, caches, self.batch, self.max_len)
+
+    def _replenish_loop(self):
+        while not self._stop.is_set():
+            if self._q.qsize() < self.target_size:
+                self._q.put(self._make())
+                self.stats["replenished"] += 1
+            else:
+                time.sleep(0.01)
+
+    def claim(self) -> Skeleton:
+        self.stats["claimed"] += 1
+        try:
+            return self._q.get_nowait()
+        except queue.Empty:
+            self.stats["created_on_demand"] += 1
+            return self._make()
+
+    def close(self):
+        self._stop.set()
+        if self._bg:
+            self._t.join(timeout=1.0)
+
+
+def restore_server(
+    orch: Orchestrator,
+    snapshot_name: str,
+    skeleton: Skeleton,
+    params_template,
+) -> Dict[str, Any]:
+    """Aquifer warm restore into a claimed skeleton.
+
+    Returns {"instance": ServerInstance, "stats": {...}} with time-to-hot
+    (params pre-installed from CXL) vs time-to-full recorded.
+    """
+    template = ({"params": params_template}
+                if "params" not in params_template else params_template)
+    state, stats = restore_checkpoint(orch, snapshot_name, template)
+    inst = ServerInstance(skeleton.model, state["params"], skeleton.caches, skeleton.max_len)
+    return {"instance": inst, "stats": stats}

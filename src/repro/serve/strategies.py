@@ -1,0 +1,213 @@
+"""The paper's five restore configurations (§5.1.3), adapted to the same
+two-tier pool so differences reflect algorithmic choices, not media:
+
+  firecracker : full image in the RDMA pool; no prefetch; every touched page
+                (including zero pages — they are stored in the full image)
+                takes a fault → RDMA read → uffd.copy.
+  reap        : prefetch the *recorded working set* (incl. its zero pages)
+                via RDMA, rest demand-paged.
+  faasnap     : prefetch only the non-zero working set via RDMA; zero-page
+                faults resolve as minor faults (uffd.zeropage); cold pages
+                demand-paged.
+  fctiered    : Aquifer snapshot format (hot→CXL, cold→RDMA, zero sentinel)
+                but no prefetch — pure demand paging over the tiers.
+  aquifer     : hot set pre-installed from CXL before resume; zero faults →
+                uffd.zeropage; cold faults → async RDMA (§3.4).
+
+Each strategy executes *real* page movement against the pool (restored bytes
+are verified) and returns **modeled** stage times (CPU wall time on this box
+says nothing about CXL/RDMA — DESIGN.md §2).  Modeled time uses the cost
+constants in core/pool.py plus a userfaultfd trap cost per major fault, with
+an optional ``scale`` that linearly extrapolates page counts to the paper's
+1.5 GiB instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from ..core import (
+    HierarchicalPool,
+    SnapshotReader,
+    StateImage,
+    TimeLedger,
+)
+from ..core.pagestore import PAGE_SIZE
+from ..core.pool import (
+    CLFLUSH_PER_LINE_S,
+    UFFD_COPY_PER_PAGE_S,
+    UFFD_ZEROPAGE_PER_PAGE_S,
+)
+from ..core.serving import Instance, RestoreEngine
+
+FAULT_TRAP_S = 10e-6         # userfaultfd trap + handler wakeup + wake ioctl
+SNAPSHOT_API_S = 1.5e-3      # Firecracker Snapshot API + uffd handshake
+MACHINE_STATE_S = 1.0e-3     # load serialized vCPU/device state
+CXL_LAT_S = 400e-9
+CXL_BW = 50e9                # emulated CXL = remote NUMA node (§5.1.1)
+RDMA_LAT_S = 3e-6
+RDMA_BW = 100e9 / 8          # per-host RNIC, shared by co-located restores
+CXL_PAGE_READ_S = CXL_LAT_S + PAGE_SIZE / CXL_BW
+RDMA_PAGE_READ_S = RDMA_LAT_S + PAGE_SIZE / RDMA_BW
+RDMA_INFLIGHT = 64
+
+
+@dataclasses.dataclass
+class RestoreResult:
+    strategy: str
+    setup_s: float               # machine state + snapshot API + prefetch
+    prefetch_s: float
+    exec_install_s: float        # page-installation time during execution
+    compute_s: float
+    stats: Dict[str, int]
+
+    @property
+    def total_s(self) -> float:
+        return self.setup_s + self.exec_install_s + self.compute_s
+
+    def breakdown(self) -> Dict[str, float]:
+        return {
+            "setup": self.setup_s - self.prefetch_s,
+            "prefetch": self.prefetch_s,
+            "exec_install": self.exec_install_s,
+            "compute": self.compute_s,
+            "total": self.total_s,
+        }
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    """Everything a strategy needs about one serverless workload."""
+
+    name: str
+    image: StateImage                    # full state image (ground truth)
+    working_set: np.ndarray              # profiled WS page indices (§3.2)
+    touched: np.ndarray                  # pages touched by THIS invocation
+    compute_s: float                     # function execution compute time
+    scale: float = 1.0                   # page-count extrapolation factor
+
+
+def _shared(serial_s: float, nbytes: int, bw: float, conc: int) -> float:
+    """Contention model: an instance is limited by its own serial path OR by
+    its fair share of the host link, whichever is slower."""
+    return max(serial_s, nbytes * conc / bw)
+
+
+def _bulk_cc(conc: int) -> int:
+    """Bulk prefetch happens in a short window right after dispatch; the
+    load balancer staggers restores, so prefetch windows only partially
+    overlap (~1/4 of co-located restores contend at once)."""
+    return max(1, conc // 4)
+
+
+def _rdma_bulk(n_pages: int, conc: int = 1) -> float:
+    """Pipelined one-sided reads (QP depth RDMA_INFLIGHT); `conc` co-located
+    restores share the RNIC bandwidth (latency is unaffected)."""
+    if n_pages <= 0:
+        return 0.0
+    serial = -(-n_pages // RDMA_INFLIGHT) * RDMA_LAT_S + n_pages * PAGE_SIZE / RDMA_BW
+    return _shared(serial, n_pages * PAGE_SIZE, RDMA_BW, _bulk_cc(conc))
+
+
+def _rdma_pages_faulted(n_pages: int, conc: int = 1) -> float:
+    """Synchronous per-fault reads: latency-serialized, bandwidth-floored."""
+    serial = n_pages * (RDMA_LAT_S + PAGE_SIZE / RDMA_BW)
+    return _shared(serial, n_pages * PAGE_SIZE, RDMA_BW, conc)
+
+
+def _cxl_pages(n_pages: int, conc: int = 1) -> float:
+    serial = n_pages * (CXL_LAT_S + PAGE_SIZE / CXL_BW)
+    return _shared(serial, n_pages * PAGE_SIZE, CXL_BW, _bulk_cc(conc))
+
+
+def _classify(spec: WorkloadSpec):
+    zero = spec.image.zero_page_bitmap()
+    ws: Set[int] = set(int(p) for p in spec.working_set)
+    touched = [int(p) for p in spec.touched]
+    t_zero = [p for p in touched if zero[p]]
+    t_hot = [p for p in touched if not zero[p] and p in ws]
+    t_cold = [p for p in touched if not zero[p] and p not in ws]
+    ws_zero = [p for p in ws if zero[p]]
+    ws_nonzero = [p for p in ws if not zero[p]]
+    return zero, t_zero, t_hot, t_cold, ws_zero, ws_nonzero
+
+
+def run_strategy(strategy: str, spec: WorkloadSpec, concurrency: int = 1) -> RestoreResult:
+    """`concurrency` co-located restores share the host's CXL link and RNIC
+    bandwidth; per-op latencies and CPU-side uffd costs are per-instance."""
+    zero, t_zero, t_hot, t_cold, ws_zero, ws_nonzero = _classify(spec)
+    sc = spec.scale
+    cc = max(1, concurrency)
+    stats = {
+        "touched": len(spec.touched), "t_zero": len(t_zero),
+        "t_hot": len(t_hot), "t_cold": len(t_cold),
+        "ws": len(spec.working_set),
+    }
+    setup = SNAPSHOT_API_S + MACHINE_STATE_S
+    prefetch = 0.0
+    exec_install = 0.0
+
+    n = lambda k: int(k * sc)  # page counts extrapolated to paper-size instances
+
+    if strategy == "firecracker":
+        # all touched pages: major fault + sync RDMA read + uffd.copy
+        nt = n(len(spec.touched))
+        exec_install = (
+            nt * (FAULT_TRAP_S + UFFD_COPY_PER_PAGE_S) + _rdma_pages_faulted(nt, cc)
+        )
+    elif strategy == "reap":
+        n_pre = n(len(spec.working_set))
+        prefetch = _rdma_bulk(n_pre, cc) + n_pre * UFFD_COPY_PER_PAGE_S
+        nc_ = n(len(t_cold))
+        exec_install = nc_ * (FAULT_TRAP_S + UFFD_COPY_PER_PAGE_S) + _rdma_pages_faulted(nc_, cc)
+    elif strategy == "faasnap":
+        n_pre = n(len(ws_nonzero))
+        prefetch = _rdma_bulk(n_pre, cc) + n_pre * UFFD_COPY_PER_PAGE_S
+        nz, nc_ = n(len(t_zero)), n(len(t_cold))
+        exec_install = (
+            nz * (FAULT_TRAP_S + UFFD_ZEROPAGE_PER_PAGE_S)
+            + nc_ * (FAULT_TRAP_S + UFFD_COPY_PER_PAGE_S) + _rdma_pages_faulted(nc_, cc)
+        )
+    elif strategy == "fctiered":
+        # Aquifer format, no prefetch: hot faults serve from CXL
+        nh, nz, nc_ = n(len(t_hot)), n(len(t_zero)), n(len(t_cold))
+        exec_install = (
+            nh * (FAULT_TRAP_S + UFFD_COPY_PER_PAGE_S) + _cxl_pages(nh, cc)
+            + nz * (FAULT_TRAP_S + UFFD_ZEROPAGE_PER_PAGE_S)
+            + nc_ * (FAULT_TRAP_S + UFFD_COPY_PER_PAGE_S) + _rdma_pages_faulted(nc_, cc)
+        )
+    elif strategy == "aquifer":
+        n_hot = n(len(ws_nonzero))
+        # serialized CXL pre-install (§5.2) + clflush of the CXL sections
+        flush = (n_hot * PAGE_SIZE / 64) * CLFLUSH_PER_LINE_S
+        prefetch = _cxl_pages(n_hot, cc) + n_hot * UFFD_COPY_PER_PAGE_S + flush
+        # cold faults overlap via async RDMA: latency hidden up to QP depth
+        nz, nc_ = n(len(t_zero)), n(len(t_cold))
+        async_cold = _rdma_bulk(nc_, cc) + nc_ * (FAULT_TRAP_S + UFFD_COPY_PER_PAGE_S)
+        exec_install = nz * (FAULT_TRAP_S + UFFD_ZEROPAGE_PER_PAGE_S) + async_cold
+    else:
+        raise ValueError(strategy)
+
+    return RestoreResult(
+        strategy=strategy,
+        setup_s=setup + prefetch,
+        prefetch_s=prefetch,
+        exec_install_s=exec_install,
+        compute_s=spec.compute_s,
+        stats=stats,
+    )
+
+
+STRATEGIES = ("firecracker", "reap", "faasnap", "fctiered", "aquifer")
+
+
+def verify_restore_correctness(pool: HierarchicalPool, reader: SnapshotReader,
+                               spec: WorkloadSpec) -> bool:
+    """Real-data check: a full Aquifer restore reproduces the image bits."""
+    inst = Instance(StateImage.empty_like(spec.image.manifest))
+    eng = RestoreEngine(reader, inst, rdma_engine=None)
+    eng.pre_install_hot()
+    eng.install_all_sync()
+    return bool(np.array_equal(inst.image.buf, spec.image.buf))

@@ -1,0 +1,244 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs for the
+production meshes.
+
+Scheme (baseline — §Perf hillclimbs start from here):
+  * 2-D param sharding: FSDP over the ``data`` axis × tensor parallelism
+    over the ``model`` axis.  Column-parallel in-projections, row-parallel
+    out-projections, vocab-parallel embeddings.
+  * MoE experts: expert-parallel over ``model`` (E % 16 == 0 for both MoE
+    archs), expert weights additionally FSDP over ``data``.
+  * Multi-pod: batch data-parallel over (pod, data); params/optimizer are
+    replicated across pods (gradient all-reduce rides the DCN), sharded
+    within a pod.
+  * KV caches: batch-sharded where the batch covers the axis; KV heads over
+    ``model`` when divisible, else head_dim; long-context batch=1 cells
+    shard the sequence axis of the cache over ``data``.
+
+Rules are path-keyed (substring match on '/'-joined param paths) with the
+trailing dims of the rule aligned to the trailing dims of the leaf — any
+leading scan-stack dims (layer, group) are replicated automatically.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+# (pattern, trailing-dims spec). First match wins; patterns are substrings
+# of the '/'-joined path. None spec entry = replicated dim.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings
+    ("embed/table", ("model", "data")),        # vocab-parallel
+    ("embed/head", ("data", "model")),
+    # MoE experts (E, D, F) / (E, F, D) — EP over model, FSDP over data
+    ("moe/wi", ("model", "data", None)),
+    ("moe/wg", ("model", "data", None)),
+    ("moe/wo", ("model", None, "data")),
+    ("moe/router", ("data", None)),
+    ("moe/shared/wi", ("data", "model")),
+    ("moe/shared/wg", ("data", "model")),
+    ("moe/shared/wo", ("model", "data")),
+    # attention projections
+    ("attn/wq", ("data", "model")),
+    ("attn/wk", ("data", "model")),
+    ("attn/wv", ("data", "model")),
+    ("attn/wo", ("model", "data")),
+    ("attn/wq_a", ("data", None)),
+    ("attn/wq_b", (None, "model")),
+    ("attn/wkv_a", ("data", None)),
+    ("attn/wkv_b", (None, "model")),
+    ("self/w", ("data", "model")),
+    ("self/wo", ("model", "data")),
+    ("cross/wo", ("model", "data")),
+    ("cross/w", ("data", "model")),
+    # MLPs
+    ("mlp/wi", ("data", "model")),
+    ("mlp/wg", ("data", "model")),
+    ("mlp/wo", ("model", "data")),
+    ("mtp/proj", ("data", None)),
+    # SSM / xLSTM
+    # fused (z|x|B|C|dt) out dim is not TP-divisible → FSDP only
+    ("mamba/in_proj", ("data", None)),
+    ("mamba/out_proj", ("model", "data")),
+    ("mlstm/wq", ("data", "model")),
+    ("mlstm/wk", ("data", "model")),
+    ("mlstm/wv", ("data", "model")),
+    ("mlstm/wog", ("data", "model")),
+    ("mlstm/wo", ("model", "data")),
+    ("slstm/wx", ("data", "model")),
+    ("slstm/wo", ("model", "data")),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, ndim: int) -> P:
+    for pat, trailing in _PARAM_RULES:
+        if pat in path:
+            if len(trailing) > ndim:
+                return P()
+            lead = (None,) * (ndim - len(trailing))
+            return P(*lead, *trailing)
+    return P()  # norms, biases, scalars: replicated
+
+
+def param_specs(params) -> Any:
+    """PartitionSpec pytree mirroring `params` (axis names: data/model)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_str(path), np.ndim(leaf)), params
+    )
+
+
+# --------------------------------------------------------------------------
+# batch / cache specs
+# --------------------------------------------------------------------------
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel axes: ('pod','data') on the multi-pod mesh else ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_specs(batch_tree, mesh: Mesh) -> Any:
+    """Shard the leading (batch) dim over the DP axes where it divides."""
+    dp = dp_axes(mesh)
+    dpn = _axis_size(mesh, dp)
+
+    def spec(leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        if shape[0] % dpn == 0 and shape[0] > 0:
+            return P(dp, *(None,) * (len(shape) - 1))
+        # small batch: try data-only
+        if "data" in mesh.axis_names and shape[0] % mesh.shape["data"] == 0:
+            return P("data", *(None,) * (len(shape) - 1))
+        return P(*(None,) * len(shape))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_specs(cache_tree, cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
+    """Decode-state sharding (see module docstring)."""
+    dp = dp_axes(mesh)
+    dpn = _axis_size(mesh, dp)
+    tp = mesh.shape.get("model", 1)
+    batch_shardable = batch % dpn == 0
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        ax: list = [None] * nd
+        # locate the batch dim: first dim equal to `batch`
+        try:
+            bdim = next(i for i, s in enumerate(shape) if s == batch and i <= 2)
+        except StopIteration:
+            bdim = None
+        if bdim is not None and batch_shardable:
+            ax[bdim] = dp
+        if ("latent" in p) or re.search(r"(^|/)(k|v|cross|self)($|/)", p) or "attn" in p:
+            # attention caches: (..., B, H, S, dh) or latent (..., B, S, r)
+            if "latent" in p:
+                sdim = nd - 2
+                if cfg.flash_decoding and shape[sdim] % tp == 0:
+                    # flash-decoding layout: sequence over the TP axis
+                    # (partial softmax combines with tiny (B,h) collectives)
+                    ax[sdim] = "model"
+                elif (bdim is None or not batch_shardable) and shape[sdim] % mesh.shape.get("data", 1) == 0:
+                    ax[sdim] = "data"
+            else:
+                hdim, sdim, ddim = nd - 3, nd - 2, nd - 1
+                if shape[hdim] % tp == 0:
+                    ax[hdim] = "model"
+                elif shape[ddim] % tp == 0:
+                    ax[ddim] = "model"
+                if (bdim is None or not batch_shardable) and shape[sdim] % mesh.shape.get("data", 1) == 0:
+                    ax[sdim] = "data"
+        elif any(k in p for k in ("ssm", "conv", "/C", "/n", "/m", "/h", "/c")):
+            pass  # recurrent states: batch dim (handled above) or replicated
+        return P(*[tuple(a) if isinstance(a, tuple) else a for a in ax])
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, *axes):
+    """Best-effort with_sharding_constraint: axes not present on the current
+    mesh degrade to replicated; no-op when no mesh is active (CPU tests)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = getattr(mesh, "axis_names", ()) or ()
+        spec = []
+        for a in axes:
+            if a is None:
+                spec.append(None)
+            elif isinstance(a, tuple):
+                ok = tuple(ax for ax in a if ax in names)
+                spec.append(ok if ok else None)
+            else:
+                spec.append(a if a in names else None)
+        if not any(s for s in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:  # no mesh context
+        return x
+
+
+def cache_constrain(x, seq_shard: bool = False):
+    """In-loop counterpart of cache_specs for a single layer's cache slice:
+    batch over DP; for (B,H,S,dh) KV caches, heads over 'model' when
+    divisible else head_dim. Pinning the carry prevents XLA from re-sharding
+    the stacked cache mid-loop (observed: f32 all-gather of the whole stack
+    over the latent dim)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = getattr(mesh, "axis_names", ()) or ()
+        if not names:
+            return x
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        dpn = 1
+        for a in dp:
+            dpn *= mesh.shape[a]
+        tp = mesh.shape.get("model", 1) if "model" in names else 1
+        nd = x.ndim
+        spec = [None] * nd
+        if dp and x.shape[0] % dpn == 0:
+            spec[0] = dp
+        if nd == 4 and "model" in names:
+            if x.shape[1] % tp == 0:
+                spec[1] = "model"
+            elif x.shape[3] % tp == 0:
+                spec[3] = "model"
+        elif nd == 3 and seq_shard and "model" in names and x.shape[1] % tp == 0:
+            spec[1] = "model"   # latent cache: sequence over TP (flash-decoding)
+        if not any(spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

@@ -1,0 +1,116 @@
+"""Training loop with Aquifer fault tolerance.
+
+Features exercised by tests/examples:
+  * periodic async checkpoint publish (non-blocking: snapshot build happens
+    on a background thread over a host copy of the state);
+  * crash/restart recovery: on start, the loop tries to borrow the latest
+    snapshot and resumes from its step counter (data pipeline skip-ahead is
+    O(1), so the restored run replays the exact batch stream);
+  * straggler-tolerant restore: compute restarts on the hot set (params)
+    while optimizer moments stream in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..core import HierarchicalPool, Orchestrator, PoolMaster
+from ..checkpoint.ckpt import restore_checkpoint, save_checkpoint
+from ..data.pipeline import DataConfig, SyntheticLMData
+from ..models.model_zoo import Model
+from .trainstep import TrainState, init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 50
+    ckpt_every: int = 20
+    ckpt_name: str = "train-ckpt"
+    async_checkpoint: bool = True
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        data: SyntheticLMData,
+        master: Optional[PoolMaster] = None,
+        orch: Optional[Orchestrator] = None,
+        loop_cfg: LoopConfig = LoopConfig(),
+        train_step: Optional[Callable] = None,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.data = data
+        pool = master.pool if master else HierarchicalPool()
+        self.master = master or PoolMaster(pool)
+        self.orch = orch or Orchestrator("trainer-host", self.master.pool, self.master.catalog)
+        self.loop_cfg = loop_cfg
+        self.train_step = jax.jit(train_step or make_train_step(model))
+        self.seed = seed
+        self.metrics_log: List[Dict] = []
+        self._ckpt_thread: Optional[threading.Thread] = None
+        self.ckpt_stats: List[Dict] = []
+
+    # -- checkpointing -------------------------------------------------------
+    def _publish(self, state_host, step: int) -> None:
+        _, stats = save_checkpoint(
+            self.master, self.loop_cfg.ckpt_name,
+            {"params": state_host.params, "opt": state_host.opt}, step,
+        )
+        stats["step"] = step
+        self.ckpt_stats.append(stats)
+
+    def checkpoint(self, state: TrainState, step: int, block: bool = False) -> None:
+        state_host = jax.tree.map(np.asarray, state)  # device→host copy
+        if self.loop_cfg.async_checkpoint and not block:
+            if self._ckpt_thread is not None:
+                self._ckpt_thread.join()
+            self._ckpt_thread = threading.Thread(
+                target=self._publish, args=(state_host, step), daemon=True
+            )
+            self._ckpt_thread.start()
+        else:
+            self._publish(state_host, step)
+
+    def try_restore(self, template: TrainState):
+        """-> (state, start_step) — cold init if no snapshot is published."""
+        try:
+            restored, stats = restore_checkpoint(
+                self.orch, self.loop_cfg.ckpt_name,
+                {"params": template.params, "opt": template.opt},
+            )
+            state = TrainState(restored["params"], restored["opt"])
+            return state, int(stats["meta"]["step"]), stats
+        except FileNotFoundError:
+            return template, 0, None
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, state: Optional[TrainState] = None, resume: bool = False):
+        if state is None:
+            state = init_train_state(self.model, jax.random.PRNGKey(self.seed))
+        start = 0
+        if resume:
+            state, start, rstats = self.try_restore(state)
+            if rstats:
+                self.metrics_log.append({"event": "restored", "step": start, **{
+                    k: rstats[k] for k in ("time_to_hot_s", "time_to_full_s")}})
+        t0 = time.perf_counter()
+        for step in range(start, self.loop_cfg.steps):
+            batch = {k: jax.numpy.asarray(v) for k, v in self.data.batch_at(step).items()}
+            state, metrics = self.train_step(state, batch)
+            if step % self.loop_cfg.log_every == 0 or step == self.loop_cfg.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=step, wall_s=time.perf_counter() - t0)
+                self.metrics_log.append(m)
+            if self.loop_cfg.ckpt_every and (step + 1) % self.loop_cfg.ckpt_every == 0:
+                self.checkpoint(state, step + 1)
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+        return state

@@ -1,0 +1,190 @@
+"""Ownership-based coherence protocol (§3.3): invariants, stale-cache
+behaviour on the emulated non-coherent CXL tier, and a multithreaded
+borrower/owner stress test."""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Catalog,
+    HierarchicalPool,
+    LeaseFallback,
+    PoolMaster,
+    STATE_PUBLISHED,
+    STATE_TOMBSTONE,
+    SnapshotReader,
+    StateImage,
+)
+from repro.core.profiler import AccessRecorder
+
+
+def publish_version(master, name, value, n=2000):
+    arr = {"data": np.full((n,), value, np.float32)}
+    img = StateImage.build(arr)
+    rec = AccessRecorder(img.manifest)
+    rec.touch_array("data")
+    master.publish(name, img, rec.working_set())
+    return img
+
+
+class TestProtocol:
+    def test_borrow_release(self):
+        pool = HierarchicalPool(32 << 20, 32 << 20)
+        master = PoolMaster(pool)
+        publish_version(master, "s", 1.0)
+        b = master.catalog.borrow("s")
+        assert b is not None
+        entry = master.catalog.find("s")
+        assert entry.refcount.load() == 1
+        b.release()
+        assert entry.refcount.load() == 0
+
+    def test_borrow_fails_on_tombstone(self):
+        pool = HierarchicalPool(32 << 20, 32 << 20)
+        master = PoolMaster(pool)
+        publish_version(master, "s", 1.0)
+        master.catalog.tombstone("s")
+        assert master.catalog.borrow("s") is None  # → cold start
+
+    def test_no_reclaim_while_borrowed(self):
+        pool = HierarchicalPool(32 << 20, 32 << 20)
+        master = PoolMaster(pool)
+        publish_version(master, "s", 1.0)
+        b = master.catalog.borrow("s")
+        master.delete("s")
+        in_use_during_borrow = pool.cxl.bytes_in_use
+        assert in_use_during_borrow > 0  # data region NOT freed yet
+        b.release()
+        master.gc()
+        assert pool.cxl.bytes_in_use < in_use_during_borrow
+
+    def test_update_waits_for_borrows(self):
+        pool = HierarchicalPool(64 << 20, 64 << 20)
+        master = PoolMaster(pool)
+        publish_version(master, "s", 1.0)
+        b = master.catalog.borrow("s")
+        done = threading.Event()
+
+        def update():
+            publish_version(master, "s", 2.0)
+            done.set()
+
+        t = threading.Thread(target=update, daemon=True)
+        t.start()
+        time.sleep(0.05)
+        assert not done.is_set()          # blocked on the active borrow
+        b.release()
+        t.join(timeout=5)
+        assert done.is_set()
+        b2 = master.catalog.borrow("s")
+        assert b2.version == 1
+        b2.release()
+
+    def test_stale_cache_without_flush_then_flush_fixes(self):
+        """The clflushopt step is load-bearing: a host that read v0 and skips
+        invalidate() observes stale bytes for v1."""
+        pool = HierarchicalPool(64 << 20, 64 << 20)
+        master = PoolMaster(pool)
+        publish_version(master, "s", 1.0)
+        view = pool.host_view("h0")
+
+        b0 = master.catalog.borrow("s")
+        r0 = SnapshotReader(b0.regions, view, pool.rdma)
+        r0.invalidate_cxl()
+        page0 = r0.read_page(int(r0.hot_page_indices()[0]))
+        b0.release()
+
+        publish_version(master, "s", 2.0)
+        b1 = master.catalog.borrow("s")
+        r1 = SnapshotReader(b1.regions, view, pool.rdma)
+        # no invalidate: stale host cache serves old bytes
+        stale = r1.read_page(int(r1.hot_page_indices()[0]))
+        assert np.array_equal(stale.view(np.float32)[:16], page0.view(np.float32)[:16])
+        # protocol-correct: invalidate → fresh bytes
+        r1b = SnapshotReader(b1.regions, pool.host_view("h0b"), pool.rdma)
+        view2 = r1.view
+        r1.invalidate_cxl()
+        fresh = r1.read_page(int(r1.hot_page_indices()[0]))
+        assert fresh.view(np.float32)[0] == 2.0
+        b1.release()
+
+    def test_lease_fallback(self):
+        pool = HierarchicalPool(32 << 20, 32 << 20)
+        master = PoolMaster(pool)
+        publish_version(master, "s", 1.0)
+        leases = LeaseFallback(master.catalog)
+        l1 = leases.acquire("s")
+        assert l1 is not None
+        assert leases.acquire("missing") is None
+        l1.release()
+        assert leases.rpc_count == 3  # acquire + release + failed acquire
+
+
+class TestStress:
+    def test_concurrent_borrowers_vs_owner_updates(self):
+        """Many borrower threads racing owner updates: every successful
+        borrow must observe internally-consistent (single-version) data."""
+        pool = HierarchicalPool(128 << 20, 128 << 20)
+        master = PoolMaster(pool)
+        publish_version(master, "s", 0.0)
+        stop = threading.Event()
+        errors = []
+
+        def borrower(hid):
+            view = pool.host_view(f"h{hid}")
+            while not stop.is_set():
+                b = master.catalog.borrow("s")
+                if b is None:
+                    continue
+                try:
+                    r = SnapshotReader(b.regions, view, pool.rdma)
+                    r.invalidate_cxl()
+                    hot = r.hot_page_indices()
+                    vals = set()
+                    for p in hot[:4]:
+                        vals.add(float(r.read_page(int(p)).view(np.float32)[0]))
+                    if len(vals) > 1:
+                        errors.append(f"torn read: {vals}")
+                finally:
+                    b.release()
+
+        threads = [threading.Thread(target=borrower, args=(i,), daemon=True)
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for v in range(1, 6):
+            publish_version(master, "s", float(v))
+        stop.set()
+        for t in threads:
+            t.join(timeout=5)
+        assert not errors, errors
+
+    @given(st.lists(st.sampled_from(["borrow", "release", "tombstone", "publish"]),
+                    min_size=1, max_size=40))
+    @settings(max_examples=30, deadline=None)
+    def test_refcount_never_negative(self, ops):
+        catalog = Catalog(capacity=4)
+        pool = HierarchicalPool(32 << 20, 32 << 20)
+        master = PoolMaster(pool, catalog)
+        publish_version(master, "s", 1.0)
+        borrows = []
+        for op in ops:
+            if op == "borrow":
+                b = catalog.borrow("s")
+                if b:
+                    borrows.append(b)
+            elif op == "release" and borrows:
+                borrows.pop().release()
+            elif op == "tombstone":
+                catalog.tombstone("s")
+            elif op == "publish" and not borrows:
+                publish_version(master, "s", 9.0)
+            entry = catalog.find("s")
+            if entry is not None:
+                assert entry.refcount.load() >= 0
+                assert entry.state.load() in (STATE_PUBLISHED, STATE_TOMBSTONE)
+        for b in borrows:
+            b.release()

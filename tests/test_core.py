@@ -1,0 +1,167 @@
+"""Unit + property tests for the Aquifer core: paged state images, the
+hotness-based snapshot format, and page serving."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PAGE_SIZE,
+    ZERO_SENTINEL,
+    HierarchicalPool,
+    Instance,
+    Orchestrator,
+    PoolMaster,
+    RestoreEngine,
+    SnapshotReader,
+    StateImage,
+    TIER_CXL,
+    TIER_RDMA,
+    classify_pages,
+    decode_slot,
+    encode_slot,
+    runs_from_pages,
+)
+from repro.core.profiler import AccessRecorder
+
+
+def make_image(seed=0, n_params=3000, n_zero_rows=64):
+    rng = np.random.default_rng(seed)
+    arrays = {
+        "params": rng.standard_normal((n_params,)).astype(np.float32),
+        "emb": np.zeros((128, 64), np.float32),
+        "arena": np.zeros((n_zero_rows, 1024), np.float32),
+    }
+    arrays["emb"][::3] = rng.standard_normal((43, 64)).astype(np.float32)
+    return StateImage.build(arrays), arrays
+
+
+class TestStateImage:
+    def test_roundtrip(self):
+        img, arrays = make_image()
+        for name, arr in arrays.items():
+            np.testing.assert_array_equal(img.read_array(name), arr)
+
+    def test_page_alignment(self):
+        img, _ = make_image()
+        for e in img.manifest.extents:
+            assert e.byte_offset % PAGE_SIZE == 0
+
+    def test_zero_bitmap(self):
+        img, _ = make_image()
+        zb = img.zero_page_bitmap()
+        arena = img.manifest.by_name()["arena"]
+        assert zb[list(arena.pages())].all()
+        params = img.manifest.by_name()["params"]
+        assert not zb[params.first_page]
+
+    @given(st.lists(st.integers(0, 500), max_size=60))
+    @settings(max_examples=50, deadline=None)
+    def test_runs_roundtrip(self, pages):
+        runs = runs_from_pages(pages)
+        # runs are disjoint, sorted, and cover exactly the page set
+        out = []
+        for s, n in runs:
+            assert n >= 1
+            out.extend(range(s, s + n))
+        assert out == sorted(set(pages))
+
+
+class TestSnapshotFormat:
+    def test_slot_encoding(self):
+        for tier in (TIER_CXL, TIER_RDMA):
+            for off in (0, PAGE_SIZE, 123 * PAGE_SIZE, (1 << 40)):
+                t, o = decode_slot(encode_slot(tier, off))
+                assert (t, o) == (tier, off)
+
+    def test_classify(self):
+        img, _ = make_image()
+        rec = AccessRecorder(img.manifest)
+        rec.touch_array("params")
+        rec.touch_rows("emb", [0, 3])
+        classes = classify_pages(img, rec.working_set())
+        s = classes.summary()
+        assert s["zero"] + s["hot"] + s["cold"] == s["total"]
+        # zero pages are never stored
+        assert s["zero"] >= img.manifest.by_name()["arena"].page_count
+
+    def test_offset_array_sentinel_and_tiers(self):
+        img, _ = make_image()
+        rec = AccessRecorder(img.manifest)
+        rec.touch_array("params")
+        pool = HierarchicalPool(64 << 20, 64 << 20)
+        master = PoolMaster(pool)
+        regions = master.publish("t", img, rec.working_set())
+        view = pool.host_view("h0")
+        reader = SnapshotReader(regions, view, pool.rdma)
+        oa = reader.offset_array()
+        zb = img.zero_page_bitmap()
+        for p in range(img.total_pages):
+            if zb[p]:
+                assert oa[p] == ZERO_SENTINEL
+        # hot pages point at CXL, cold at RDMA
+        assert set(np.asarray(reader.hot_page_indices())) <= set(rec.working_set().tolist())
+
+    def test_restore_bit_identical(self):
+        img, _ = make_image(seed=7)
+        rec = AccessRecorder(img.manifest)
+        rec.touch_array("params")
+        pool = HierarchicalPool(64 << 20, 64 << 20)
+        master = PoolMaster(pool)
+        master.publish("t", img, rec.working_set())
+        orch = Orchestrator("h0", pool, master.catalog, use_async_rdma=True)
+        ri = orch.restore("t")
+        assert ri is not None
+        for p in range(img.total_pages):
+            ri.engine.access(p)
+        assert np.array_equal(ri.instance.image.buf, img.buf)
+        # hot set was pre-installed, zero pages took the zeropage fast path
+        assert ri.instance.stats["pre_installed"] > 0
+        assert ri.instance.stats["uffd_zeropages"] > 0
+        assert ri.instance.stats["fault_rdma"] > 0
+        ri.shutdown()
+
+    def test_snapshot_immutable_across_concurrent_restores(self):
+        img, _ = make_image(seed=3)
+        rec = AccessRecorder(img.manifest)
+        rec.touch_array("params")
+        pool = HierarchicalPool(64 << 20, 64 << 20)
+        master = PoolMaster(pool)
+        master.publish("t", img, rec.working_set())
+        before = pool.cxl.buf.copy()
+        orchs = [Orchestrator(f"h{i}", pool, master.catalog, use_async_rdma=False)
+                 for i in range(3)]
+        ris = [o.restore("t") for o in orchs]
+        for ri in ris:
+            ri.engine.install_all_sync()
+            assert np.array_equal(ri.instance.image.buf, img.buf)
+            ri.shutdown()
+        np.testing.assert_array_equal(pool.cxl.buf, before)  # pool untouched
+
+
+class TestEviction:
+    def test_borrow_counter_eviction(self):
+        img, _ = make_image(n_params=500, n_zero_rows=8)
+        rec = AccessRecorder(img.manifest)
+        rec.touch_array("params")
+        pool = HierarchicalPool(64 << 20, 64 << 20)
+        master = PoolMaster(pool)
+        for name in ("a", "b", "c"):
+            master.publish(name, img, rec.working_set())
+        # borrow "a" a lot, "b" once, "c" never
+        for _ in range(5):
+            master.catalog.borrow("a").release()
+        master.catalog.borrow("b").release()
+        evicted = master.evict_for(1)
+        assert evicted[0] == "c"
+
+
+class TestCapacityTradeoffs:
+    def test_zero_elimination_shrinks_pool_usage(self):
+        img, _ = make_image(n_zero_rows=512)   # mostly zero pages
+        rec = AccessRecorder(img.manifest)
+        rec.touch_array("params")
+        pool = HierarchicalPool(256 << 20, 256 << 20)
+        master = PoolMaster(pool)
+        regions = master.publish("t", img, rec.working_set())
+        stored = regions.cxl_size + regions.rdma_size
+        assert stored < img.buf.nbytes / 2  # >=50% shrink from zero-elim

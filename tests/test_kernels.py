@@ -1,0 +1,143 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles
+over shape/dtype sweeps, plus hypothesis property tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (
+    flash_attention,
+    page_checksum,
+    page_gather,
+    page_scatter,
+    zero_detect,
+)
+from repro.kernels.flash_attention.ref import attention_ref, chunked_attention_ref
+from repro.kernels.page_checksum.ref import page_checksum_ref, poly_weights
+from repro.kernels.zero_detect.ref import zero_detect_ref
+
+
+class TestZeroDetect:
+    @pytest.mark.parametrize("dtype,page_elems", [
+        (np.float32, 1024), (np.float32, 2048),
+        (np.int8, 4096), (np.uint8, 4096), (np.float16, 2048),
+    ])
+    @pytest.mark.parametrize("n_pages", [1, 7, 256, 300])
+    def test_sweep(self, dtype, page_elems, n_pages):
+        rng = np.random.default_rng(hash((n_pages, page_elems)) % 2**31)
+        if np.issubdtype(dtype, np.floating):
+            pages = rng.standard_normal((n_pages, page_elems)).astype(dtype)
+        else:
+            pages = rng.integers(0, 100, (n_pages, page_elems)).astype(dtype)
+        zero_idx = rng.choice(n_pages, size=max(1, n_pages // 3), replace=False)
+        pages[zero_idx] = 0
+        got = zero_detect(pages, use_pallas=True, interpret=True, block_pages=8)
+        want = zero_detect_ref(jnp.asarray(pages))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(st.integers(1, 64), st.integers(0, 63))
+    @settings(max_examples=20, deadline=None)
+    def test_property_single_nonzero_elem(self, n_pages, elem):
+        """A single nonzero element anywhere makes exactly that page hot."""
+        pages = np.zeros((n_pages, 256), np.float32)
+        p = elem % n_pages
+        pages[p, elem % 256] = 1.0
+        got = np.asarray(zero_detect(pages, use_pallas=True, interpret=True,
+                                     block_pages=8))
+        assert got[p] == 0
+        assert got.sum() == n_pages - 1
+
+
+class TestGatherScatter:
+    @pytest.mark.parametrize("dtype", [np.float32, np.int8])
+    @pytest.mark.parametrize("n,m", [(16, 4), (100, 33), (256, 256)])
+    def test_gather_sweep(self, dtype, n, m):
+        rng = np.random.default_rng(1)
+        pages = rng.standard_normal((n, 512)).astype(np.float32).astype(dtype)
+        idx = rng.choice(n, size=m, replace=False).astype(np.int32)
+        got = page_gather(pages, idx, use_pallas=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), pages[idx])
+
+    @pytest.mark.parametrize("n,m", [(16, 4), (64, 17)])
+    def test_scatter_sweep(self, n, m):
+        rng = np.random.default_rng(2)
+        dest = rng.standard_normal((n, 512)).astype(np.float32)
+        compact = rng.standard_normal((m, 512)).astype(np.float32)
+        idx = rng.choice(n, size=m, replace=False).astype(np.int32)
+        got = page_scatter(dest.copy(), compact, idx, use_pallas=True, interpret=True)
+        want = dest.copy()
+        want[idx] = compact
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+    @given(st.integers(2, 40))
+    @settings(max_examples=15, deadline=None)
+    def test_property_gather_scatter_inverse(self, n):
+        """scatter(gather(img)) with the same indices is identity."""
+        rng = np.random.default_rng(n)
+        img = rng.standard_normal((n, 256)).astype(np.float32)
+        idx = rng.permutation(n)[: max(1, n // 2)].astype(np.int32)
+        compact = page_gather(img, idx, use_pallas=True, interpret=True)
+        back = page_scatter(jnp.asarray(img).copy(), compact, idx,
+                            use_pallas=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(back), img)
+
+
+class TestChecksum:
+    @pytest.mark.parametrize("n_pages", [1, 17, 64])
+    def test_sweep(self, n_pages):
+        rng = np.random.default_rng(3)
+        pages = rng.integers(0, 256, (n_pages, 4096), dtype=np.uint8)
+        got = page_checksum(pages, use_pallas=True, interpret=True, block_pages=8)
+        want = page_checksum_ref(
+            jnp.asarray(pages.view(np.uint32).reshape(n_pages, -1)), poly_weights(1024))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_collision_resistance_on_flip(self):
+        page = np.zeros((1, 4096), np.uint8)
+        base = int(np.asarray(page_checksum(page, use_pallas=True, interpret=True, block_pages=8))[0])
+        flipped = page.copy()
+        flipped[0, 1234] = 1
+        other = int(np.asarray(page_checksum(flipped, use_pallas=True, interpret=True, block_pages=8))[0])
+        assert base != other
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,sq,skv,dk,dv", [
+        (1, 4, 4, 128, 128, 64, 64),      # MHA
+        (2, 8, 2, 256, 256, 64, 64),      # GQA 4:1
+        (1, 4, 1, 128, 256, 64, 64),      # MQA, chunked-prefill (Sq<Skv)
+        (1, 2, 2, 128, 128, 192, 128),    # MLA-style dk != dv
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_sweep(self, b, hq, hkv, sq, skv, dk, dv, causal):
+        rng = np.random.default_rng(4)
+        q = rng.standard_normal((b, hq, sq, dk)).astype(np.float32)
+        k = rng.standard_normal((b, hkv, skv, dk)).astype(np.float32)
+        v = rng.standard_normal((b, hkv, skv, dv)).astype(np.float32)
+        got = flash_attention(q, k, v, causal=causal, use_pallas=True,
+                              interpret=True, block_q=128, block_k=128)
+        want = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(5)
+        q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.bfloat16)
+        k = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.bfloat16)
+        v = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.bfloat16)
+        got = flash_attention(q, k, v, use_pallas=True, interpret=True,
+                              block_q=128, block_k=128)
+        want = attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), rtol=2e-2, atol=2e-2)
+
+    def test_chunked_oracle_matches_naive(self):
+        """The long-sequence CPU path (chunked online softmax) == naive."""
+        rng = np.random.default_rng(6)
+        q = rng.standard_normal((1, 2, 256, 32)).astype(np.float32)
+        k = rng.standard_normal((1, 2, 256, 32)).astype(np.float32)
+        v = rng.standard_normal((1, 2, 256, 32)).astype(np.float32)
+        got = chunked_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                                    causal=True, block_k=64)
+        want = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

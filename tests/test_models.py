@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests + decode-vs-forward parity for every family.
+
+Smoke: REDUCED configs of each assigned arch run one forward + one decode
+step on CPU, asserting output shapes and no NaNs (full configs are exercised
+by the dry-run only).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import all_arch_names, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, cell_supported
+from repro.models.model_zoo import build
+from repro.models.common import embed
+
+KEY = jax.random.PRNGKey(0)
+SMALL_TRAIN = ShapeSpec("t", 64, 2, "train")
+SMALL_DECODE = ShapeSpec("d", 64, 2, "decode")
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_smoke_forward_and_decode(arch, rng):
+    cfg = get_config(arch).reduced()
+    m = build(cfg)
+    params = m.init(KEY)
+    batch = m.make_batch(rng, SMALL_TRAIN)
+    logits, aux = m.forward(params, batch)
+    assert logits.shape == (2, 64, cfg.padded_vocab)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    caches = m.init_caches(params, 2, 64)
+    db = m.make_batch(rng, SMALL_DECODE)
+    dlogits, _ = m.decode_step(params, db, caches)
+    assert dlogits.shape == (2, 1, cfg.padded_vocab)
+    assert not np.any(np.isnan(np.asarray(dlogits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_full_configs_param_counts(arch):
+    """Analytic parameter counts should be in the advertised ballpark."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "qwen2-vl-72b": 72e9, "qwen2.5-32b": 32e9, "qwen2.5-14b": 14e9,
+        "mistral-large-123b": 123e9, "phi4-mini-3.8b": 3.8e9,
+        "xlstm-125m": 125e6, "deepseek-v3-671b": 671e9,
+        "olmoe-1b-7b": 7e9, "zamba2-2.7b": 2.7e9,
+        "seamless-m4t-medium": 1.2e9,
+    }[arch]
+    assert 0.5 * expected < n < 1.7 * expected, f"{arch}: {n:.3e} vs {expected:.3e}"
+
+
+def _decode_all(m, params, tokens, caches):
+    outs = []
+    for t in range(tokens.shape[1]):
+        lg, caches = m.decode_step(
+            params, {"tokens": tokens[:, t:t + 1], "pos": jnp.asarray(t, jnp.int32)}, caches)
+        outs.append(lg[:, 0])
+    return jnp.stack(outs, axis=1)
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen2.5-14b", "mistral-large-123b", "phi4-mini-3.8b",
+    "xlstm-125m", "zamba2-2.7b",
+])
+def test_decode_parity(arch, rng):
+    """Single-token decode with caches == full-sequence forward."""
+    S = 16
+    kw = dict(compute_dtype="float32", param_dtype="float32")
+    cfg = get_config(arch).reduced(**kw)
+    if cfg.family in ("ssm", "hybrid"):
+        cfg = cfg.reduced(**kw, ssm_chunk=8)
+    m = build(cfg)
+    params = m.init(KEY)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, S)), jnp.int32)
+    full, _ = m.forward(params, {"tokens": tokens})
+    dec = _decode_all(m, params, tokens, m.init_caches(params, 2, S))
+    rel = float(jnp.abs(full - dec).max()) / float(jnp.abs(full).max())
+    assert rel < 2e-3, rel
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v3-671b", "olmoe-1b-7b"])
+def test_decode_parity_moe_nodrop(arch, rng):
+    """MoE parity holds under a no-drop capacity factor (dropping is
+    group-dependent by design)."""
+    S = 16
+    base = get_config(arch).reduced(compute_dtype="float32", param_dtype="float32")
+    cfg = base.reduced(compute_dtype="float32", param_dtype="float32",
+                       capacity_factor=float(base.n_experts) / base.top_k)
+    m = build(cfg)
+    params = m.init(KEY)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, S)), jnp.int32)
+    full, _ = m.forward(params, {"tokens": tokens})
+    dec = _decode_all(m, params, tokens, m.init_caches(params, 2, S))
+    rel = float(jnp.abs(full - dec).max()) / float(jnp.abs(full).max())
+    assert rel < 2e-3, rel
+
+
+def test_decode_parity_vlm(rng):
+    """Full M-RoPE decode path == forward when vision embeds are the token
+    embeddings (removes the modality difference, keeps the position math)."""
+    S = 32
+    cfg = get_config("qwen2-vl-72b").reduced(compute_dtype="float32",
+                                             param_dtype="float32")
+    m = build(cfg)
+    params = m.init(KEY)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, S)), jnp.int32)
+    vis = embed(params["embed"], tokens[:, :cfg.vision_prefix], jnp.float32)
+    full, _ = m.forward(params, {"tokens": tokens, "vision_embeds": vis})
+    dec = _decode_all(m, params, tokens, m.init_caches(params, 2, S))
+    rel = float(jnp.abs(full - dec).max()) / float(jnp.abs(full).max())
+    assert rel < 2e-5, rel
+
+
+def test_decode_parity_encdec(rng):
+    S = 16
+    cfg = get_config("seamless-m4t-medium").reduced(compute_dtype="float32",
+                                                    param_dtype="float32")
+    m = build(cfg)
+    params = m.init(KEY)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, S)), jnp.int32)
+    frames = jnp.asarray(rng.standard_normal((2, S, cfg.d_model)), jnp.float32)
+    full, _ = m.forward(params, {"tokens": tokens, "frames": frames})
+    from repro.models.encdec import encode
+    enc_out = encode(params, frames, cfg)
+    caches = m.init_caches(params, 2, S, enc_out=enc_out)
+    dec = _decode_all(m, params, tokens, caches)
+    rel = float(jnp.abs(full - dec).max()) / float(jnp.abs(full).max())
+    assert rel < 2e-3, rel
+
+
+def test_mamba2_chunk_invariance(rng):
+    """SSD chunked scan must be chunk-size invariant (same math)."""
+    from repro.models import ssm
+    cfg = get_config("zamba2-2.7b").reduced(compute_dtype="float32",
+                                            param_dtype="float32")
+    params = ssm.init_mamba2(KEY, cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 32, cfg.d_model)), jnp.float32)
+    import dataclasses
+    y8 = ssm.mamba2_ssd(params, x, dataclasses.replace(cfg, ssm_chunk=8))
+    y16 = ssm.mamba2_ssd(params, x, dataclasses.replace(cfg, ssm_chunk=16))
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y16), rtol=2e-4, atol=2e-5)
+
+
+def test_long_500k_cell_support_flags():
+    runs = {a: cell_supported(get_config(a), SHAPES["long_500k"])[0]
+            for a in all_arch_names()}
+    assert runs == {
+        "qwen2-vl-72b": False, "qwen2.5-32b": False, "qwen2.5-14b": False,
+        "mistral-large-123b": False, "phi4-mini-3.8b": False,
+        "xlstm-125m": True, "deepseek-v3-671b": False, "olmoe-1b-7b": False,
+        "zamba2-2.7b": True, "seamless-m4t-medium": False,
+    }

@@ -1,0 +1,91 @@
+"""Sharding-rule validation without compilation: every param/cache/batch
+spec must divide the production mesh axis sizes for every assigned arch —
+this is the fast sanity layer under the dry-run."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import all_arch_names, get_config
+from repro.configs.shapes import SHAPES, cell_supported
+from repro.models.model_zoo import build
+from repro.sharding.partition import batch_specs, cache_specs, param_specs
+from repro.sharding.collectives import compress_tree
+
+AXES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _check_divisible(tree_specs, tree_sds, what):
+    problems = []
+
+    def walk(spec, leaf):
+        shape = leaf.shape
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= AXES[a]
+            if dim >= len(shape) or shape[dim] % n != 0:
+                problems.append(f"{what}: {shape} dim{dim} % {n} != 0 ({ax})")
+
+    jax.tree.map(walk, tree_specs, tree_sds,
+                 is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return problems
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_param_specs_divide_production_mesh(arch):
+    cfg = get_config(arch)
+    model = build(cfg)
+    sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(sds)
+    problems = _check_divisible(specs, sds, arch)
+    assert not problems, problems[:5]
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "deepseek-v3-671b", "zamba2-2.7b",
+                                  "xlstm-125m", "seamless-m4t-medium"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divide(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, _ = cell_supported(cfg, shape)
+    if not ok:
+        pytest.skip("cell not supported")
+    from repro.launch.mesh import make_host_mesh  # any mesh: specs are static
+    model = build(cfg)
+    caches = jax.eval_shape(
+        lambda: model.init_caches(None, shape.global_batch, shape.seq_len))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    specs = cache_specs(caches, cfg, FakeMesh(), shape.global_batch)
+    problems = _check_divisible(specs, caches, f"{arch}/{shape_name}")
+    assert not problems, problems[:5]
+
+
+def test_batch_specs_shard_batch_dim():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    sds = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+           "odd": jax.ShapeDtypeStruct((7, 3), jnp.float32)}
+    specs = batch_specs(sds, FakeMesh())
+    assert specs["tokens"] == jax.sharding.PartitionSpec(("pod", "data"), None)
+    assert specs["odd"] == jax.sharding.PartitionSpec(None, None)
+
+
+def test_compress_tree_preserves_shapes_and_bounds_error():
+    rng = np.random.default_rng(0)
+    tree = {"a": jnp.asarray(rng.standard_normal((32, 8)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((5,)) * 100, jnp.float32)}
+    out = compress_tree(tree)
+    for k in tree:
+        assert out[k].shape == tree[k].shape
+        scale = float(jnp.abs(tree[k]).max()) / 127.0
+        assert float(jnp.abs(out[k] - tree[k]).max()) <= scale * 0.51
