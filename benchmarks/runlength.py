@@ -8,7 +8,8 @@ from pathlib import Path
 import numpy as np
 
 from repro.core.pagestore import runs_from_pages
-from repro.core.pool import MMAP_PER_RANGE_S, UFFD_COPY_PER_PAGE_S
+from repro.core.pool import UFFD_COPY_PER_PAGE_S
+from repro.core.serving import mmap_install_cost
 from repro.core.snapshot import classify_pages
 from .workloads import all_workloads, get_workload
 
@@ -25,7 +26,7 @@ def run() -> dict:
         runs = runs_from_pages(hot)
         lens = np.asarray([n for _, n in runs], dtype=np.float64)
         all_lens.extend(lens.tolist())
-        mmap_cost = len(hot) * MMAP_PER_RANGE_S
+        mmap_cost = mmap_install_cost(hot)   # per-page term + per-range syscalls
         uffd_cost = len(hot) * UFFD_COPY_PER_PAGE_S
         rows.append({
             "workload": name,

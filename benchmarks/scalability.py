@@ -8,7 +8,7 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.serve.strategies import STRATEGIES, run_strategy
+from repro.serve.strategies import STRATEGIES, hot_preinstall_time, run_strategy
 from .workloads import all_workloads, get_workload
 
 OUT = Path(__file__).resolve().parents[1] / "experiments"
@@ -17,13 +17,22 @@ CONCURRENCY = (1, 2, 4, 8, 12, 16, 24, 32)
 
 def run() -> dict:
     results = {}
+    preinstall = {}
     for name in all_workloads():
         spec = get_workload(name).spec()
         per = {}
         for strat in STRATEGIES:
             per[strat] = {str(n): run_strategy(strat, spec, concurrency=n).total_s
                           for n in CONCURRENCY}
+        # run-batching ablation: Aquifer with strictly page-at-a-time installs
+        per["aquifer_perpage"] = {
+            str(n): run_strategy("aquifer", spec, concurrency=n, batched=False).total_s
+            for n in CONCURRENCY}
         results[name] = per
+        pp = hot_preinstall_time(spec, batched=False)
+        bt = hot_preinstall_time(spec, batched=True)
+        preinstall[name] = {"per_page_s": pp, "batched_s": bt,
+                            "speedup": pp / max(bt, 1e-12)}
 
     # geomean speedups at n=32 (paper's headline setting)
     def geomean(xs):
@@ -43,6 +52,7 @@ def run() -> dict:
         "results": results,
         "geomean_speedups_at_32": speedups,
         "fastest_strategy_per_workload": fastest,
+        "hot_preinstall_per_page_vs_batched": preinstall,
         "paper": {"vs_firecracker": 2.2, "vs_faasnap": 1.3, "vs_reap": 1.1,
                   "note": "REAP beats Aquifer on ffmpeg (zero pages in WS)"},
     }
@@ -61,6 +71,11 @@ def main():
     print(f"\ngeomean speedup of Aquifer @32: vs firecracker {g['vs_firecracker']:.2f}x "
           f"(paper 2.2x) | vs faasnap {g['vs_faasnap']:.2f}x (paper 1.3x) | "
           f"vs reap {g['vs_reap']:.2f}x (paper 1.1x)")
+    pre = out["hot_preinstall_per_page_vs_batched"]
+    print("hot pre-install per-page vs batched (per-instance):")
+    for w, r in pre.items():
+        print(f"  {w:14s} {r['per_page_s']*1e3:8.2f} ms -> {r['batched_s']*1e3:8.2f} ms "
+              f"({r['speedup']:.2f}x)")
     print(f"fastest per workload: {out['fastest_strategy_per_workload']}")
 
 

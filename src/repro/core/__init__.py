@@ -34,6 +34,7 @@ from .snapshot import (
     decode_slot,
     encode_slot,
     free_snapshot,
+    runs_of_indices,
 )
 from .coherence import (
     STATE_FREE,
@@ -45,7 +46,13 @@ from .coherence import (
     CatalogEntry,
     LeaseFallback,
 )
-from .serving import AsyncRDMAEngine, BufferPool, Instance, RestoreEngine
+from .serving import (
+    AsyncRDMAEngine,
+    BufferPool,
+    Instance,
+    RestoreEngine,
+    mmap_install_cost,
+)
 from .profiler import AccessRecorder, WorkloadProfile, profile_invocations
 from .master import PoolMaster
 from .orchestrator import Orchestrator, RestoredInstance

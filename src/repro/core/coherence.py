@@ -140,6 +140,14 @@ class Catalog:
         entry = self.find(name)
         if entry is None:
             return None
+        # 0) fast-path reject on a non-published entry WITHOUT touching the
+        # refcount.  Doomed borrows (inc → CAS-fail → dec) are protocol-safe
+        # but their transient increments can livelock the owner's
+        # wait-for-drain when borrowers retry in a tight loop; testing the
+        # state first makes them rare.  A stale PUBLISHED read here only
+        # leads to the doomed-borrow path below, which remains correct.
+        if entry.state.load() != STATE_PUBLISHED:
+            return None
         # 1) refcount++ first (closes the owner-sees-zero window)
         entry.refcount.fetch_add(1)
         # 2) CAS state expecting PUBLISHED — atomic, ordered after the increment

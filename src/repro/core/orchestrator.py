@@ -30,6 +30,8 @@ class RestoredInstance:
 
     def shutdown(self) -> None:
         self.engine.stop()
+        if self.engine.rdma_engine is not None:
+            self.engine.rdma_engine.close()
         self.borrow.release()
 
 
@@ -43,17 +45,29 @@ class Orchestrator:
         catalog: Catalog,
         use_async_rdma: bool = True,
         buffer_pool_pages: int = 256,
+        prefetch_cold: bool = False,
+        max_extent_pages: int = 64,
+        scatter_fn=None,
     ):
         self.host = host
         self.pool = pool
         self.catalog = catalog
         self.use_async_rdma = use_async_rdma
         self.buffer_pool_pages = buffer_pool_pages
+        self.prefetch_cold = prefetch_cold
+        self.max_extent_pages = max_extent_pages
+        self.scatter_fn = scatter_fn
         self.stats = {"warm_restores": 0, "cold_starts": 0}
         self._lock = threading.Lock()
 
-    def restore(self, name: str, pre_install: bool = True) -> Optional[RestoredInstance]:
-        """Warm-restore an instance from the pool; None ⇒ caller cold-boots."""
+    def restore(self, name: str, pre_install: bool = True,
+                prefetch_cold: Optional[bool] = None) -> Optional[RestoredInstance]:
+        """Warm-restore an instance from the pool; None ⇒ caller cold-boots.
+
+        The hot set is pre-installed run-at-a-time (one CXL read + one
+        uffd.copy ioctl per contiguous run); with ``prefetch_cold`` the cold
+        runs are additionally streamed in the background as multi-page RDMA
+        extents while demand faults retain priority (§3.4)."""
         borrow = self.catalog.borrow(name)
         if borrow is None or borrow.regions is None:
             with self._lock:
@@ -72,11 +86,15 @@ class Orchestrator:
             AsyncRDMAEngine(self.pool.rdma, ledger) if self.use_async_rdma else None
         )
         engine = RestoreEngine(
-            reader, instance, rdma_engine, BufferPool(self.buffer_pool_pages)
+            reader, instance, rdma_engine, BufferPool(self.buffer_pool_pages),
+            scatter_fn=self.scatter_fn,
         )
         if pre_install:
             engine.pre_install_hot()
         engine.start_completion_handler()
+        do_prefetch = self.prefetch_cold if prefetch_cold is None else prefetch_cold
+        if do_prefetch:
+            engine.start_prefetcher(self.max_extent_pages)
         with self._lock:
             self.stats["warm_restores"] += 1
         return RestoredInstance(name, instance, engine, borrow, ledger)

@@ -56,10 +56,29 @@ class CostModel:
 # Calibrated defaults (DESIGN.md §8).
 CXL_COST = CostModel(op_latency_s=400e-9, bandwidth_Bps=50e9, max_inflight=1)
 RDMA_COST = CostModel(op_latency_s=3e-6, bandwidth_Bps=100e9 / 8, max_inflight=64)
-UFFD_COPY_PER_PAGE_S = 1.1e-6          # uffd.copy() per 4 KiB page
-UFFD_ZEROPAGE_PER_PAGE_S = 0.55e-6     # uffd.zeropage(): no source read
-MMAP_PER_RANGE_S = UFFD_COPY_PER_PAGE_S * 2.6  # paper: mmap 2.6x slower per page
+# uffd ioctl cost split: a fixed syscall/wakeup component amortized over a
+# contiguous range, plus an incremental per-4KiB-page copy component.  The
+# single-page constants below are their sum, so the batched and per-page
+# paths agree exactly at n=1 and batching can only amortize, never undercount.
+UFFD_IOCTL_S = 0.6e-6                  # fixed cost per uffd.copy ioctl (syscall+wake)
+UFFD_COPY_PAGE_S = 0.5e-6              # per-page copy within one uffd.copy range
+UFFD_ZEROPAGE_IOCTL_S = 0.4e-6         # fixed cost per uffd.zeropage ioctl (no copy setup)
+UFFD_ZEROPAGE_PAGE_S = 0.15e-6         # per-page cost within one uffd.zeropage range
+UFFD_COPY_PER_PAGE_S = UFFD_IOCTL_S + UFFD_COPY_PAGE_S        # 1.1 µs single page
+UFFD_ZEROPAGE_PER_PAGE_S = UFFD_ZEROPAGE_IOCTL_S + UFFD_ZEROPAGE_PAGE_S  # 0.55 µs
+MMAP_PER_PAGE_S = UFFD_COPY_PER_PAGE_S * 2.6   # paper: mmap 2.6x slower per page
+MMAP_SYSCALL_S = 1.0e-6     # fixed mmap()+setup cost per mapped range (§2.3.4)
 CLFLUSH_PER_LINE_S = 2e-9   # clflushopt of *uncached* lines: ~issue cost
+
+
+def uffd_copy_batch_cost(n_pages: int, n_ranges: int = 1) -> float:
+    """Modeled cost of installing `n_pages` via `n_ranges` uffd.copy ioctls."""
+    return n_ranges * UFFD_IOCTL_S + n_pages * UFFD_COPY_PAGE_S
+
+
+def uffd_zeropage_range_cost(n_pages: int, n_ranges: int = 1) -> float:
+    """Modeled cost of zero-filling `n_pages` via `n_ranges` uffd.zeropage ioctls."""
+    return n_ranges * UFFD_ZEROPAGE_IOCTL_S + n_pages * UFFD_ZEROPAGE_PAGE_S
 
 
 class AllocError(RuntimeError):
@@ -146,7 +165,8 @@ class HostView:
         self.tier = tier
         self.ledger = ledger or TimeLedger()
         self._cache: Dict[int, np.ndarray] = {}  # line index -> 64B snapshot
-        self.stats = {"cached_reads": 0, "pool_reads": 0, "flushed_lines": 0}
+        self.stats = {"cached_reads": 0, "pool_reads": 0, "flushed_lines": 0,
+                      "bytes_read": 0}
 
     def read(self, offset: int, nbytes: int) -> np.ndarray:
         out = np.empty(nbytes, dtype=np.uint8)
@@ -165,6 +185,7 @@ class HostView:
                 self.stats["cached_reads"] += 1
             out[pos : pos + hi - lo] = cached[lo - line * CACHELINE : hi - line * CACHELINE]
             pos += hi - lo
+        self.stats["bytes_read"] += nbytes
         self.ledger.add("cxl_read", self.tier.cost.xfer_time(nbytes))
         return out
 

@@ -1,45 +1,64 @@
-"""Copy-based page serving (§3.4, §4).
+"""Copy-based page serving (§3.4, §4) — run-coalesced.
 
 Restore = (1) pre-install the hot set from CXL *before* resume, then
-(2) demand-page cold pages asynchronously from RDMA while the instance runs.
+(2) demand-page cold pages asynchronously from RDMA while the instance runs,
+optionally with a background extent prefetcher walking the cold runs.
 
-All installs go through the ``uffd.copy()`` analogue (`Instance.uffd_copy`),
-which writes a *private copy* into the instance's address space — the
-pool-resident snapshot is never modified, preserving immutability across
-concurrent restores without file-backed CoW.  Zero-page faults take the
-``uffd.zeropage()`` fast path (§4).
+All installs go through the ``uffd.copy()`` analogue (`Instance.uffd_copy` /
+`Instance.uffd_copy_batch`), which writes a *private copy* into the
+instance's address space — the pool-resident snapshot is never modified,
+preserving immutability across concurrent restores without file-backed CoW.
+Zero-page faults take the ``uffd.zeropage()`` fast path (§4);
+`uffd_zeropage_range` is the range form of the same ioctl.
+
+Hot sets are dominated by long contiguous runs (Fig. 4), so the hot
+pre-install walks the snapshot's run index: ONE CXL read per run (one
+op-latency amortized over the whole run) and ONE uffd.copy ioctl per run
+(the fixed syscall cost amortized the same way).  See DESIGN.md §5.
 
 Async RDMA fault handling mirrors the paper: the fault handler grabs a free
 buffer page, posts a one-sided read, and returns immediately; a completion
 thread drains the CQ (hybrid busy-poll then event wait) and installs fetched
-pages.  The fault handler is never blocked on the network.
+pages.  The fault handler is never blocked on the network.  Demand reads are
+posted at high priority so they overtake queued prefetch extents (§3.4).
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
 from .pagestore import PAGE_SIZE, StateImage, runs_from_pages
 from .pool import (
-    MMAP_PER_RANGE_S,
+    MMAP_PER_PAGE_S,
+    MMAP_SYSCALL_S,
     UFFD_COPY_PER_PAGE_S,
     UFFD_ZEROPAGE_PER_PAGE_S,
     MemoryTier,
     TimeLedger,
+    uffd_copy_batch_cost,
+    uffd_zeropage_range_cost,
 )
 from .snapshot import SnapshotReader
+
+# scatter_fn(dest_matrix, compact, indices) -> dest_matrix; the numpy oracle
+# is a vectorized fancy-index store, the Pallas `page_scatter` op plugs in
+# behind the same signature (kernels/page_scatter).
+ScatterFn = Callable[[np.ndarray, np.ndarray, np.ndarray], np.ndarray]
 
 
 class Instance:
     """A restoring/running instance's guest address space + present bitmap."""
 
-    def __init__(self, image: StateImage, ledger: Optional[TimeLedger] = None):
+    def __init__(self, image: StateImage, ledger: Optional[TimeLedger] = None,
+                 scatter_fn: Optional[ScatterFn] = None):
         self.image = image
         self.present = np.zeros(image.total_pages, dtype=bool)
         self.ledger = ledger or TimeLedger()
+        self.scatter_fn = scatter_fn
         self.stats = {
             "pre_installed": 0,
             "fault_zero": 0,
@@ -47,20 +66,53 @@ class Instance:
             "fault_rdma": 0,
             "uffd_copies": 0,
             "uffd_zeropages": 0,
+            "uffd_batches": 0,
+            "bytes_installed": 0,
         }
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
 
     # -- uffd analogues ------------------------------------------------------
-    def uffd_copy(self, page: int, src: np.ndarray) -> None:
+    def uffd_copy(self, page: int, src: np.ndarray) -> bool:
         with self._cv:
             if self.present[page]:
-                return
+                return False
             self.image.write_page(page, src)
             self.present[page] = True
             self.stats["uffd_copies"] += 1
+            self.stats["bytes_installed"] += PAGE_SIZE
             self.ledger.add("uffd_copy", UFFD_COPY_PER_PAGE_S)
             self._cv.notify_all()
+            return True
+
+    def uffd_copy_batch(self, pages: np.ndarray, mat: np.ndarray) -> int:
+        """Install many pages under ONE lock acquisition via a vectorized
+        scatter; the ledger is charged per contiguous range (one uffd.copy
+        ioctl per range), not per page.  Already-present pages are skipped.
+        Returns the number of pages actually installed."""
+        pages = np.asarray(pages, dtype=np.int64)
+        mat = np.ascontiguousarray(mat).view(np.uint8).reshape(pages.size, PAGE_SIZE)
+        with self._cv:
+            todo = ~self.present[pages]
+            if not todo.any():
+                return 0
+            sel = pages[todo]
+            pm = self.image.pages_matrix()
+            if self.scatter_fn is not None:
+                out = np.asarray(self.scatter_fn(pm, mat[todo], sel))
+                if out is not pm:          # functional (jax) scatter returned a copy
+                    pm[sel] = out[sel]
+            else:
+                pm[sel] = mat[todo]
+            self.present[sel] = True
+            n = int(sel.size)
+            n_ranges = int(1 + np.count_nonzero(np.diff(sel) != 1))
+            self.stats["uffd_copies"] += n
+            self.stats["uffd_batches"] += 1
+            self.stats["bytes_installed"] += n * PAGE_SIZE
+            self.ledger.add("uffd_copy", uffd_copy_batch_cost(n, n_ranges))
+            self._cv.notify_all()
+            return n
 
     def uffd_zeropage(self, page: int) -> None:
         with self._cv:
@@ -71,6 +123,23 @@ class Instance:
             self.stats["uffd_zeropages"] += 1
             self.ledger.add("uffd_zeropage", UFFD_ZEROPAGE_PER_PAGE_S)
             self._cv.notify_all()
+
+    def uffd_zeropage_range(self, start: int, n: int) -> int:
+        """Range form of uffd.zeropage: one lock acquisition, one ioctl per
+        contiguous range actually zeroed (present pages split ranges)."""
+        with self._cv:
+            sl = self.present[start : start + n]
+            todo = np.nonzero(~sl)[0]
+            k = int(todo.size)
+            if k == 0:
+                return 0
+            sl[:] = True
+            n_ranges = int(1 + np.count_nonzero(np.diff(todo) != 1))
+            self.stats["uffd_zeropages"] += k
+            self.stats["uffd_batches"] += 1
+            self.ledger.add("uffd_zeropage", uffd_zeropage_range_cost(k, n_ranges))
+            self._cv.notify_all()
+            return k
 
     def wait_present(self, page: int, timeout_s: float = 30.0) -> bool:
         with self._cv:
@@ -99,45 +168,65 @@ class AsyncRDMAEngine:
     """Emulated one-sided RDMA read engine with a completion queue.
 
     A worker thread performs the actual byte copies (so data paths are real);
-    modeled time is charged per-op on the ledger.  The completion handler
-    busy-polls up to ``poll_budget`` iterations after each completion before
-    falling back to blocking on the CQ (the paper's hybrid strategy, §4).
+    modeled time is charged per-op on the ledger.  The submit queue is a
+    two-level priority queue: demand-fault reads (urgent) overtake queued
+    prefetch extents.  The completion handler busy-polls up to
+    ``poll_budget`` iterations after each completion before falling back to
+    blocking on the CQ (the paper's hybrid strategy, §4).
     """
 
     def __init__(self, tier: MemoryTier, ledger: TimeLedger, poll_budget: int = 1024):
         self.tier = tier
         self.ledger = ledger
         self.poll_budget = poll_budget
-        self._sq: "queue.Queue" = queue.Queue()
+        self._sq: "queue.PriorityQueue" = queue.PriorityQueue()
+        self._seq = itertools.count()
         self._cq: "queue.Queue" = queue.Queue()
         self._stop = threading.Event()
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
-        self.stats = {"reads": 0, "busy_polls": 0, "event_waits": 0}
+        self.stats = {"reads": 0, "busy_polls": 0, "event_waits": 0,
+                      "urgent_reads": 0, "bytes_read": 0}
 
-    def submit_read(self, pool_off: int, buf: np.ndarray, token) -> None:
-        self._sq.put((pool_off, buf, token))
+    def submit_read(self, pool_off: int, nbytes: int, buf: np.ndarray, token,
+                    urgent: bool = False, charge: bool = True) -> None:
+        """Post a one-sided read of `nbytes` at `pool_off` into `buf`.
+
+        ``urgent`` reads (demand faults) are served before queued prefetch
+        extents.  ``charge=False`` suppresses the per-op ledger charge for
+        callers that account a whole doorbell batch themselves."""
+        prio = 0 if urgent else 1
+        self._sq.put((prio, next(self._seq), (pool_off, nbytes, buf, token, charge)))
 
     def poll_completion(self, block: bool, timeout_s: float = 0.05):
-        """-> (buf, token) or None. Emulates CQ poll / completion channel."""
+        """-> (buf, token) or None. Emulates CQ poll / completion channel.
+
+        ``event_waits`` counts only actual blocking waits: a CQ entry that is
+        already available is returned immediately without inflating the stat."""
         try:
-            if block:
-                self.stats["event_waits"] += 1
-                return self._cq.get(timeout=timeout_s)
             return self._cq.get_nowait()
+        except queue.Empty:
+            if not block:
+                return None
+        self.stats["event_waits"] += 1
+        try:
+            return self._cq.get(timeout=timeout_s)
         except queue.Empty:
             return None
 
     def _run(self) -> None:
         while not self._stop.is_set():
             try:
-                pool_off, buf, token = self._sq.get(timeout=0.05)
+                prio, _seq, (pool_off, nbytes, buf, token, charge) = self._sq.get(timeout=0.05)
             except queue.Empty:
                 continue
-            nbytes = token[1] if isinstance(token, tuple) else PAGE_SIZE
             buf[:nbytes] = self.tier.buf[pool_off : pool_off + nbytes]
             self.stats["reads"] += 1
-            self.ledger.add("rdma_read", self.tier.cost.op_latency_s + nbytes / self.tier.cost.bandwidth_Bps)
+            self.stats["bytes_read"] += nbytes
+            if prio == 0:
+                self.stats["urgent_reads"] += 1
+            if charge:
+                self.ledger.add("rdma_read", self.tier.cost.op_latency_s + nbytes / self.tier.cost.bandwidth_Bps)
             self._cq.put((buf, token))
 
     def close(self) -> None:
@@ -146,7 +235,8 @@ class AsyncRDMAEngine:
 
 
 class RestoreEngine:
-    """Per-instance page server: hot pre-install + async cold demand-paging."""
+    """Per-instance page server: run-coalesced hot pre-install + async cold
+    demand-paging + optional background extent prefetch over the cold runs."""
 
     def __init__(
         self,
@@ -154,27 +244,62 @@ class RestoreEngine:
         instance: Instance,
         rdma_engine: Optional[AsyncRDMAEngine] = None,
         buffer_pool: Optional[BufferPool] = None,
+        scatter_fn: Optional[ScatterFn] = None,
     ):
         self.reader = reader
         self.instance = instance
+        if scatter_fn is not None:
+            self.instance.scatter_fn = scatter_fn
         self.ledger = instance.ledger
         self.rdma_engine = rdma_engine
         self.buffers = buffer_pool or BufferPool()
         self._inflight: Dict[int, bool] = {}
         self._inflight_lock = threading.Lock()
         self._completion_thread: Optional[threading.Thread] = None
+        self._prefetch_thread: Optional[threading.Thread] = None
+        self._prefetch_sem: Optional[threading.Semaphore] = None
         self._stop = threading.Event()
+        self.prefetch_stats = {"extents_posted": 0, "pages_installed": 0,
+                               "doorbells": 0, "extents_skipped": 0}
 
     # -- phase 1: hot-set pre-installation (§3.4) ------------------------------
-    def pre_install_hot(self) -> int:
-        """uffd.copy every hot page from CXL before resume. Serialized (§5.2)."""
+    HOT_CHUNK_PAGES = 256   # 1 MiB sequential CXL reads over the compact region
+
+    def pre_install_hot(self, use_batch: bool = True,
+                        chunk_pages: Optional[int] = None) -> int:
+        """uffd.copy the hot set from CXL before resume. Serialized (§5.2).
+
+        Batched mode (default) exploits the snapshot layout: the hot data
+        region is *compacted by rank*, so it is one contiguous CXL byte range
+        regardless of guest fragmentation.  We stream it in `chunk_pages`
+        sequential reads (one CXL op-latency per chunk, not per page — and
+        never worse than one per run) and scatter each chunk into the guest
+        address space with one vectorized `uffd_copy_batch`, which charges
+        one uffd.copy ioctl per guest-contiguous run.  ``use_batch=False``
+        keeps the strictly page-at-a-time path for modeled-time comparison.
+        """
+        if not use_batch:
+            hot = self.reader.hot_page_indices()
+            for page in hot:
+                kind, off = self.reader.lookup(int(page))
+                assert kind == "cxl"
+                src = self.reader.view.read(off, PAGE_SIZE)
+                if self.instance.uffd_copy(int(page), src):
+                    self.instance.stats["pre_installed"] += 1
+            return int(hot.size)
+        chunk = chunk_pages or self.HOT_CHUNK_PAGES
         hot = self.reader.hot_page_indices()
-        for page in hot:
-            kind, off = self.reader.lookup(int(page))
-            assert kind == "cxl"
-            src = self.reader.view.read(off, PAGE_SIZE)
-            self.instance.uffd_copy(int(page), src)
-            self.instance.stats["pre_installed"] += 1
+        hot_off = self.reader.regions.hot_off
+        for r0 in range(0, int(hot.size), chunk):
+            r1 = min(int(hot.size), r0 + chunk)
+            if self.instance.present[hot[r0:r1]].all():
+                continue    # already installed (e.g. repeated pre-install)
+            # ranks r0:r1 are back-to-back in the hot region: ONE CXL read
+            raw = self.reader.view.read(hot_off + r0 * PAGE_SIZE,
+                                        (r1 - r0) * PAGE_SIZE)
+            installed = self.instance.uffd_copy_batch(
+                hot[r0:r1], raw.reshape(r1 - r0, PAGE_SIZE))
+            self.instance.stats["pre_installed"] += installed
         return int(hot.size)
 
     # -- phase 2: demand faults -------------------------------------------------
@@ -184,8 +309,23 @@ class RestoreEngine:
         self._completion_thread = threading.Thread(target=self._completion_loop, daemon=True)
         self._completion_thread.start()
 
+    def start_prefetcher(self, max_extent_pages: int = 64) -> None:
+        """Background cold-run prefetch: walk cold runs largest-first, post
+        multi-page one-sided reads (up to `max_extent_pages` each), install
+        completed extents via the batch API.  Demand faults for pages not yet
+        in flight still take priority on the RDMA engine's submit queue."""
+        if self.rdma_engine is None or self._prefetch_thread is not None:
+            return
+        inflight = max(1, self.rdma_engine.tier.cost.max_inflight)
+        self._prefetch_sem = threading.Semaphore(inflight)
+        self._prefetch_thread = threading.Thread(
+            target=self._prefetch_loop, args=(max_extent_pages,), daemon=True)
+        self._prefetch_thread.start()
+
     def stop(self) -> None:
         self._stop.set()
+        if self._prefetch_thread is not None:
+            self._prefetch_thread.join(timeout=1.0)
         if self._completion_thread is not None:
             self._completion_thread.join(timeout=1.0)
 
@@ -220,10 +360,11 @@ class RestoreEngine:
             return
         with self._inflight_lock:
             if self._inflight.get(page):
-                return
+                return     # already in flight (demand or prefetch extent)
             self._inflight[page] = True
         buf = self.buffers.acquire()
-        self.rdma_engine.submit_read(pool_off, buf, (page, nbytes, raw, kind))
+        self.rdma_engine.submit_read(pool_off, nbytes, buf,
+                                     ("page", page, nbytes, raw, kind), urgent=True)
 
     def access(self, page: int, timeout_s: float = 30.0) -> None:
         """Guest touch: fault if needed and wait for install (test/replay API)."""
@@ -232,6 +373,26 @@ class RestoreEngine:
         self.handle_fault(page)
         if not self.instance.wait_present(page, timeout_s):
             raise TimeoutError(f"page {page} not installed within {timeout_s}s")
+
+    def _install_completion(self, buf: np.ndarray, token) -> None:
+        if token[0] == "extent":
+            _tag, start, n, rank0 = token
+            mat = self.reader.split_cold_extent(rank0, n, buf)
+            k = self.instance.uffd_copy_batch(np.arange(start, start + n), mat)
+            self.prefetch_stats["pages_installed"] += k
+            with self._inflight_lock:
+                for p in range(start, start + n):
+                    self._inflight.pop(p, None)
+            if self._prefetch_sem is not None:
+                self._prefetch_sem.release()
+            return
+        _tag, page, nbytes, raw, kind = token
+        data = (self.reader.decompress_page(buf[:nbytes], raw)
+                if kind == "rdma_z" else buf[:PAGE_SIZE])
+        self.instance.uffd_copy(int(page), data)
+        self.buffers.release(buf)
+        with self._inflight_lock:
+            self._inflight.pop(int(page), None)
 
     def _completion_loop(self) -> None:
         eng = self.rdma_engine
@@ -242,16 +403,7 @@ class RestoreEngine:
                 continue
             while item is not None:
                 buf, token = item
-                if isinstance(token, tuple):
-                    page, nbytes, raw, kind = token
-                    data = (self.reader.decompress_page(buf[:nbytes], raw)
-                            if kind == "rdma_z" else buf[:PAGE_SIZE])
-                else:
-                    page, data = token, buf
-                self.instance.uffd_copy(int(page), data)
-                self.buffers.release(buf)
-                with self._inflight_lock:
-                    self._inflight.pop(int(page), None)
+                self._install_completion(buf, token)
                 # hybrid poll: batch further completions without sleeping
                 polled = None
                 for _ in range(eng.poll_budget):
@@ -261,21 +413,104 @@ class RestoreEngine:
                         break
                 item = polled
 
+    # -- cold extent prefetcher (§3.4, DESIGN.md §6) ---------------------------
+    def _prefetch_loop(self, max_extent_pages: int) -> None:
+        eng = self.rdma_engine
+        assert eng is not None and self._prefetch_sem is not None
+        cost = eng.tier.cost
+        runs = self.reader.cold_runs()
+        order = np.argsort(-runs[:, 1], kind="stable") if runs.size else []
+        pending_bytes, pending_ops = 0, 0
+
+        def flush_doorbell():
+            nonlocal pending_bytes, pending_ops
+            if pending_ops:
+                # doorbell-batched posts: op latencies overlap up to QP depth
+                self.ledger.add("rdma_prefetch",
+                                cost.xfer_time_pipelined(pending_bytes, pending_ops))
+                self.prefetch_stats["doorbells"] += 1
+                pending_bytes, pending_ops = 0, 0
+
+        for ri in order:
+            start, n = int(runs[ri, 0]), int(runs[ri, 1])
+            for es in range(start, start + n, max_extent_pages):
+                if self._stop.is_set():
+                    flush_doorbell()
+                    return
+                en = min(max_extent_pages, start + n - es)
+                if self.instance.present[es : es + en].all():
+                    self.prefetch_stats["extents_skipped"] += 1
+                    continue
+                rank0 = self.reader.cold_rank(es)
+                pool_off, nbytes = self.reader.cold_extent_span(rank0, en)
+                while not self._prefetch_sem.acquire(timeout=0.05):
+                    if self._stop.is_set():
+                        flush_doorbell()
+                        return
+                # mark in flight only once a QP slot is held: demand faults on
+                # these pages must keep their urgent-read path while the
+                # extent is still waiting for a slot
+                with self._inflight_lock:
+                    for p in range(es, es + en):
+                        self._inflight.setdefault(p, True)
+                pending_bytes += nbytes
+                pending_ops += 1
+                if pending_ops >= cost.max_inflight:
+                    flush_doorbell()
+                buf = np.empty(nbytes, dtype=np.uint8)
+                eng.submit_read(pool_off, nbytes, buf, ("extent", es, en, rank0),
+                                urgent=False, charge=False)
+                self.prefetch_stats["extents_posted"] += 1
+        flush_doorbell()
+
+    def wait_prefetch_idle(self, timeout_s: float = 30.0) -> bool:
+        """Block until the prefetch walk posted everything and all cold pages
+        are installed (test/benchmark helper)."""
+        if self._prefetch_thread is None:
+            return True
+        self._prefetch_thread.join(timeout=timeout_s)
+        if self._prefetch_thread.is_alive():
+            return False
+        for start, n in self.reader.cold_runs():
+            for p in range(int(start), int(start) + int(n)):
+                if not self.instance.present[p]:
+                    if not self.instance.wait_present(p, timeout_s):
+                        return False
+        return True
+
     # -- bulk restore (used by tests / eager baselines) --------------------------
-    def install_all_sync(self) -> None:
-        for page in range(self.instance.image.total_pages):
-            if not self.instance.present[page]:
-                kind, off = self.reader.lookup(page)
-                if kind == "zero":
-                    self.instance.uffd_zeropage(page)
-                elif kind == "cxl":
-                    self.instance.uffd_copy(page, self.reader.view.read(off, PAGE_SIZE))
-                else:
-                    self.instance.uffd_copy(page, self.reader.read_page(page))
+    def install_all_sync(self, use_batch: bool = True) -> None:
+        if not use_batch:
+            for page in range(self.instance.image.total_pages):
+                if not self.instance.present[page]:
+                    kind, off = self.reader.lookup(page)
+                    if kind == "zero":
+                        self.instance.uffd_zeropage(page)
+                    elif kind == "cxl":
+                        self.instance.uffd_copy(page, self.reader.view.read(off, PAGE_SIZE))
+                    else:
+                        nbytes = (self.reader.cold_extent(off)[1]
+                                  if kind == "rdma_z" else PAGE_SIZE)
+                        self.ledger.add("rdma_read",
+                                        self.reader.rdma.cost.xfer_time(nbytes))
+                        self.instance.uffd_copy(page, self.reader.read_page(page))
+            return
+        for start, n in self.reader.zero_runs():
+            self.instance.uffd_zeropage_range(int(start), int(n))
+        self.pre_install_hot()
+        for start, n in self.reader.cold_runs():
+            start, n = int(start), int(n)
+            rank0 = self.reader.cold_rank(start)
+            pool_off, nbytes = self.reader.cold_extent_span(rank0, n)
+            payload = self.reader.rdma.read(pool_off, nbytes)
+            self.ledger.add("rdma_read", self.reader.rdma.cost.xfer_time(nbytes))
+            self.instance.uffd_copy_batch(np.arange(start, start + n),
+                                          self.reader.split_cold_extent(rank0, n, payload))
 
 
 def mmap_install_cost(pages: Sequence[int]) -> float:
     """Modeled cost of installing `pages` via per-range mmap (the rejected
-    alternative, §2.3.4): one mmap per contiguous run, 2.6x uffd.copy per page."""
+    alternative, §2.3.4): one mmap syscall per contiguous run plus a per-page
+    cost 2.6x that of uffd.copy."""
     runs = runs_from_pages(pages)
-    return sum(n * MMAP_PER_RANGE_S for _, n in runs) + len(runs) * 0.0
+    return sum(n * MMAP_PER_PAGE_S for _, n in runs) + len(runs) * MMAP_SYSCALL_S

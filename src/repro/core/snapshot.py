@@ -50,6 +50,22 @@ def _align_pages(nbytes: int) -> int:
     return num_pages(nbytes) * PAGE_SIZE
 
 
+def runs_of_indices(idx: np.ndarray) -> np.ndarray:
+    """Vectorized run-length encoding of a sorted index array.
+
+    Returns an ``int64 (R, 2)`` array of ``[start, length]`` rows covering
+    exactly the input set.  This is the vectorized counterpart of
+    :func:`repro.core.pagestore.runs_from_pages` (asserted equal in tests).
+    """
+    idx = np.asarray(idx, dtype=np.int64)
+    if idx.size == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    brk = np.nonzero(np.diff(idx) != 1)[0]
+    starts = np.concatenate([[0], brk + 1])
+    ends = np.concatenate([brk, [idx.size - 1]])
+    return np.stack([idx[starts], ends - starts + 1], axis=1)
+
+
 # --------------------------------------------------------------------------
 # Page classification (§2.3.3 semantics)
 # --------------------------------------------------------------------------
@@ -286,6 +302,9 @@ class SnapshotReader:
         self._ci: Optional[np.ndarray] = None       # cold lengths (compressed tier)
         self._ci_starts: Optional[np.ndarray] = None
         self._dctx = _zstd.ZstdDecompressor() if _zstd is not None else None
+        self._hot_runs: Optional[np.ndarray] = None
+        self._cold_runs: Optional[np.ndarray] = None
+        self._zero_runs: Optional[np.ndarray] = None
 
     # -- protocol hook ------------------------------------------------------
     def invalidate_cxl(self) -> None:
@@ -360,3 +379,63 @@ class SnapshotReader:
     def cold_page_indices(self) -> np.ndarray:
         oa = self.offset_array()
         return np.nonzero((oa != ZERO_SENTINEL) & ((oa >> TIER_SHIFT) == TIER_RDMA))[0]
+
+    def zero_page_indices(self) -> np.ndarray:
+        return np.nonzero(self.offset_array() == ZERO_SENTINEL)[0]
+
+    # -- run index (batched serving, §3.4) -----------------------------------
+    # build_snapshot assigns tier offsets rank-by-rank over the *sorted* page
+    # set, so guest-contiguous pages of one class are also contiguous in their
+    # tier's data region (byte offsets for raw tiers, ranks for the compressed
+    # cold tier).  A run can therefore be served by ONE tier read.
+
+    def hot_runs(self) -> np.ndarray:
+        """int64 (R, 2) [start_page, n_pages] runs of the hot set (cached)."""
+        if self._hot_runs is None:
+            self._hot_runs = runs_of_indices(self.hot_page_indices())
+        return self._hot_runs
+
+    def cold_runs(self) -> np.ndarray:
+        """int64 (R, 2) [start_page, n_pages] runs of the cold set (cached)."""
+        if self._cold_runs is None:
+            self._cold_runs = runs_of_indices(self.cold_page_indices())
+        return self._cold_runs
+
+    def zero_runs(self) -> np.ndarray:
+        """int64 (R, 2) [start_page, n_pages] runs of zero pages (cached)."""
+        if self._zero_runs is None:
+            self._zero_runs = runs_of_indices(self.zero_page_indices())
+        return self._zero_runs
+
+    def cold_rank(self, page: int) -> int:
+        """Rank (position in the sorted cold set) of a cold page."""
+        _tier, off = decode_slot(self.offset_array()[page])
+        return off if self.regions.cold_compressed else off // PAGE_SIZE
+
+    def cold_extent_span(self, rank: int, n: int) -> Tuple[int, int]:
+        """Byte span of `n` consecutive cold ranks in the RDMA tier.
+
+        -> (pool_byte_offset, nbytes).  For the compressed cold tier the
+        per-rank chunks are stored back-to-back, so consecutive ranks always
+        form one contiguous byte extent readable with a single one-sided read.
+        """
+        if not self.regions.cold_compressed:
+            return self.regions.rdma_off + rank * PAGE_SIZE, n * PAGE_SIZE
+        starts, lens = self.cold_index()
+        lo = int(starts[rank])
+        hi = int(starts[rank + n - 1]) + int(lens[rank + n - 1] & np.uint32(0x7FFF_FFFF))
+        return self.regions.rdma_off + lo, hi - lo
+
+    def split_cold_extent(self, rank: int, n: int, payload: np.ndarray) -> np.ndarray:
+        """Decode one cold extent's payload into an (n, PAGE_SIZE) matrix."""
+        if not self.regions.cold_compressed:
+            return payload[: n * PAGE_SIZE].reshape(n, PAGE_SIZE)
+        starts, lens = self.cold_index()
+        base = int(starts[rank])
+        out = np.empty((n, PAGE_SIZE), dtype=np.uint8)
+        for i in range(n):
+            lo = int(starts[rank + i]) - base
+            ln = int(lens[rank + i] & np.uint32(0x7FFF_FFFF))
+            raw = bool(lens[rank + i] & np.uint32(0x8000_0000))
+            out[i] = self.decompress_page(payload[lo : lo + ln], raw)
+        return out

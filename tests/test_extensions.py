@@ -12,6 +12,7 @@ from repro.core import (
     StateImage,
 )
 from repro.core.dedup import DedupStore, fnv1a_page, fnv1a_pages
+from repro.core.snapshot import _zstd
 from repro.core.failover import FailoverNode, MasterLease
 from repro.core.profiler import AccessRecorder
 
@@ -29,6 +30,8 @@ def make_image(seed=0):
     return img, rec.working_set()
 
 
+@pytest.mark.skipif(_zstd is None,
+                    reason="zstandard not installed (optional extra)")
 class TestCompressedColdTier:
     def test_roundtrip_bit_identical_and_smaller(self):
         img, ws = make_image()

@@ -1,0 +1,297 @@
+"""Run-coalesced batched serving (§3.4): run-index correctness, bit-identity
+of the batched restore vs the per-page path, ledger equivalence (batching
+never models more time and never undercounts bytes), prefetcher/demand-fault
+interplay, and the batched uffd install primitives."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    HierarchicalPool,
+    Instance,
+    Orchestrator,
+    PoolMaster,
+    RestoreEngine,
+    SnapshotReader,
+    StateImage,
+    TimeLedger,
+    runs_from_pages,
+)
+from repro.core.pagestore import PAGE_SIZE
+from repro.core.pool import MMAP_PER_PAGE_S, MMAP_SYSCALL_S
+from repro.core.profiler import AccessRecorder
+from repro.core.serving import AsyncRDMAEngine, mmap_install_cost
+from repro.core.snapshot import _zstd, runs_of_indices
+
+
+def make_fragmented_image(seed=0):
+    """Image whose hot set is deliberately fragmented (short + long runs)."""
+    rng = np.random.default_rng(seed)
+    arrays = {
+        "params": rng.standard_normal((40000,)).astype(np.float32),   # long hot runs
+        "emb": np.zeros((128, 1024), np.float32),
+        "runtime": rng.integers(1, 7, (200 * PAGE_SIZE,)).astype(np.uint8),
+        "arena": np.zeros((48, 1024), np.float32),                    # zero pages
+    }
+    arrays["emb"][::4] = rng.standard_normal((32, 1024)).astype(np.float32)
+    img = StateImage.build(arrays)
+    rec = AccessRecorder(img.manifest)
+    rec.touch_array("params")
+    rec.touch_rows("emb", [0, 4, 8, 40, 44])       # scattered short hot runs
+    rt = img.manifest.by_name()["runtime"]
+    for s in (3, 9, 17, 50, 51, 52, 120):          # fragmented runtime spans
+        rec.touch_pages(range(rt.first_page + s, rt.first_page + s + 2))
+    return img, rec.working_set()
+
+
+def publish(img, ws, compress_cold=False, cxl=64 << 20, rdma=64 << 20):
+    pool = HierarchicalPool(cxl, rdma)
+    master = PoolMaster(pool)
+    regions = master.publish("t", img, ws, compress_cold=compress_cold)
+    return pool, master, regions
+
+
+def fresh_reader(pool, regions, host="h"):
+    ledger = TimeLedger()
+    view = pool.host_view(host, ledger)
+    reader = SnapshotReader(regions, view, pool.rdma)
+    reader.invalidate_cxl()
+    return reader, ledger
+
+
+class TestRunIndex:
+    def test_runs_match_runs_from_pages(self):
+        img, ws = make_fragmented_image()
+        pool, _, regions = publish(img, ws)
+        reader, _ = fresh_reader(pool, regions)
+        for runs, idx in (
+            (reader.hot_runs(), reader.hot_page_indices()),
+            (reader.cold_runs(), reader.cold_page_indices()),
+            (reader.zero_runs(), reader.zero_page_indices()),
+        ):
+            expect = runs_from_pages(idx.tolist())
+            assert [(int(s), int(n)) for s, n in runs] == expect
+
+    def test_runs_partition_address_space(self):
+        img, ws = make_fragmented_image()
+        pool, _, regions = publish(img, ws)
+        reader, _ = fresh_reader(pool, regions)
+        covered = np.zeros(img.total_pages, dtype=int)
+        for runs in (reader.hot_runs(), reader.cold_runs(), reader.zero_runs()):
+            for s, n in runs:
+                covered[int(s) : int(s) + int(n)] += 1
+        assert (covered == 1).all()
+
+    def test_runs_of_indices_empty(self):
+        assert runs_of_indices(np.zeros(0, np.int64)).shape == (0, 2)
+
+    def test_cold_extent_span_contiguous(self):
+        img, ws = make_fragmented_image()
+        pool, _, regions = publish(img, ws)
+        reader, _ = fresh_reader(pool, regions)
+        for s, n in reader.cold_runs():
+            s, n = int(s), int(n)
+            rank0 = reader.cold_rank(s)
+            pool_off, nbytes = reader.cold_extent_span(rank0, n)
+            payload = pool.rdma.read(pool_off, nbytes)
+            mat = reader.split_cold_extent(rank0, n, payload)
+            for i in range(n):
+                np.testing.assert_array_equal(mat[i], img.page(s + i))
+
+
+class TestBatchedRestoreBitIdentical:
+    @pytest.mark.parametrize("compress", [False, True])
+    def test_batched_vs_perpage(self, compress):
+        if compress and _zstd is None:
+            pytest.skip("zstandard not installed")
+        img, ws = make_fragmented_image()
+        pool, _, regions = publish(img, ws, compress_cold=compress)
+        bufs = {}
+        for batch in (False, True):
+            reader, _ = fresh_reader(pool, regions, host=f"h{batch}")
+            inst = Instance(StateImage.empty_like(img.manifest))
+            eng = RestoreEngine(reader, inst, rdma_engine=None)
+            eng.pre_install_hot(use_batch=batch)
+            eng.install_all_sync(use_batch=batch)
+            assert np.array_equal(inst.image.buf, img.buf)
+            bufs[batch] = inst.image.buf.copy()
+        assert np.array_equal(bufs[False], bufs[True])
+
+    def test_async_restore_with_prefetcher_bit_identical(self):
+        img, ws = make_fragmented_image(seed=5)
+        pool, master, _ = publish(img, ws)
+        orch = Orchestrator("h0", pool, master.catalog, use_async_rdma=True,
+                            prefetch_cold=True, max_extent_pages=16)
+        ri = orch.restore("t")
+        assert ri is not None
+        assert ri.engine.wait_prefetch_idle(30)
+        for p in range(img.total_pages):
+            ri.engine.access(p)
+        assert np.array_equal(ri.instance.image.buf, img.buf)
+        assert ri.engine.prefetch_stats["extents_posted"] > 0
+        assert ri.engine.prefetch_stats["pages_installed"] > 0
+        ri.shutdown()
+
+    def test_scatter_fn_pluggable(self):
+        from repro.kernels.page_scatter.ops import page_scatter
+        img, ws = make_fragmented_image(seed=2)
+        pool, _, regions = publish(img, ws)
+        reader, _ = fresh_reader(pool, regions)
+        inst = Instance(StateImage.empty_like(img.manifest))
+        eng = RestoreEngine(
+            reader, inst, rdma_engine=None,
+            scatter_fn=lambda dest, compact, idx: page_scatter(dest, compact, idx,
+                                                               use_pallas=False))
+        eng.pre_install_hot()
+        eng.install_all_sync()
+        assert np.array_equal(inst.image.buf, img.buf)
+
+
+class TestLedgerEquivalence:
+    def test_batched_never_models_more_time_or_fewer_bytes(self):
+        img, ws = make_fragmented_image()
+        pool, _, regions = publish(img, ws)
+        res = {}
+        for batch in (False, True):
+            reader, ledger = fresh_reader(pool, regions, host=f"h{batch}")
+            inst = Instance(StateImage.empty_like(img.manifest), ledger)
+            eng = RestoreEngine(reader, inst, rdma_engine=None)
+            eng.pre_install_hot(use_batch=batch)
+            pre = dict(ledger.seconds)
+            eng.install_all_sync(use_batch=batch)
+            res[batch] = (pre, dict(ledger.seconds), inst.stats.copy(),
+                          reader.view.stats.copy())
+        pre_pp, tot_pp, stats_pp, view_pp = res[False]
+        pre_bt, tot_bt, stats_bt, view_bt = res[True]
+        # modeled pre-install and total time: batched <= per-page, per class
+        for key in ("cxl_read", "uffd_copy"):
+            assert pre_bt.get(key, 0.0) <= pre_pp.get(key, 0.0) + 1e-12
+        for key in tot_bt:
+            assert tot_bt[key] <= tot_pp.get(key, 0.0) + 1e-12
+        # never undercounting bytes: same bytes installed, same bytes read
+        assert stats_bt["bytes_installed"] == stats_pp["bytes_installed"]
+        assert stats_bt["bytes_installed"] == img.total_pages * PAGE_SIZE - \
+            int(img.zero_page_bitmap().sum()) * PAGE_SIZE
+        assert view_bt["bytes_read"] == view_pp["bytes_read"]
+
+    def test_batch_cost_counts_every_range(self):
+        inst = Instance(StateImage.empty_like(
+            StateImage.build({"a": np.ones(PAGE_SIZE * 8, np.uint8)}).manifest))
+        # two disjoint runs installed in ONE batch: 2 ioctls charged
+        pages = np.array([0, 1, 4, 5])
+        mat = np.ones((4, PAGE_SIZE), np.uint8)
+        assert inst.uffd_copy_batch(pages, mat) == 4
+        from repro.core.pool import uffd_copy_batch_cost
+        assert inst.ledger.seconds["uffd_copy"] == pytest.approx(
+            uffd_copy_batch_cost(4, 2))
+
+    def test_mmap_install_cost_charges_per_range(self):
+        pages = [0, 1, 2, 10, 11]          # two ranges
+        got = mmap_install_cost(pages)
+        assert got == pytest.approx(5 * MMAP_PER_PAGE_S + 2 * MMAP_SYSCALL_S)
+        assert got > 5 * MMAP_PER_PAGE_S   # the per-range term is not dead code
+
+
+class TestBatchPrimitives:
+    def _image(self):
+        return StateImage.build({"a": np.zeros(PAGE_SIZE * 16, np.uint8)})
+
+    def test_copy_batch_idempotent(self):
+        inst = Instance(StateImage.empty_like(self._image().manifest))
+        pages = np.arange(4)
+        mat = np.full((4, PAGE_SIZE), 7, np.uint8)
+        assert inst.uffd_copy_batch(pages, mat) == 4
+        assert inst.uffd_copy_batch(pages, mat) == 0     # all present: no-op
+        assert inst.stats["uffd_copies"] == 4
+        # partial overlap installs only the missing pages
+        pages2 = np.arange(2, 6)
+        assert inst.uffd_copy_batch(pages2, np.full((4, PAGE_SIZE), 9, np.uint8)) == 2
+        np.testing.assert_array_equal(inst.image.page(3), np.full(PAGE_SIZE, 7))
+        np.testing.assert_array_equal(inst.image.page(4), np.full(PAGE_SIZE, 9))
+
+    def test_zeropage_range_idempotent(self):
+        inst = Instance(StateImage.empty_like(self._image().manifest))
+        assert inst.uffd_zeropage_range(0, 8) == 8
+        assert inst.uffd_zeropage_range(0, 8) == 0
+        assert inst.uffd_zeropage_range(4, 8) == 4       # only 8..11 new
+        assert inst.stats["uffd_zeropages"] == 12
+        assert inst.present[:12].all() and not inst.present[12:].any()
+
+
+class TestPrefetcherDemandRace:
+    def test_demand_fault_during_inflight_prefetch_installs_once(self):
+        img, ws = make_fragmented_image(seed=9)
+        pool, master, _ = publish(img, ws)
+        orch = Orchestrator("h0", pool, master.catalog, use_async_rdma=True,
+                            prefetch_cold=True, max_extent_pages=8)
+        ri = orch.restore("t")
+        assert ri is not None
+        cold = ri.engine.reader.cold_page_indices()
+        # hammer demand faults over the cold set while the prefetcher streams
+        errs = []
+
+        def hammer(pages):
+            try:
+                for p in pages:
+                    ri.engine.access(int(p), timeout_s=30)
+            except Exception as e:     # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(cold[i::4],))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errs
+        assert ri.engine.wait_prefetch_idle(30)
+        for p in range(img.total_pages):
+            ri.engine.access(p)
+        # exactly-once: uffd_copies counts actual installs; every non-zero
+        # page was installed exactly once even under the race
+        nonzero_pages = img.total_pages - int(img.zero_page_bitmap().sum())
+        assert ri.instance.stats["uffd_copies"] == nonzero_pages
+        assert ri.instance.stats["bytes_installed"] == nonzero_pages * PAGE_SIZE
+        assert np.array_equal(ri.instance.image.buf, img.buf)
+        ri.shutdown()
+
+
+class TestAsyncEngineStats:
+    def test_event_waits_only_counts_actual_waits(self):
+        pool = HierarchicalPool(4 << 20, 4 << 20)
+        ledger = TimeLedger()
+        eng = AsyncRDMAEngine(pool.rdma, ledger)
+        try:
+            buf = np.empty(PAGE_SIZE, np.uint8)
+            eng.submit_read(0, PAGE_SIZE, buf, ("page", 0, PAGE_SIZE, True, "rdma"))
+            # wait until the CQ has the completion queued
+            for _ in range(200):
+                if not eng._cq.empty():
+                    break
+                threading.Event().wait(0.005)
+            assert not eng._cq.empty()
+            got = eng.poll_completion(block=True)
+            assert got is not None
+            assert eng.stats["event_waits"] == 0     # entry was ready: no wait
+            assert eng.poll_completion(block=True, timeout_s=0.01) is None
+            assert eng.stats["event_waits"] == 1     # this one actually waited
+        finally:
+            eng.close()
+
+    def test_urgent_reads_counted(self):
+        pool = HierarchicalPool(4 << 20, 4 << 20)
+        eng = AsyncRDMAEngine(pool.rdma, TimeLedger())
+        try:
+            buf = np.empty(PAGE_SIZE, np.uint8)
+            eng.submit_read(0, PAGE_SIZE, buf, ("page", 0, PAGE_SIZE, True, "rdma"),
+                            urgent=True)
+            got = None
+            for _ in range(200):
+                got = eng.poll_completion(block=True, timeout_s=0.05)
+                if got is not None:
+                    break
+            assert got is not None
+            assert eng.stats["urgent_reads"] == 1
+        finally:
+            eng.close()
