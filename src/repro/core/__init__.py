@@ -12,6 +12,7 @@ The paper's contribution as a composable library:
 - :mod:`orchestrator` — node agent: borrow → flush → pre-install → resume
 - :mod:`dedup`      — content-hash snapshot deduplication (§3.6)
 """
+from .clock import Clock, RealClock, REAL_CLOCK
 from .pagestore import PAGE_SIZE, ArrayExtent, Manifest, StateImage, runs_from_pages
 from .pool import (
     CXL_COST,
@@ -51,6 +52,7 @@ from .serving import (
     BufferPool,
     Instance,
     RestoreEngine,
+    RestoreSession,
     mmap_install_cost,
 )
 from .profiler import AccessRecorder, WorkloadProfile, profile_invocations

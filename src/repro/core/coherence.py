@@ -28,9 +28,9 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
+from .clock import Clock, REAL_CLOCK
 from .snapshot import SnapshotRegions
 
 # Catalog entry states.
@@ -116,8 +116,9 @@ class Borrow:
 class Catalog:
     """Fixed-size snapshot catalog shared by the pool master + orchestrators."""
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256, clock: Optional[Clock] = None):
         self.entries: List[CatalogEntry] = [CatalogEntry(i) for i in range(capacity)]
+        self.clock = clock or REAL_CLOCK
         self._by_name_lock = threading.Lock()
         self._by_name: Dict[str, int] = {}
 
@@ -136,27 +137,52 @@ class Catalog:
             self._by_name.pop(name, None)
 
     # -- borrower side (§3.3 Borrow protocol) ---------------------------------
-    def borrow(self, name: str, noop=lambda: None) -> Optional[Borrow]:
+    def borrow_steps(self, name: str, noop=lambda: None,
+                     state_precheck: bool = True) -> Iterator[Tuple[str, object]]:
+        """Generator form of :meth:`borrow`, yielding at the protocol's
+        inter-host visibility points so a deterministic scheduler (repro.sim)
+        can interleave other hosts *between* the refcount increment and the
+        state CAS.  Yields ``(label, value)``:
+
+        * ``("refcount_incremented", entry)`` — increment done, CAS pending;
+        * ``("doomed", entry)``  — CAS failed, increment already backed out;
+        * ``("done", Borrow | None)`` — terminal; None ⇒ caller cold-starts.
+
+        ``state_precheck=False`` reverts the PR-1 doomed-borrow fix (the
+        fast-path state test), for tests that reproduce the pre-fix livelock.
+        """
         entry = self.find(name)
         if entry is None:
-            return None
+            yield ("done", None)
+            return
         # 0) fast-path reject on a non-published entry WITHOUT touching the
         # refcount.  Doomed borrows (inc → CAS-fail → dec) are protocol-safe
         # but their transient increments can livelock the owner's
         # wait-for-drain when borrowers retry in a tight loop; testing the
         # state first makes them rare.  A stale PUBLISHED read here only
         # leads to the doomed-borrow path below, which remains correct.
-        if entry.state.load() != STATE_PUBLISHED:
-            return None
+        if state_precheck and entry.state.load() != STATE_PUBLISHED:
+            yield ("done", None)
+            return
         # 1) refcount++ first (closes the owner-sees-zero window)
         entry.refcount.fetch_add(1)
+        yield ("refcount_incremented", entry)
         # 2) CAS state expecting PUBLISHED — atomic, ordered after the increment
         if entry.state.compare_exchange(STATE_PUBLISHED, STATE_PUBLISHED):
             entry.borrow_counter.fetch_add(1)
-            return Borrow(entry, noop)
+            yield ("done", Borrow(entry, noop))
+            return
         # CAS failed: snapshot is being reclaimed → back out, cold start
         entry.refcount.fetch_add(-1)
-        return None
+        yield ("doomed", entry)
+        yield ("done", None)
+
+    def borrow(self, name: str, noop=lambda: None) -> Optional[Borrow]:
+        result: Optional[Borrow] = None
+        for label, value in self.borrow_steps(name, noop):
+            if label == "done":
+                result = value
+        return result
 
     # -- owner side (pool master only) ----------------------------------------
     def publish_new(self, name: str, regions: SnapshotRegions, version: int = 0) -> CatalogEntry:
@@ -180,11 +206,11 @@ class Catalog:
         return entry
 
     def wait_unborrowed(self, entry: CatalogEntry, timeout_s: float = 30.0) -> bool:
-        deadline = time.monotonic() + timeout_s
+        deadline = self.clock.monotonic() + timeout_s
         while entry.refcount.load() != 0:
-            if time.monotonic() > deadline:
+            if self.clock.monotonic() > deadline:
                 return False
-            time.sleep(1e-5)
+            self.clock.sleep(1e-5)
         return True
 
     def republish(self, entry: CatalogEntry, regions: SnapshotRegions, version: int) -> None:
@@ -221,6 +247,7 @@ class Catalog:
                 entry.state.load() == STATE_TOMBSTONE
                 and entry.refcount.load() == 0
                 and entry.regions is None
+                and not entry.name      # still-bound entries are mid-update
             ):
                 return entry
         raise RuntimeError("catalog full")

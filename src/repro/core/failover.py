@@ -10,13 +10,18 @@ CAS-based election among orchestrator nodes.  All durable state (catalog,
 data regions) already lives in the shared pool, so the new master resumes
 with zero state transfer — it only re-derives its version counters from the
 catalog.
+
+Time is injected (:mod:`repro.core.clock`): under the real clock a
+``FailoverNode`` runs its heartbeat in a thread; the deterministic simulator
+(:mod:`repro.sim`) instead calls :meth:`FailoverNode.tick` directly under a
+``VirtualClock``, so elections and lease expiries replay exactly from a seed.
 """
 from __future__ import annotations
 
 import threading
-import time
 from typing import Callable, Dict, Optional
 
+from .clock import Clock, REAL_CLOCK
 from .coherence import AtomicU64, Catalog
 from .master import PoolMaster
 from .pool import HierarchicalPool
@@ -28,22 +33,23 @@ class MasterLease:
     """Shared-memory heartbeat lease: (holder_id, last_beat_ns) words updated
     with atomics — the CXL-resident election state."""
 
-    def __init__(self, timeout_s: float = 0.2):
+    def __init__(self, timeout_s: float = 0.2, clock: Optional[Clock] = None):
         self.holder = AtomicU64(NO_MASTER)
         self.last_beat = AtomicU64(0)
         self.term = AtomicU64(0)
         self.timeout_s = timeout_s
+        self.clock = clock or REAL_CLOCK
 
     def beat(self, node_id: int) -> bool:
         if self.holder.load() != node_id:
             return False
-        self.last_beat.store(time.monotonic_ns())
+        self.last_beat.store(self.clock.monotonic_ns())
         return True
 
     def expired(self) -> bool:
         if self.holder.load() == NO_MASTER:
             return True
-        return (time.monotonic_ns() - self.last_beat.load()) > self.timeout_s * 1e9
+        return (self.clock.monotonic_ns() - self.last_beat.load()) > self.timeout_s * 1e9
 
     def try_elect(self, node_id: int) -> bool:
         """CAS-based takeover: succeed only if the lease is vacant/expired.
@@ -54,7 +60,7 @@ class MasterLease:
             return False
         if self.holder.compare_exchange(current, node_id):
             self.term.fetch_add(1)
-            self.last_beat.store(time.monotonic_ns())
+            self.last_beat.store(self.clock.monotonic_ns())
             return True
         return False
 
@@ -63,13 +69,15 @@ class FailoverNode:
     """An orchestrator node that can assume pool-master duty."""
 
     def __init__(self, node_id: int, pool: HierarchicalPool, catalog: Catalog,
-                 lease: MasterLease, beat_interval_s: float = 0.05):
+                 lease: MasterLease, beat_interval_s: float = 0.05,
+                 clock: Optional[Clock] = None):
         assert node_id != NO_MASTER
         self.node_id = node_id
         self.pool = pool
         self.catalog = catalog
         self.lease = lease
         self.beat_interval_s = beat_interval_s
+        self.clock = clock or getattr(pool, "clock", None) or REAL_CLOCK
         self.master: Optional[PoolMaster] = None
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -77,19 +85,27 @@ class FailoverNode:
 
     # -- lifecycle ------------------------------------------------------------
     def start(self) -> None:
+        self._stop.clear()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
-    def stop(self) -> None:
+    def _join(self, timeout_s: float) -> None:
+        """Bounded join; the loop waits on the stop event (not a bare sleep),
+        so it exits within one scheduling quantum and tests never leak the
+        heartbeat thread between cases."""
         self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=2.0)
+        t = self._thread
+        if t is not None:
+            t.join(timeout=timeout_s)
+            assert not t.is_alive(), f"node {self.node_id}: heartbeat thread leaked"
+            self._thread = None
 
-    def crash(self) -> None:
+    def stop(self, timeout_s: float = 2.0) -> None:
+        self._join(timeout_s)
+
+    def crash(self, timeout_s: float = 2.0) -> None:
         """Simulated failure: heartbeats cease immediately."""
-        self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=2.0)
+        self._join(timeout_s)
         self.master = None
         self.events.append("crashed")
 
@@ -107,11 +123,17 @@ class FailoverNode:
         self.master = m
         self.events.append(f"elected(term={self.lease.term.load()})")
 
+    def tick(self) -> None:
+        """One heartbeat-loop iteration: beat if master, else try to elect.
+        Called from the thread loop under the real clock, or directly by the
+        deterministic simulator as one scheduled host step."""
+        if self.lease.holder.load() == self.node_id:
+            self.lease.beat(self.node_id)
+        elif self.lease.expired():
+            if self.lease.try_elect(self.node_id):
+                self._become_master()
+
     def _loop(self) -> None:
         while not self._stop.is_set():
-            if self.lease.holder.load() == self.node_id:
-                self.lease.beat(self.node_id)
-            elif self.lease.expired():
-                if self.lease.try_elect(self.node_id):
-                    self._become_master()
-            time.sleep(self.beat_interval_s)
+            self.tick()
+            self.clock.wait_event(self._stop, self.beat_interval_s)

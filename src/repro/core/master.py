@@ -8,10 +8,11 @@ borrow-counter based CXL eviction policy (§3.6).  Content-hash deduplication
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .clock import Clock, REAL_CLOCK
 from .coherence import STATE_TOMBSTONE, Catalog, CatalogEntry
 from .pagestore import StateImage
 from .pool import HierarchicalPool
@@ -19,15 +20,124 @@ from .snapshot import SnapshotRegions, build_snapshot, free_snapshot
 
 
 class PoolMaster:
-    def __init__(self, pool: HierarchicalPool, catalog: Optional[Catalog] = None):
+    def __init__(self, pool: HierarchicalPool, catalog: Optional[Catalog] = None,
+                 clock: Optional[Clock] = None):
         self.pool = pool
-        self.catalog = catalog or Catalog()
+        self.clock = clock or getattr(pool, "clock", None) or REAL_CLOCK
+        self.catalog = catalog or Catalog(clock=self.clock)
         self._versions: Dict[str, int] = {}
         self._pending_reclaim: List[CatalogEntry] = []
-        self._pending_regions: Dict[int, SnapshotRegions] = {}
         self._lock = threading.Lock()
+        # Owner-op serialization (two concurrent tombstone→free→republish
+        # sequences of one snapshot would double-free the old regions; two
+        # concurrent first publishes of one name would leak an entry):
+        #   _busy_names  — names with a publish in flight (claimed first)
+        #   _owner_busy  — entry indices mid-update; gc() defers these
+        self._busy_names: set = set()
+        self._owner_busy: set = set()
 
     # -- snapshot lifecycle (§3.3 Owner protocol) -------------------------------
+    def publish_steps(
+        self,
+        name: str,
+        image: StateImage,
+        working_set: Sequence[int],
+        metadata: Optional[dict] = None,
+        zero_bitmap: Optional[np.ndarray] = None,
+        gather_fn=None,
+        compress_cold: bool = False,
+    ) -> Iterator[Tuple[str, object]]:
+        """Generator form of :meth:`publish`, yielding at the owner protocol's
+        phase boundaries so the deterministic simulator can interleave
+        borrowers (and crash the owner) *between* phases.  Yields
+        ``(label, value)``:
+
+        * ``("owner_busy", name)``     — another publish of this name is in
+          flight; the driver waits (sleep / timeout) and resumes to re-poll;
+        * ``("built_new", regions)``   — new-name path, data written;
+        * ``("tombstoned", entry)``    — update path, new borrows now fail;
+        * ``("draining", entry)``      — refcount still nonzero; the driver
+          decides how to wait (sleep / timeout) and resumes to re-poll;
+        * ``("freed_old", entry)``     — old data regions returned to the pool;
+        * ``("rebuilt", regions)``     — new data written, not yet visible;
+        * ``("done", regions)``        — terminal: snapshot is PUBLISHED.
+        """
+        # claim the name BEFORE assigning a version or inspecting the catalog:
+        # serialized publishes then get monotonic versions and concurrent
+        # first-publishes of a new name cannot both take the create path
+        while True:
+            with self._lock:
+                if name not in self._busy_names:
+                    self._busy_names.add(name)
+                    break
+            yield ("owner_busy", name)
+        existing = None
+        try:
+            with self._lock:
+                version = self._versions.get(name, -1) + 1
+                self._versions[name] = version
+            existing = self.catalog.find(name)
+            if existing is None:
+                regions = build_snapshot(
+                    self.pool, image, working_set, name,
+                    version=version, metadata=metadata,
+                    zero_bitmap=zero_bitmap, gather_fn=gather_fn,
+                    compress_cold=compress_cold,
+                )
+                yield ("built_new", regions)
+                self.catalog.publish_new(name, regions, version)
+                yield ("done", regions)
+                return
+            # Update (§3.3): tombstone → wait for borrows to drain → rewrite
+            # the data regions → republish.  Freeing before rebuilding lets
+            # first-fit reuse the same pool addresses (the paper writes in
+            # place), which is exactly why borrowers must clflushopt after a
+            # successful borrow.
+            old = existing.regions
+            # A pending delete of this name is superseded by the update:
+            # cancel its deferred reclaim BEFORE tombstoning (gc() skips
+            # PUBLISHED entries), else a concurrent gc() during our drain
+            # window would free the old regions a second time and reclaim
+            # the entry mid-update.  Deletes issued *during* the drain are
+            # handled by gc() deferring entries in _owner_busy.
+            with self._lock:
+                while existing in self._pending_reclaim:
+                    self._pending_reclaim.remove(existing)
+                self._owner_busy.add(existing.index)
+            self.catalog.tombstone(name)
+            yield ("tombstoned", existing)
+            while existing.refcount.load() != 0:
+                yield ("draining", existing)
+            if old is not None:
+                free_snapshot(self.pool, old)
+                # drop the dangling reference NOW: if we crash (generator
+                # close) or the rebuild raises before republish, a later
+                # delete()+gc() must not free these bytes a second time
+                existing.regions = None
+            yield ("freed_old", existing)
+            regions = build_snapshot(
+                self.pool, image, working_set, name,
+                version=version, metadata=metadata,
+                zero_bitmap=zero_bitmap, gather_fn=gather_fn,
+                compress_cold=compress_cold,
+            )
+            yield ("rebuilt", regions)
+            self.catalog.republish(existing, regions, version)
+            # a delete() that landed during our drain window is superseded by
+            # this update (last writer wins): clear its pending reclaim, else
+            # the now-PUBLISHED entry sits in _pending_reclaim forever
+            with self._lock:
+                while existing in self._pending_reclaim:
+                    self._pending_reclaim.remove(existing)
+        finally:
+            # also runs on generator close (aborted/crashed owner), so a dead
+            # update never wedges later publishes of the same name
+            with self._lock:
+                self._busy_names.discard(name)
+                if existing is not None:
+                    self._owner_busy.discard(existing.index)
+        yield ("done", regions)
+
     def publish(
         self,
         name: str,
@@ -37,48 +147,43 @@ class PoolMaster:
         zero_bitmap: Optional[np.ndarray] = None,
         gather_fn=None,
         compress_cold: bool = False,
+        drain_timeout_s: float = 30.0,
     ) -> SnapshotRegions:
-        with self._lock:
-            version = self._versions.get(name, -1) + 1
-            self._versions[name] = version
-        existing = self.catalog.find(name)
-        if existing is None:
-            regions = build_snapshot(
-                self.pool, image, working_set, name,
-                version=version, metadata=metadata,
-                zero_bitmap=zero_bitmap, gather_fn=gather_fn,
-                compress_cold=compress_cold,
-            )
-            self.catalog.publish_new(name, regions, version)
-            return regions
-        # Update (§3.3): tombstone → wait for borrows to drain → rewrite the
-        # data regions → republish.  Freeing before rebuilding lets first-fit
-        # reuse the same pool addresses (the paper writes in place), which is
-        # exactly why borrowers must clflushopt after a successful borrow.
-        old = existing.regions
-        self.catalog.tombstone(name)
-        if not self.catalog.wait_unborrowed(existing):
-            raise TimeoutError(f"borrows of {name} did not drain")
-        if old is not None:
-            free_snapshot(self.pool, old)
-        regions = build_snapshot(
-            self.pool, image, working_set, name,
-            version=version, metadata=metadata,
+        """Blocking driver over :meth:`publish_steps` (production path)."""
+        deadline: Optional[float] = None
+        regions: Optional[SnapshotRegions] = None
+        for label, value in self.publish_steps(
+            name, image, working_set, metadata=metadata,
             zero_bitmap=zero_bitmap, gather_fn=gather_fn,
             compress_cold=compress_cold,
-        )
-        self.catalog.republish(existing, regions, version)
+        ):
+            if label in ("draining", "owner_busy"):
+                if deadline is None:
+                    deadline = self.clock.monotonic() + drain_timeout_s
+                if self.clock.monotonic() > deadline:
+                    raise TimeoutError(f"borrows of {name} did not drain")
+                self.clock.sleep(1e-5)
+            elif label == "done":
+                regions = value
+        assert regions is not None
         return regions
 
-    def delete(self, name: str) -> bool:
+    def delete(self, name: str, gc_now: bool = True) -> bool:
+        """Tombstone + schedule reclaim.  ``gc_now=False`` defers the reclaim
+        to an explicit :meth:`gc` call (the simulator interleaves other hosts
+        — and lease expiry — between the tombstone and the reclaim).
+
+        Owner ops are last-writer-wins: a delete that lands while an update
+        of the same name is draining is superseded by the update (the entry
+        is republished and the pending reclaim cancelled)."""
         entry = self.catalog.tombstone(name)
         if entry is None:
             return False
         with self._lock:
-            self._pending_reclaim.append(entry)
-            if entry.regions is not None:
-                self._pending_regions[entry.index] = entry.regions
-        self.gc()
+            if entry not in self._pending_reclaim:
+                self._pending_reclaim.append(entry)
+        if gc_now:
+            self.gc()
         return True
 
     def gc(self) -> int:
@@ -87,10 +192,17 @@ class PoolMaster:
         with self._lock:
             remaining: List[CatalogEntry] = []
             for entry in self._pending_reclaim:
+                if entry.index in self._owner_busy:
+                    # an update owns this entry's transition (its drain window
+                    # is transiently TOMBSTONE/refcount==0): reclaiming now
+                    # would double-free the old regions under the updater
+                    remaining.append(entry)
+                    continue
                 if entry.refcount.load() == 0 and entry.state.load() == STATE_TOMBSTONE:
-                    regions = self._pending_regions.pop(entry.index, None)
-                    if regions is not None:
-                        free_snapshot(self.pool, regions)
+                    # free what the entry holds NOW (a delete-time copy could
+                    # be stale if an update swapped the regions in between)
+                    if entry.regions is not None:
+                        free_snapshot(self.pool, entry.regions)
                     self.catalog.reclaim(entry)
                     freed += 1
                 else:

@@ -81,7 +81,8 @@ class Orchestrator:
         reader.invalidate_cxl()
         manifest, _meta = reader.machine_state()
 
-        instance = Instance(StateImage.empty_like(manifest), ledger)
+        instance = Instance(StateImage.empty_like(manifest), ledger,
+                            clock=self.pool.clock)
         rdma_engine = (
             AsyncRDMAEngine(self.pool.rdma, ledger) if self.use_async_rdma else None
         )

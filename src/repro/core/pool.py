@@ -26,6 +26,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .clock import Clock, REAL_CLOCK
 from .pagestore import PAGE_SIZE
 
 CACHELINE = 64
@@ -216,7 +217,12 @@ class HierarchicalPool:
         rdma_capacity: int = 1 << 30,
         cxl_cost: CostModel = CXL_COST,
         rdma_cost: CostModel = RDMA_COST,
+        clock: Optional[Clock] = None,
     ):
+        # The pool is the one object every component of a pod shares, so it
+        # carries the pod's time source: PoolMaster / FailoverNode / serving
+        # default their clock from here (repro.sim injects a VirtualClock).
+        self.clock = clock or REAL_CLOCK
         self.cxl = MemoryTier("cxl", cxl_capacity, cxl_cost)
         self.rdma = MemoryTier("rdma", rdma_capacity, rdma_cost)
 

@@ -31,6 +31,7 @@ from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
+from .clock import Clock, REAL_CLOCK
 from .pagestore import PAGE_SIZE, StateImage, runs_from_pages
 from .pool import (
     MMAP_PER_PAGE_S,
@@ -54,11 +55,13 @@ class Instance:
     """A restoring/running instance's guest address space + present bitmap."""
 
     def __init__(self, image: StateImage, ledger: Optional[TimeLedger] = None,
-                 scatter_fn: Optional[ScatterFn] = None):
+                 scatter_fn: Optional[ScatterFn] = None,
+                 clock: Optional[Clock] = None):
         self.image = image
         self.present = np.zeros(image.total_pages, dtype=bool)
         self.ledger = ledger or TimeLedger()
         self.scatter_fn = scatter_fn
+        self.clock = clock or REAL_CLOCK
         self.stats = {
             "pre_installed": 0,
             "fault_zero": 0,
@@ -143,7 +146,8 @@ class Instance:
 
     def wait_present(self, page: int, timeout_s: float = 30.0) -> bool:
         with self._cv:
-            return self._cv.wait_for(lambda: self.present[page], timeout=timeout_s)
+            return self.clock.cv_wait_for(
+                self._cv, lambda: self.present[page], timeout_s)
 
     def all_present(self) -> bool:
         return bool(self.present.all())
@@ -245,11 +249,17 @@ class RestoreEngine:
         rdma_engine: Optional[AsyncRDMAEngine] = None,
         buffer_pool: Optional[BufferPool] = None,
         scatter_fn: Optional[ScatterFn] = None,
+        clock: Optional[Clock] = None,
     ):
         self.reader = reader
         self.instance = instance
         if scatter_fn is not None:
             self.instance.scatter_fn = scatter_fn
+        if clock is not None:
+            # route the engine's clock to the instance too: page waits
+            # (wait_present) are the engine's only timed behaviour
+            self.instance.clock = clock
+        self.clock = clock or instance.clock
         self.ledger = instance.ledger
         self.rdma_engine = rdma_engine
         self.buffers = buffer_pool or BufferPool()
@@ -506,6 +516,11 @@ class RestoreEngine:
             self.ledger.add("rdma_read", self.reader.rdma.cost.xfer_time(nbytes))
             self.instance.uffd_copy_batch(np.arange(start, start + n),
                                           self.reader.split_cold_extent(rank0, n, payload))
+
+
+# The restore engine IS the paper's per-instance "restore session"; the
+# simulator and some call sites use that name.
+RestoreSession = RestoreEngine
 
 
 def mmap_install_cost(pages: Sequence[int]) -> float:

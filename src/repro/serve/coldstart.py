@@ -20,6 +20,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import Orchestrator, TimeLedger
+from ..core.clock import Clock, REAL_CLOCK
 from ..checkpoint.ckpt import restore_checkpoint, unflatten_state
 from ..models.model_zoo import Model, build
 from .engine import ServerInstance, _decode_jit
@@ -41,7 +42,9 @@ class SkeletonPool:
     """Continuously replenished pool of pre-created skeletons (§3.5)."""
 
     def __init__(self, cfg: ModelConfig, batch: int, max_len: int,
-                 target_size: int = 2, background: bool = True):
+                 target_size: int = 2, background: bool = True,
+                 clock: Optional[Clock] = None):
+        self.clock = clock or REAL_CLOCK
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
@@ -68,7 +71,9 @@ class SkeletonPool:
                 self._q.put(self._make())
                 self.stats["replenished"] += 1
             else:
-                time.sleep(0.01)
+                # waiting on the stop event (not a bare sleep) lets close()
+                # join the thread promptly instead of leaking it
+                self.clock.wait_event(self._stop, 0.01)
 
     def claim(self) -> Skeleton:
         self.stats["claimed"] += 1
@@ -78,10 +83,12 @@ class SkeletonPool:
             self.stats["created_on_demand"] += 1
             return self._make()
 
-    def close(self):
+    def close(self, timeout_s: float = 10.0):
         self._stop.set()
         if self._bg:
-            self._t.join(timeout=1.0)
+            # generous bound: the loop only re-checks _stop between _make()
+            # calls, and a skeleton build can take seconds on a loaded box
+            self._t.join(timeout=timeout_s)
 
 
 def restore_server(

@@ -1,0 +1,461 @@
+"""Deterministic discrete-event cluster simulator.
+
+``SimCluster`` owns one shared pod (``HierarchicalPool`` + ``Catalog`` +
+``MasterLease`` under a single :class:`VirtualClock`) and N simulated hosts.
+Host behaviour is expressed as **programs**: Python generators that yield a
+label after every atomic step (``yield "label"``) or a simulated delay
+(``yield ("sleep", seconds)``).  A seeded scheduler picks which runnable
+program advances next, so:
+
+  same seed  ⇒  same interleaving  ⇒  same trace  ⇒  same result.
+
+Programs call the *real* production code — ``Catalog.borrow_steps``,
+``PoolMaster.publish_steps``, ``FailoverNode.tick``, ``SnapshotReader``,
+``Instance``/``RestoreSession`` — decomposed at protocol phase boundaries,
+which is exactly where multi-host interleavings (and crashes) matter.
+
+After every step the :class:`InvariantChecker` validates the shared state
+against the cluster's independent accounting of all borrows in flight.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.coherence import Borrow, Catalog
+from ..core.failover import FailoverNode, MasterLease
+from ..core.master import PoolMaster
+from ..core.pagestore import StateImage
+from ..core.pool import HierarchicalPool
+from ..core.profiler import AccessRecorder
+from ..core.serving import Instance, RestoreSession
+from ..core.snapshot import SnapshotReader
+from .clock import VirtualClock
+from .faults import FaultPlan, SimTimeout
+from .invariants import InvariantChecker, InvariantViolation
+
+
+@dataclasses.dataclass
+class BorrowRecord:
+    """Cluster-side accounting for one successful borrow."""
+
+    host: str
+    name: str
+    borrow: Borrow
+    regions: object
+    version: int
+
+
+@dataclasses.dataclass
+class _Program:
+    name: str
+    gen: Iterator
+    wake_at: float = 0.0
+    done: bool = False
+    killed: bool = False
+    steps: int = 0
+    last_label: str = ""
+
+
+class SimCluster:
+    """N-host pod over one shared catalog, driven step-by-step from a seed."""
+
+    def __init__(
+        self,
+        n_hosts: int = 2,
+        seed: int = 0,
+        cxl_capacity: int = 64 << 20,
+        rdma_capacity: int = 128 << 20,
+        catalog_capacity: int = 16,
+        lease_timeout_s: float = 0.2,
+        beat_interval_s: float = 0.05,
+        schedule: str = "random",
+        step_quantum_s: float = 1e-6,
+    ):
+        assert schedule in ("random", "round_robin")
+        self.seed = seed
+        self.rng = random.Random(seed)
+        self.schedule = schedule
+        # every step costs a small time quantum, so sleeping programs always
+        # wake even while non-sleeping programs stay runnable (no starvation)
+        self.step_quantum_s = step_quantum_s
+        self.clock = VirtualClock()
+        self.pool = HierarchicalPool(cxl_capacity, rdma_capacity, clock=self.clock)
+        self.catalog = Catalog(catalog_capacity, clock=self.clock)
+        self.lease = MasterLease(lease_timeout_s, clock=self.clock)
+        # the pod's initial pool master (outside the failover group)
+        self.master = PoolMaster(self.pool, self.catalog)
+        # failover-capable nodes, one per host (ids 1..N; 0 is NO_MASTER)
+        self.nodes: Dict[int, FailoverNode] = {
+            i: FailoverNode(i, self.pool, self.catalog, self.lease,
+                            beat_interval_s=beat_interval_s, clock=self.clock)
+            for i in range(1, n_hosts + 1)
+        }
+        self._programs: Dict[str, _Program] = {}
+        self._order: List[str] = []        # insertion order (round_robin)
+        self._rr_next = 0
+        self.step_no = 0
+        self.trace: List[Tuple[int, str, str]] = []
+        self.events: List[str] = []
+        # borrow accounting (entry index -> counts); orphans from crashed
+        # programs stay counted — the refcount they leaked is still real.
+        self.live: Dict[int, int] = {}
+        self.midflight: Dict[int, int] = {}
+        self.borrow_records: List[BorrowRecord] = []
+        self.orphaned_records: List[BorrowRecord] = []
+        # canonical content per (name, version): the published StateImage
+        self.content: Dict[str, Dict[int, StateImage]] = {}
+        self.restored: List[dict] = []
+        self.fault_plan = FaultPlan()
+        self.checker = InvariantChecker(self)
+
+    # ------------------------------------------------------------------
+    # snapshot helpers
+    # ------------------------------------------------------------------
+    def make_image(self, value: float, hot_pages: int = 2, cold_pages: int = 2,
+                   zero_pages: int = 1) -> Tuple[StateImage, np.ndarray]:
+        """A small image with hot / cold / zero page classes; 'hot' pages are
+        filled with ``value`` so borrowers can verify which version they see."""
+        arrays = {
+            "hot": np.full(hot_pages * 1024, np.float32(value), np.float32),
+            "cold": np.arange(cold_pages * 1024, dtype=np.float32) + np.float32(value),
+            "zeros": np.zeros(max(1, zero_pages) * 1024, np.float32),
+        }
+        img = StateImage.build(arrays)
+        rec = AccessRecorder(img.manifest)
+        rec.touch_array("hot")
+        return img, rec.working_set()
+
+    def publish(self, name: str, value: float, master: Optional[PoolMaster] = None,
+                **image_kw) -> object:
+        """Immediate (setup-time) publish through the production path."""
+        master = master or self.master
+        img, ws = self.make_image(value, **image_kw)
+        regions = master.publish(name, img, ws)
+        self.content.setdefault(name, {})[regions.version] = img
+        self.events.append(f"published:{name}:v{regions.version}")
+        return regions
+
+    # ------------------------------------------------------------------
+    # program management + the scheduler
+    # ------------------------------------------------------------------
+    def add_program(self, name: str, gen: Iterator) -> None:
+        assert name not in self._programs, f"duplicate program {name!r}"
+        self._programs[name] = _Program(name, gen)
+        self._order.append(name)
+
+    def add_heartbeat(self, node_id: int, name: Optional[str] = None) -> None:
+        self.add_program(name or f"hb{node_id}",
+                         self.heartbeat_program(self.nodes[node_id]))
+
+    def kill_program(self, name: str) -> None:
+        """Simulated host crash: the program never runs again.  Its live
+        borrows and in-flight refcount increments leak (stay counted)."""
+        prog = self._programs[name]
+        if prog.done:
+            return
+        prog.done = prog.killed = True
+        prog.gen.close()
+        mine = [r for r in self.borrow_records if r.host == name]
+        for r in mine:
+            self.borrow_records.remove(r)
+            self.orphaned_records.append(r)
+            # keep self.live[...] counted: the refcount is still held
+        self.events.append(f"crashed:{name}")
+
+    def crash_node(self, node_id: int) -> None:
+        """Crash a failover node: its heartbeat program dies with it."""
+        hb = f"hb{node_id}"
+        if hb in self._programs:
+            self.kill_program(hb)
+        self.nodes[node_id].crash()
+        self.events.append(f"node_crashed:{node_id}")
+
+    def _runnable(self) -> List[str]:
+        now = self.clock.monotonic()
+        return [n for n in self._order
+                if not self._programs[n].done and self._programs[n].wake_at <= now]
+
+    def _pick(self) -> Optional[str]:
+        runnable = self._runnable()
+        if not runnable:
+            pending = [self._programs[n].wake_at for n in self._order
+                       if not self._programs[n].done]
+            if not pending:
+                return None
+            # discrete-event jump: advance virtual time to the next wakeup
+            self.clock.advance_to(min(pending))
+            runnable = self._runnable()
+            assert runnable
+        if self.schedule == "round_robin":
+            for _ in range(len(self._order)):
+                name = self._order[self._rr_next % len(self._order)]
+                self._rr_next += 1
+                if name in runnable:
+                    return name
+            return runnable[0]
+        return self.rng.choice(runnable)
+
+    def step(self) -> bool:
+        """Advance one program by one step; False when nothing is left."""
+        self.fault_plan.run_step_hooks(self.step_no, self)
+        self.clock.advance(self.step_quantum_s)
+        name = self._pick()
+        if name is None:
+            return False
+        prog = self._programs[name]
+        try:
+            label = next(prog.gen)
+        except StopIteration:
+            prog.done = True
+            label = "exit"
+        if isinstance(label, tuple) and label and label[0] == "sleep":
+            prog.wake_at = self.clock.monotonic() + float(label[1])
+            label = f"sleep:{label[1]:g}"
+        label = str(label)
+        prog.steps += 1
+        prog.last_label = label
+        self.trace.append((self.step_no, name, label))
+        if not prog.done and self.fault_plan.should_kill(name, label):
+            self.kill_program(name)
+        self.step_no += 1
+        self.checker.check_all()
+        return True
+
+    def run(self, max_steps: int = 20000, until=None) -> List[Tuple[int, str, str]]:
+        """Run until all programs finish, ``until(cluster)`` turns true, or
+        the step budget is exhausted.  Returns the trace."""
+        while self.step_no < max_steps:
+            if until is not None and until(self):
+                break
+            if not self.step():
+                break
+        return self.trace
+
+    # ------------------------------------------------------------------
+    # tracked borrow/release (keeps the invariant accounting honest)
+    # ------------------------------------------------------------------
+    def borrow_program_steps(self, host: str, name: str, precheck: bool = True):
+        """``yield from`` this inside a host program: advances the real
+        ``Catalog.borrow_steps`` one protocol phase per scheduler turn and
+        maintains the cluster's refcount accounting.  Returns a
+        :class:`BorrowRecord` (or None ⇒ cold start) via StopIteration."""
+        result: Optional[BorrowRecord] = None
+        for label, val in self.catalog.borrow_steps(name, state_precheck=precheck):
+            if label == "refcount_incremented":
+                self.midflight[val.index] = self.midflight.get(val.index, 0) + 1
+            elif label == "doomed":
+                self.midflight[val.index] = self.midflight.get(val.index, 0) - 1
+            elif label == "done" and val is not None:
+                idx = val.entry.index
+                self.midflight[idx] = self.midflight.get(idx, 0) - 1
+                self.live[idx] = self.live.get(idx, 0) + 1
+                result = BorrowRecord(host, name, val, val.regions, val.version)
+                self.borrow_records.append(result)
+            yield f"borrow:{label}"
+        return result
+
+    def release(self, rec: BorrowRecord) -> None:
+        rec.borrow.release()
+        self.live[rec.borrow.entry.index] -= 1
+        self.borrow_records.remove(rec)
+
+    def track_borrow(self, host: str, name: str,
+                     borrow: Optional[Borrow]) -> Optional[BorrowRecord]:
+        """Account for a borrow acquired outside ``borrow_program_steps``
+        (e.g. through ``LeaseFallback.acquire``, which is one atomic RPC)."""
+        if borrow is None:
+            return None
+        idx = borrow.entry.index
+        self.live[idx] = self.live.get(idx, 0) + 1
+        rec = BorrowRecord(host, name, borrow, borrow.regions, borrow.version)
+        self.borrow_records.append(rec)
+        return rec
+
+    # ------------------------------------------------------------------
+    # host program library
+    # ------------------------------------------------------------------
+    @staticmethod
+    def delayed(delay_s: float, gen: Iterator):
+        """Start ``gen`` only after ``delay_s`` of simulated time (scenario
+        scripting: e.g. let a borrow land before the owner tombstones)."""
+        yield ("sleep", delay_s)
+        yield from gen
+
+    def elected_master(self) -> Optional[PoolMaster]:
+        """The PoolMaster of whichever failover node currently holds the
+        lease, if any."""
+        for node in self.nodes.values():
+            if node.is_master:
+                return node.master
+        return None
+
+    def heartbeat_program(self, node: FailoverNode):
+        """The failover heartbeat loop as a schedulable program: exactly the
+        body of ``FailoverNode._loop`` under the virtual clock."""
+        while True:
+            node.tick()
+            yield "tick"
+            yield ("sleep", node.beat_interval_s)
+
+    def publish_program(self, name: str, value: float,
+                        master: Optional[PoolMaster] = None,
+                        drain_limit: Optional[int] = None,
+                        drain_sleep: float = 1e-5, **image_kw):
+        """Owner update through ``PoolMaster.publish_steps``, one protocol
+        phase per scheduler turn.  ``drain_limit`` bounds the drain polls
+        (TimeoutError analogue): on exhaustion the program records
+        ``drain_timeout:<name>`` and aborts — the livelock detector."""
+        master = master or self.master
+        img, ws = self.make_image(value, **image_kw)
+        polls = 0
+        gen = master.publish_steps(name, img, ws)
+        for label, val in gen:
+            if label == "done":
+                # record canonical content BEFORE yielding: the republish has
+                # already made this version borrowable, so a borrower
+                # scheduled next turn must find it in the content table
+                self.content.setdefault(name, {})[val.version] = img
+                self.events.append(f"published:{name}:v{val.version}")
+            yield f"publish:{label}"
+            if label in ("draining", "owner_busy"):
+                polls += 1
+                if drain_limit is not None and polls >= drain_limit:
+                    self.events.append(f"drain_timeout:{name}")
+                    gen.close()
+                    return
+                yield ("sleep", drain_sleep)
+
+    def delete_program(self, name: str, master: Optional[PoolMaster] = None,
+                       gc_polls: int = 8, gc_sleep: float = 1e-4):
+        """Owner delete: tombstone + deferred reclaim, polling gc() so the
+        scheduler can interleave releases (and lease expiry) mid-GC."""
+        master = master or self.master
+        if not master.delete(name, gc_now=False):
+            yield "delete:missing"
+            return
+        yield "delete:tombstoned"
+        for _ in range(gc_polls):
+            if master.gc() or not master._pending_reclaim:
+                yield "delete:gc_done"
+                return
+            yield "delete:gc_pending"
+            yield ("sleep", gc_sleep)
+        self.events.append(f"gc_incomplete:{name}")
+        yield "delete:gc_gave_up"
+
+    def borrower_program(self, host: str, name: str, attempts: int = 4,
+                         read_pages: int = 2, precheck: bool = True,
+                         pause_s: float = 1e-4):
+        """Borrow → clflush → read hot pages → verify against the canonical
+        image for the borrowed version → release, ``attempts`` times.  A torn
+        or stale read raises InvariantViolation (the I4 data-level check)."""
+        successes = 0
+        for i in range(attempts):
+            rec = yield from self.borrow_program_steps(host, name, precheck)
+            if rec is None:
+                self.events.append(f"cold_start:{host}")
+                yield ("sleep", pause_s)
+                continue
+            view = self.pool.host_view(f"{host}:a{i}")
+            reader = SnapshotReader(rec.borrow.regions, view, self.pool.rdma)
+            reader.invalidate_cxl()
+            yield "borrower:flushed"
+            canonical = self.content[name][rec.version].pages_matrix()
+            for p in reader.hot_page_indices()[:read_pages]:
+                got = reader.read_page(int(p))
+                if not np.array_equal(got, canonical[int(p)]):
+                    raise InvariantViolation(
+                        f"[seed={self.seed} step={self.step_no}] {host} observed "
+                        f"torn/stale bytes of {name!r} v{rec.version} page {int(p)}")
+                yield "borrower:read"
+            self.release(rec)
+            successes += 1
+            yield "borrower:released"
+            yield ("sleep", pause_s)
+        self.events.append(f"borrower_done:{host}:{successes}/{attempts}")
+
+    def tight_borrower_program(self, host: str, name: str, precheck: bool = True):
+        """Infinite tight retry loop, one borrow attempt per scheduler turn:
+        each turn finishes the previous attempt (CAS → release/back-out) and
+        immediately starts the next, pausing *between* the refcount increment
+        and the CAS.  Without the PR-1 state pre-check this keeps the shared
+        refcount permanently elevated at every owner drain poll — the
+        doomed-borrow livelock."""
+        pending = None
+        while True:
+            if pending is not None:
+                rec = None
+                try:
+                    while True:
+                        next(pending)
+                except StopIteration as stop:
+                    rec = stop.value
+                if rec is not None:
+                    self.release(rec)
+            pending = self.borrow_program_steps(host, name, precheck=precheck)
+            label = next(pending, None)     # pause mid-borrow if the path allows
+            yield label if label is not None else "borrow:noop"
+
+    def restore_program(self, host: str, name: str, rdma=None,
+                        use_batch: bool = True, max_retries: int = 6,
+                        retry_backoff_s: float = 1e-4, precheck: bool = True):
+        """Full warm restore via the production ``RestoreSession`` pieces
+        (zeropage ranges, run-coalesced hot pre-install, cold extent reads),
+        one run per scheduler turn, with SimTimeout retry/backoff on the
+        (possibly flaky) RDMA tier.  Verifies the restored image is
+        bit-identical to the canonical one for the borrowed version."""
+        rec = yield from self.borrow_program_steps(host, name, precheck)
+        if rec is None:
+            self.events.append(f"cold_start:{host}")
+            return
+        rdma = rdma if rdma is not None else self.pool.rdma
+        view = self.pool.host_view(host)
+        reader = SnapshotReader(rec.borrow.regions, view, rdma)
+        reader.invalidate_cxl()
+        manifest, _meta = reader.machine_state()
+        inst = Instance(StateImage.empty_like(manifest), clock=self.clock)
+        session = RestoreSession(reader, inst, None, clock=self.clock)
+        yield "restore:setup"
+        for start, n in reader.zero_runs():
+            inst.uffd_zeropage_range(int(start), int(n))
+        yield "restore:zeros"
+        session.pre_install_hot(use_batch=use_batch)
+        yield "restore:hot"
+        retries = 0
+        for start, n in reader.cold_runs():
+            start, n = int(start), int(n)
+            rank0 = reader.cold_rank(start)
+            pool_off, nbytes = reader.cold_extent_span(rank0, n)
+            while True:
+                try:
+                    payload = rdma.read(pool_off, nbytes)
+                    break
+                except SimTimeout:
+                    retries += 1
+                    if retries > max_retries:
+                        self.release(rec)
+                        raise
+                    yield ("sleep", retry_backoff_s * (2 ** retries))
+                    yield "restore:rdma_retry"
+            inst.uffd_copy_batch(np.arange(start, start + n),
+                                 reader.split_cold_extent(rank0, n, payload))
+            yield "restore:cold_run"
+        canonical = self.content[name][rec.version]
+        if not inst.all_present() or not np.array_equal(inst.image.buf, canonical.buf):
+            raise InvariantViolation(
+                f"[seed={self.seed} step={self.step_no}] {host}: restore of "
+                f"{name!r} v{rec.version} is not bit-identical")
+        self.restored.append({
+            "host": host, "name": name, "version": rec.version,
+            "retries": retries, "batched": use_batch,
+            "ledger": dict(inst.ledger.seconds),
+            "uffd_copies": inst.stats["uffd_copies"],
+            "uffd_zeropages": inst.stats["uffd_zeropages"],
+        })
+        yield "restore:verified"
+        self.release(rec)
+        yield "restore:released"

@@ -1,0 +1,133 @@
+"""Coherence/pool invariants, checked after every simulator step.
+
+The checker reads the *actual* shared state (catalog entries, lease words,
+tier free lists) and compares it against the cluster's independent
+accounting of what every host program has done.  Violations raise
+:class:`InvariantViolation` tagged with the scenario seed and step number,
+so any failure reproduces exactly by re-running the scenario with that seed.
+
+Invariant list (DESIGN.md §9):
+
+  I1  refcount accounting — every entry's refcount equals the number of
+      live (successful, unreleased) borrows plus in-flight increments of
+      borrows paused between their refcount++ and state CAS.  Orphans from
+      crashed hosts stay counted: a crash may leak a refcount, but the
+      shared word must never drift from the sum of causes.
+  I2  single master per term — a lease term is never observed with two
+      different holders, and at most one node is ``is_master`` at any step.
+  I3  pool conservation — per tier: bytes_in_use + free bytes == capacity,
+      with a sorted, non-overlapping, in-bounds free list.
+  I4  borrow pinning — a live successful borrow's entry still points at the
+      regions/version observed at borrow time (owner updates must drain
+      first); borrowers therefore never observe TOMBSTONE'd data bytes.
+  I5  catalog sanity — PUBLISHED entries have regions; refcounts are
+      non-negative; states are in the valid set.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from ..core.coherence import STATE_FREE, STATE_PUBLISHED, STATE_TOMBSTONE
+from ..core.failover import NO_MASTER
+
+
+class InvariantViolation(AssertionError):
+    """A checked coherence/pool invariant failed at a specific (seed, step)."""
+
+
+class InvariantChecker:
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self.term_history: Dict[int, int] = {}   # lease term -> holder node id
+        self.checks_run = 0
+
+    def _fail(self, invariant: str, msg: str) -> None:
+        c = self.cluster
+        raise InvariantViolation(
+            f"[seed={c.seed} step={c.step_no}] {invariant} violated: {msg}\n"
+            f"  reproduce with SimCluster(seed={c.seed}) and the same scenario"
+        )
+
+    # -- I1 -------------------------------------------------------------------
+    def check_refcounts(self) -> None:
+        c = self.cluster
+        for entry in c.catalog.entries:
+            expected = c.live.get(entry.index, 0) + c.midflight.get(entry.index, 0)
+            actual = entry.refcount.load()
+            if actual != expected:
+                self._fail(
+                    "I1 refcount==live_borrows+midflight",
+                    f"entry {entry.index} ({entry.name!r}): refcount={actual}, "
+                    f"live={c.live.get(entry.index, 0)}, "
+                    f"midflight={c.midflight.get(entry.index, 0)}")
+            if actual < 0:
+                self._fail("I5 refcount>=0", f"entry {entry.index}: {actual}")
+
+    # -- I2 -------------------------------------------------------------------
+    def check_single_master(self) -> None:
+        c = self.cluster
+        if c.lease is None:
+            return
+        term = c.lease.term.load()
+        holder = c.lease.holder.load()
+        if holder != NO_MASTER and term > 0:
+            prev = self.term_history.setdefault(term, holder)
+            if prev != holder:
+                self._fail("I2 one master per lease term",
+                           f"term {term} held by both node {prev} and node {holder}")
+        masters = [n.node_id for n in c.nodes.values() if n.is_master]
+        if len(masters) > 1:
+            self._fail("I2 at most one active master",
+                       f"simultaneous masters: {masters}")
+
+    # -- I3 -------------------------------------------------------------------
+    def check_pool_conservation(self) -> None:
+        for tier in (self.cluster.pool.cxl, self.cluster.pool.rdma):
+            free = sorted(tier._free)
+            free_bytes = sum(size for _off, size in free)
+            if free_bytes + tier.bytes_in_use != tier.capacity:
+                self._fail("I3 pool byte conservation",
+                           f"tier {tier.name}: free={free_bytes} + "
+                           f"in_use={tier.bytes_in_use} != capacity={tier.capacity}")
+            prev_end = 0
+            for off, size in free:
+                if off < 0 or size <= 0 or off + size > tier.capacity:
+                    self._fail("I3 free segment in bounds",
+                               f"tier {tier.name}: segment ({off}, {size})")
+                if off < prev_end:
+                    self._fail("I3 free segments disjoint",
+                               f"tier {tier.name}: segment ({off}, {size}) "
+                               f"overlaps previous ending at {prev_end}")
+                prev_end = off + size
+
+    # -- I4 -------------------------------------------------------------------
+    def check_borrow_pins(self) -> None:
+        for rec in self.cluster.borrow_records:
+            entry = rec.borrow.entry
+            if entry.regions is not rec.regions:
+                self._fail("I4 borrowed regions pinned",
+                           f"{rec.host}'s borrow of {rec.name!r} v{rec.version}: "
+                           f"entry regions were rewritten while borrowed")
+            if entry.version != rec.version:
+                self._fail("I4 borrowed version pinned",
+                           f"{rec.host}'s borrow of {rec.name!r}: version "
+                           f"{rec.version} -> {entry.version} while borrowed")
+
+    # -- I5 -------------------------------------------------------------------
+    def check_catalog_sanity(self) -> None:
+        valid = (STATE_FREE, STATE_PUBLISHED, STATE_TOMBSTONE)
+        for entry in self.cluster.catalog.entries:
+            state = entry.state.load()
+            if state not in valid:
+                self._fail("I5 valid entry state", f"entry {entry.index}: {state}")
+            if state == STATE_PUBLISHED and entry.regions is None:
+                self._fail("I5 PUBLISHED implies regions",
+                           f"entry {entry.index} ({entry.name!r}) has no regions")
+
+    def check_all(self) -> None:
+        self.check_refcounts()
+        self.check_single_master()
+        self.check_pool_conservation()
+        self.check_borrow_pins()
+        self.check_catalog_sanity()
+        self.checks_run += 1

@@ -1,19 +1,29 @@
 """Test-suite bootstrap.
 
-On a clean box without ``hypothesis`` installed, register a minimal
-deterministic fallback so the property tests still *run* (with fixed
-pseudo-random examples) instead of erroring at collection.  When the real
-``hypothesis`` is available it is used unchanged.
+Two jobs:
+
+1. On a clean box without ``hypothesis`` installed, register a minimal
+   deterministic fallback (including a tiny ``hypothesis.stateful``) so the
+   property tests still *run* (with fixed pseudo-random examples) instead of
+   erroring at collection.  When the real ``hypothesis`` is available it is
+   used unchanged.
+2. A thread-leak guard: every test asserts that it did not leave new live
+   threads behind (bounded grace for daemon workers to exit).  Leaked
+   heartbeat/completion threads were a real source of cross-test flakiness.
 """
 import functools
 import inspect
 import sys
+import threading
+import time
 import types
 
 import numpy as np
+import pytest
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
     import hypothesis  # noqa: F401
+    import hypothesis.stateful  # noqa: F401
 except ImportError:
     class _Strategy:
         """A draw function over a seeded numpy Generator."""
@@ -34,11 +44,22 @@ except ImportError:
         seq = list(seq)
         return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
 
-    def settings(max_examples=25, deadline=None, **_kw):
-        def deco(fn):
-            fn._fallback_max_examples = max_examples
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    class settings:
+        """Usable both as a decorator (@settings(...)) and as a config object
+        passed to run_state_machine_as_test (mirrors the real API shape)."""
+
+        def __init__(self, max_examples=25, deadline=None,
+                     stateful_step_count=50, **_kw):
+            self.max_examples = max_examples
+            self.deadline = deadline
+            self.stateful_step_count = stateful_step_count
+
+        def __call__(self, fn):
+            fn._fallback_max_examples = self.max_examples
             return fn
-        return deco
 
     def given(*strategies):
         def deco(fn):
@@ -56,16 +77,119 @@ except ImportError:
             return run
         return deco
 
+    # -- minimal hypothesis.stateful ---------------------------------------
+    class RuleBasedStateMachine:
+        def teardown(self):
+            pass
+
+    def rule(**strategies):
+        def deco(fn):
+            fn._fallback_rule = strategies
+            return fn
+        return deco
+
+    def initialize(**strategies):
+        def deco(fn):
+            fn._fallback_initialize = strategies
+            return fn
+        return deco
+
+    def invariant():
+        def deco(fn):
+            fn._fallback_invariant = True
+            return fn
+        return deco
+
+    def run_state_machine_as_test(cls, settings=None, **_kw):
+        """Deterministic replacement: seeded random walks over the rules,
+        invariants checked after every rule application."""
+        max_examples = getattr(settings, "max_examples", 10)
+        step_count = getattr(settings, "stateful_step_count", 50)
+        by_name = {}
+        for klass in reversed(cls.__mro__):      # inherited rules count too
+            for n, m in vars(klass).items():
+                if callable(m):
+                    by_name[n] = m
+        members = [m for _n, m in sorted(by_name.items())]
+        inits = [m for m in members if hasattr(m, "_fallback_initialize")]
+        rules = [m for m in members if hasattr(m, "_fallback_rule")]
+        invs = [m for m in members if getattr(m, "_fallback_invariant", False)]
+        assert rules, f"{cls.__name__} defines no @rule methods"
+        rng = np.random.default_rng(0)
+        for _ex in range(max_examples):
+            machine = cls()
+            try:
+                for fn in inits:
+                    fn(machine, **{k: s.draw(rng)
+                                   for k, s in fn._fallback_initialize.items()})
+                for inv in invs:
+                    inv(machine)
+                for _step in range(step_count):
+                    fn = rules[int(rng.integers(0, len(rules)))]
+                    fn(machine, **{k: s.draw(rng)
+                                   for k, s in fn._fallback_rule.items()})
+                    for inv in invs:
+                        inv(machine)
+            finally:
+                machine.teardown()
+
     _st = types.ModuleType("hypothesis.strategies")
     _st.integers = integers
     _st.lists = lists
     _st.sampled_from = sampled_from
+    _st.booleans = booleans
+
+    _stateful = types.ModuleType("hypothesis.stateful")
+    _stateful.RuleBasedStateMachine = RuleBasedStateMachine
+    _stateful.rule = rule
+    _stateful.initialize = initialize
+    _stateful.invariant = invariant
+    _stateful.run_state_machine_as_test = run_state_machine_as_test
 
     _hyp = types.ModuleType("hypothesis")
     _hyp.given = given
     _hyp.settings = settings
     _hyp.strategies = _st
+    _hyp.stateful = _stateful
     _hyp.__fallback__ = True
 
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+    sys.modules["hypothesis.stateful"] = _stateful
+
+
+# ---------------------------------------------------------------------------
+# thread-leak guard
+# ---------------------------------------------------------------------------
+
+# Thread names spawned by third-party runtimes (JAX/XLA thread pools etc.)
+# that legitimately persist across tests.
+_THIRDPARTY_THREAD_MARKERS = ("ThreadPoolExecutor", "pjrt", "xla", "grpc",
+                              "QueueFeeder", "Profiler")
+
+
+def _our_leaked_threads(before):
+    leaked = []
+    for t in threading.enumerate():
+        if t in before or not t.is_alive() or t is threading.current_thread():
+            continue
+        if any(m.lower() in t.name.lower() for m in _THIRDPARTY_THREAD_MARKERS):
+            continue
+        leaked.append(t)
+    return leaked
+
+
+@pytest.fixture(autouse=True)
+def no_thread_leaks():
+    """Every test must join the threads it started (FailoverNode heartbeats,
+    RDMA completion workers, skeleton-pool replenishers, ...)."""
+    before = set(threading.enumerate())
+    yield
+    deadline = time.monotonic() + 2.0
+    leaked = _our_leaked_threads(before)
+    while leaked and time.monotonic() < deadline:
+        time.sleep(0.02)
+        leaked = _our_leaked_threads(before)
+    assert not leaked, (
+        f"test leaked threads: {[t.name for t in leaked]} — join/stop them "
+        f"(FailoverNode.stop(), RestoredInstance.shutdown(), SkeletonPool.close(), ...)")

@@ -123,6 +123,114 @@ class TestProtocol:
         assert leases.rpc_count == 3  # acquire + release + failed acquire
 
 
+class TestDoomedBorrowRegression:
+    """Pins the PR-1 `Catalog.borrow` fix.  The hazardous interleaving —
+    owner tombstones *between* the borrower's refcount increment and its
+    state CAS — is driven deterministically through the step generators."""
+
+    def test_owner_tombstone_between_increment_and_cas(self):
+        pool = HierarchicalPool(64 << 20, 64 << 20)
+        master = PoolMaster(pool)
+        publish_version(master, "s", 1.0)
+        catalog = master.catalog
+        entry = catalog.find("s")
+
+        # borrower: run the protocol up to (and including) refcount++
+        steps = catalog.borrow_steps("s")
+        label, val = next(steps)
+        assert label == "refcount_incremented"
+        assert entry.refcount.load() == 1
+
+        # owner: interleave an update — tombstone lands before the CAS
+        arr = {"data": np.full((2000,), 2.0, np.float32)}
+        img = StateImage.build(arr)
+        from repro.core.profiler import AccessRecorder
+        rec = AccessRecorder(img.manifest)
+        rec.touch_array("data")
+        pub = master.publish_steps("s", img, rec.working_set())
+        label, _ = next(pub)
+        assert label == "tombstoned"
+
+        # borrower resumes: CAS must fail, increment must be backed out
+        label, _ = next(steps)
+        assert label == "doomed"
+        assert entry.refcount.load() == 0, "doomed borrow must decrement"
+        label, borrow = next(steps)
+        assert label == "done" and borrow is None, "borrower must cold-start"
+
+        # owner must complete WITHOUT a single drain stall
+        labels = [label for label, _v in pub]
+        assert "draining" not in labels, "owner stalled on a doomed borrow"
+        assert labels[-1] == "done"
+
+        # post-update: normal borrows see the new version
+        b = catalog.borrow("s")
+        assert b is not None and b.version == 1
+        b.release()
+
+    def test_tombstoned_entry_rejected_without_touching_refcount(self):
+        """The fix itself: a borrow of a TOMBSTONE entry fast-fails before
+        the refcount increment, so tight retry loops cannot livelock the
+        owner's wait-for-drain."""
+        pool = HierarchicalPool(32 << 20, 32 << 20)
+        master = PoolMaster(pool)
+        publish_version(master, "s", 1.0)
+        entry = master.catalog.tombstone("s")
+        steps = list(master.catalog.borrow_steps("s"))
+        assert steps == [("done", None)], "no refcount traffic on TOMBSTONE"
+        assert entry.refcount.load() == 0
+        # reverting the fix (state_precheck=False) re-exposes the increment
+        labels = [label for label, _v in
+                  master.catalog.borrow_steps("s", state_precheck=False)]
+        assert "refcount_incremented" in labels and "doomed" in labels
+        assert entry.refcount.load() == 0
+
+    def test_owner_drains_against_tight_borrow_loop(self):
+        """Threaded end-to-end: an owner update completes promptly while a
+        borrower retries in a tight loop (pre-PR-1 this livelocked)."""
+        pool = HierarchicalPool(64 << 20, 64 << 20)
+        master = PoolMaster(pool)
+        publish_version(master, "s", 1.0)
+        stop = threading.Event()
+
+        def hammer():
+            while not stop.is_set():
+                b = master.catalog.borrow("s")
+                if b is not None:
+                    b.release()
+
+        t = threading.Thread(target=hammer, daemon=True)
+        t.start()
+        try:
+            publish_version(master, "s", 2.0)   # must not TimeoutError
+        finally:
+            stop.set()
+            t.join(timeout=5)
+        assert not t.is_alive()
+        assert master.catalog.find("s").version == 1
+
+
+class TestFailoverThreadHygiene:
+    def test_stop_and_crash_join_heartbeat_thread(self):
+        from repro.core.failover import FailoverNode, MasterLease
+        pool = HierarchicalPool(32 << 20, 32 << 20)
+        master = PoolMaster(pool)
+        lease = MasterLease(timeout_s=0.1)
+        before = set(threading.enumerate())
+        n1 = FailoverNode(1, pool, master.catalog, lease, beat_interval_s=0.01)
+        n2 = FailoverNode(2, pool, master.catalog, lease, beat_interval_s=0.01)
+        n1.start()
+        n2.start()
+        deadline = time.monotonic() + 5.0
+        while not (n1.is_master or n2.is_master):
+            assert time.monotonic() < deadline, "no master elected"
+            time.sleep(0.005)
+        n1.stop()
+        n2.crash()
+        assert set(threading.enumerate()) - before == set(), \
+            "stop()/crash() must join the heartbeat thread"
+
+
 class TestStress:
     def test_concurrent_borrowers_vs_owner_updates(self):
         """Many borrower threads racing owner updates: every successful

@@ -1,0 +1,179 @@
+"""Stateful property tests of the ownership protocol (§3.3, §3.6).
+
+A ``RuleBasedStateMachine`` drives the production ``Catalog``/``PoolMaster``
+through random publish / borrow / release / tombstone / delete / gc walks and
+checks the model-level invariants after every rule:
+
+* refcount == number of held borrows (the machine's own ledger);
+* held borrows stay pinned to the regions/version they observed;
+* borrowed bytes always match the canonical content of the pinned version
+  (no torn or stale reads);
+* pool free lists stay conserved, sorted, and disjoint.
+
+Runs under real ``hypothesis`` when installed, else under the deterministic
+fallback shim registered in conftest.py.
+"""
+import numpy as np
+from hypothesis import settings
+from hypothesis.stateful import (
+    RuleBasedStateMachine,
+    invariant,
+    rule,
+    run_state_machine_as_test,
+)
+from hypothesis import strategies as st
+
+from repro.core import (
+    Catalog,
+    HierarchicalPool,
+    PoolMaster,
+    STATE_FREE,
+    STATE_PUBLISHED,
+    STATE_TOMBSTONE,
+    SnapshotReader,
+    StateImage,
+)
+from repro.core.profiler import AccessRecorder
+
+NAMES = ["alpha", "beta", "gamma"]
+
+
+class CoherenceMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.pool = HierarchicalPool(96 << 20, 96 << 20)
+        self.master = PoolMaster(self.pool, Catalog(capacity=8))
+        self.catalog = self.master.catalog
+        self.held = []                      # (name, borrow, regions, version)
+        self.content = {}                   # name -> version -> StateImage
+        self.counter = 0.0
+
+    # -- helpers -----------------------------------------------------------
+    def _held_on(self, name):
+        return [h for h in self.held if h[0] == name]
+
+    def _publish(self, name):
+        self.counter += 1.0
+        arr = {
+            "hot": np.full(2048, np.float32(self.counter), np.float32),
+            "cold": np.arange(1024, dtype=np.float32) + np.float32(self.counter),
+        }
+        img = StateImage.build(arr)
+        rec = AccessRecorder(img.manifest)
+        rec.touch_array("hot")
+        regions = self.master.publish(name, img, rec.working_set())
+        self.content.setdefault(name, {})[regions.version] = img
+
+    # -- rules -------------------------------------------------------------
+    @rule(name=st.sampled_from(NAMES))
+    def publish(self, name):
+        # only update when the entry is drained: the blocking publish() waits
+        # for refcount==0 and this machine is single-threaded
+        entry = self.catalog.find(name)
+        if entry is not None and entry.refcount.load() != 0:
+            return
+        self._publish(name)
+
+    @rule(name=st.sampled_from(NAMES))
+    def borrow(self, name):
+        b = self.catalog.borrow(name)
+        if b is not None:
+            self.held.append((name, b, b.regions, b.version))
+
+    @rule(i=st.integers(0, 5))
+    def release(self, i):
+        if self.held:
+            name, b, _regions, _version = self.held.pop(i % len(self.held))
+            b.release()
+
+    @rule(name=st.sampled_from(NAMES))
+    def tombstone(self, name):
+        self.catalog.tombstone(name)
+
+    @rule(name=st.sampled_from(NAMES))
+    def delete(self, name):
+        self.master.delete(name)
+
+    @rule()
+    def gc(self):
+        self.master.gc()
+
+    @rule()
+    def verify_held_reads(self):
+        """Every held borrow still reads the exact bytes of its version."""
+        for name, b, regions, version in self.held:
+            canonical = self.content[name][version].pages_matrix()
+            view = self.pool.host_view(f"check{id(b)}")
+            reader = SnapshotReader(regions, view, self.pool.rdma)
+            reader.invalidate_cxl()
+            for p in reader.hot_page_indices()[:2]:
+                assert np.array_equal(reader.read_page(int(p)), canonical[int(p)]), \
+                    f"torn/stale read of {name} v{version} page {int(p)}"
+
+    # -- invariants ----------------------------------------------------------
+    @invariant()
+    def refcounts_match_held_borrows(self):
+        per_entry = {}
+        for _name, b, _regions, _version in self.held:
+            per_entry[b.entry.index] = per_entry.get(b.entry.index, 0) + 1
+        for entry in self.catalog.entries:
+            assert entry.refcount.load() == per_entry.get(entry.index, 0), \
+                f"entry {entry.index}: refcount drifted from held borrows"
+
+    @invariant()
+    def held_borrows_stay_pinned(self):
+        for name, b, regions, version in self.held:
+            assert b.entry.regions is regions, \
+                f"{name} v{version}: regions rewritten under a live borrow"
+            assert b.entry.version == version
+
+    @invariant()
+    def catalog_states_valid(self):
+        for entry in self.catalog.entries:
+            state = entry.state.load()
+            assert state in (STATE_FREE, STATE_PUBLISHED, STATE_TOMBSTONE)
+            if state == STATE_PUBLISHED:
+                assert entry.regions is not None
+
+    @invariant()
+    def pool_bytes_conserved(self):
+        for tier in (self.pool.cxl, self.pool.rdma):
+            free = sorted(tier._free)
+            assert sum(s for _o, s in free) + tier.bytes_in_use == tier.capacity
+            prev_end = 0
+            for off, size in free:
+                assert off >= prev_end, f"tier {tier.name}: overlapping free list"
+                prev_end = off + size
+
+    def teardown(self):
+        for _name, b, _regions, _version in self.held:
+            b.release()
+        self.master.gc()
+
+
+def test_coherence_state_machine():
+    run_state_machine_as_test(
+        CoherenceMachine,
+        settings=settings(max_examples=12, stateful_step_count=60, deadline=None),
+    )
+
+
+def test_lease_fallback_state_machine():
+    """Same walk through the RPC-lease fallback acquire/release path."""
+    from repro.core.coherence import LeaseFallback
+
+    class LeaseMachine(CoherenceMachine):
+        def __init__(self):
+            super().__init__()
+            self.leases = LeaseFallback(self.catalog)
+
+        @rule(name=st.sampled_from(NAMES))
+        def lease_borrow(self, name):
+            b = self.leases.acquire(name)
+            if b is not None:
+                self.held.append((name, b, b.regions, b.version))
+
+    run_state_machine_as_test(
+        LeaseMachine,
+        settings=settings(max_examples=8, stateful_step_count=50, deadline=None),
+    )

@@ -183,6 +183,7 @@ ENTRY %main (p: f32[128,128]) -> f32[128,128] {
         assert r["coll_all-reduce"] == 128 * 128 * 4
 
 
+@pytest.mark.slow
 class TestSortedMoE:
     def test_matches_nodrop_dispatch(self):
         """Dropless sorted dispatch == capacity dispatch with no drops."""

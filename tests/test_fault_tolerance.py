@@ -62,6 +62,7 @@ class TestCheckpoint:
         some_m = next(e for e in img.manifest.extents if "/m/" in e.name or e.name.startswith("opt/m"))
         assert not (set(some_m.pages()) & ws)
 
+    @pytest.mark.slow
     def test_crash_resume_reproduces_uninterrupted_run(self):
         """train 10 → [crash] → restore → train to 20 must equal a straight
         20-step run (deterministic data + exact state restore)."""

@@ -36,6 +36,7 @@ class TestZeroDetect:
         want = zero_detect_ref(jnp.asarray(pages))
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
+    @pytest.mark.slow
     @given(st.integers(1, 64), st.integers(0, 63))
     @settings(max_examples=20, deadline=None)
     def test_property_single_nonzero_elem(self, n_pages, elem):
@@ -70,6 +71,7 @@ class TestGatherScatter:
         want[idx] = compact
         np.testing.assert_array_equal(np.asarray(got), want)
 
+    @pytest.mark.slow
     @given(st.integers(2, 40))
     @settings(max_examples=15, deadline=None)
     def test_property_gather_scatter_inverse(self, n):
@@ -102,6 +104,7 @@ class TestChecksum:
         assert base != other
 
 
+@pytest.mark.slow
 class TestFlashAttention:
     @pytest.mark.parametrize("b,hq,hkv,sq,skv,dk,dv", [
         (1, 4, 4, 128, 128, 64, 64),      # MHA

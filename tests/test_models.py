@@ -18,6 +18,9 @@ KEY = jax.random.PRNGKey(0)
 SMALL_TRAIN = ShapeSpec("t", 64, 2, "train")
 SMALL_DECODE = ShapeSpec("d", 64, 2, "decode")
 
+# Whole module is model-compile heavy (minutes of XLA time): slow tier only.
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def rng():

@@ -1,0 +1,147 @@
+"""Differential fuzz: batched vs per-page restore over random snapshot
+layouts (hot/cold/zero run mixes, including empty-class and single-page-run
+edges).  Both paths must produce bit-identical images AND agree on the
+ioctl/transfer accounting (same page counts, same bytes; batching may only
+*amortize* modeled time, never undercount it)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    HierarchicalPool,
+    Instance,
+    PoolMaster,
+    RestoreEngine,
+    SnapshotReader,
+    StateImage,
+)
+from repro.core.pagestore import PAGE_SIZE
+
+
+def build_layout(classes, fill_seed=0):
+    """Build a StateImage + working set from a per-page class list
+    (entries in {"hot", "cold", "zero"})."""
+    n = len(classes)
+    rng = np.random.default_rng(fill_seed + 1000 * n)
+    buf = np.zeros(n * PAGE_SIZE, dtype=np.uint8)
+    for i, cls in enumerate(classes):
+        if cls == "zero":
+            continue
+        page = rng.integers(0, 256, size=PAGE_SIZE, dtype=np.uint8)
+        page[0] = max(1, int(page[0]))          # guarantee non-zero content
+        buf[i * PAGE_SIZE : (i + 1) * PAGE_SIZE] = page
+    img = StateImage.build({"blob": buf})
+    working_set = [i for i, cls in enumerate(classes) if cls == "hot"]
+    return img, working_set
+
+
+def restore_both_ways(classes, fill_seed=0):
+    img, ws = build_layout(classes, fill_seed)
+    pool = HierarchicalPool(64 << 20, 64 << 20)
+    master = PoolMaster(pool)
+    master.publish("snap", img, ws)
+    borrow = master.catalog.borrow("snap")
+    assert borrow is not None
+
+    results = []
+    for use_batch in (True, False):
+        view = pool.host_view(f"h-{use_batch}")
+        reader = SnapshotReader(borrow.regions, view, pool.rdma)
+        reader.invalidate_cxl()
+        inst = Instance(StateImage.empty_like(img.manifest))
+        engine = RestoreEngine(reader, inst, None)
+        engine.install_all_sync(use_batch=use_batch)
+        assert inst.all_present()
+        results.append((inst, reader))
+    borrow.release()
+    return img, results
+
+
+def check_differential(classes, fill_seed=0):
+    img, ((batched, r_b), (perpage, _r_p)) = restore_both_ways(classes, fill_seed)
+    n_hot = r_b.hot_page_indices().size
+    n_cold = r_b.cold_page_indices().size
+    n_zero = r_b.zero_page_indices().size
+    assert n_hot + n_cold + n_zero == len(classes)
+
+    # 1) bit-identical: both paths reproduce the published image exactly
+    np.testing.assert_array_equal(batched.image.buf, img.buf)
+    np.testing.assert_array_equal(perpage.image.buf, img.buf)
+
+    # 2) accounting parity: identical page counts and installed bytes
+    for key in ("uffd_copies", "uffd_zeropages", "bytes_installed"):
+        assert batched.stats[key] == perpage.stats[key], (
+            f"{key}: batched={batched.stats[key]} perpage={perpage.stats[key]} "
+            f"classes={classes}")
+    assert batched.stats["uffd_copies"] == n_hot + n_cold
+    assert batched.stats["uffd_zeropages"] == n_zero
+
+    # 3) modeled time: batching amortizes fixed ioctl/op costs, never adds
+    for key in ("uffd_copy", "uffd_zeropage", "rdma_read"):
+        b = batched.ledger.seconds.get(key, 0.0)
+        p = perpage.ledger.seconds.get(key, 0.0)
+        assert b <= p + 1e-12, f"{key}: batched {b} > per-page {p}"
+    if any(c != "zero" for c in classes):
+        assert batched.stats["uffd_batches"] > 0
+
+
+EDGE_LAYOUTS = [
+    ["zero"],                                     # single all-zero page
+    ["hot"],                                      # single hot page
+    ["cold"],                                     # single cold page
+    ["zero"] * 8,                                 # empty hot AND cold classes
+    ["hot"] * 8,                                  # one maximal hot run
+    ["cold"] * 8,                                 # one maximal cold run
+    ["hot", "cold"] * 4,                          # all single-page runs
+    ["hot", "zero", "cold", "zero"] * 3,          # zeros splitting both classes
+    ["hot"] * 3 + ["zero"] + ["hot"] * 2 + ["cold"] * 4 + ["zero"] * 2,
+]
+
+
+@pytest.mark.parametrize("classes", EDGE_LAYOUTS,
+                         ids=["-".join(c[:4]) + f"x{len(c)}" for c in EDGE_LAYOUTS])
+def test_edge_layouts(classes):
+    check_differential(classes)
+
+
+@given(st.lists(st.sampled_from(["hot", "cold", "zero"]), min_size=1, max_size=48),
+       st.integers(0, 1 << 16))
+@settings(max_examples=40, deadline=None)
+def test_random_layouts(classes, fill_seed):
+    check_differential(classes, fill_seed)
+
+
+def test_restores_identical_under_concurrent_owner_update():
+    """The borrow pins one version: restoring both ways while the owner
+    publishes a new version must still be bit-identical to the *borrowed*
+    version (the update drains only after release)."""
+    import threading
+
+    classes = ["hot"] * 4 + ["cold"] * 4 + ["zero"] * 2
+    img, ws = build_layout(classes, fill_seed=7)
+    pool = HierarchicalPool(64 << 20, 64 << 20)
+    master = PoolMaster(pool)
+    master.publish("snap", img, ws)
+    borrow = master.catalog.borrow("snap")
+
+    img2, ws2 = build_layout(classes, fill_seed=8)
+    t = threading.Thread(target=master.publish, args=("snap", img2, ws2), daemon=True)
+    t.start()
+
+    images = []
+    for use_batch in (True, False):
+        view = pool.host_view(f"h{use_batch}")
+        reader = SnapshotReader(borrow.regions, view, pool.rdma)
+        reader.invalidate_cxl()
+        inst = Instance(StateImage.empty_like(img.manifest))
+        RestoreEngine(reader, inst, None).install_all_sync(use_batch=use_batch)
+        images.append(inst.image.buf.copy())
+
+    np.testing.assert_array_equal(images[0], img.buf)
+    np.testing.assert_array_equal(images[1], img.buf)
+    borrow.release()
+    t.join(timeout=10)
+    assert not t.is_alive()
+    b2 = master.catalog.borrow("snap")
+    assert b2.version == 1
+    b2.release()

@@ -22,6 +22,9 @@ from repro.train.trainstep import init_train_state, make_train_step
 TINY = get_config("qwen2.5-14b").reduced(
     n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128, vocab=128, d_head=32)
 
+# Whole module jit-compiles train steps (slowest file in the suite): slow tier.
+pytestmark = pytest.mark.slow
+
 
 class TestOptimizer:
     def test_adamw_matches_reference_step(self):
