@@ -9,6 +9,8 @@ The paper's contribution as a composable library:
 - :mod:`serving`    — copy-based page serving, async RDMA demand paging (§3.4)
 - :mod:`profiler`   — offline hotness profiling (§3.2)
 - :mod:`master`     — pool master: publish/update/delete, eviction (§3.6)
+- :mod:`nodeserver` — host-wide page-serving runtime: shared RDMA engine,
+  cross-instance DRR prefetch + doorbell batching, hot-chunk fan-out (§3.5)
 - :mod:`orchestrator` — node agent: borrow → flush → pre-install → resume
 - :mod:`dedup`      — content-hash snapshot deduplication (§3.6)
 """
@@ -22,6 +24,7 @@ from .pool import (
     CostModel,
     HierarchicalPool,
     HostView,
+    LinkArbiter,
     MemoryTier,
     TimeLedger,
 )
@@ -57,6 +60,7 @@ from .serving import (
 )
 from .profiler import AccessRecorder, WorkloadProfile, profile_invocations
 from .master import PoolMaster
+from .nodeserver import FanoutGroup, HotChunkCache, NodePageServer
 from .orchestrator import Orchestrator, RestoredInstance
 from .dedup import DedupStore, fnv1a_page, fnv1a_pages
 

@@ -1,0 +1,468 @@
+"""Host-wide page-serving runtime (§3.5, §5.3 deployment regime).
+
+The paper's deployment story is many co-located restores per host sharing
+ONE RNIC and ONE CXL link.  A :class:`NodePageServer` is that host's single
+serving runtime: one shared :class:`~repro.core.serving.AsyncRDMAEngine`,
+one completion worker and one prefetch pump multiplex every active
+:class:`~repro.core.serving.RestoreEngine` session on the host, replacing
+the engine + worker thread + BufferPool + completion thread that each
+restore used to build privately.
+
+What the shared runtime buys (DESIGN.md §10):
+
+* **Demand-over-prefetch priority across instances** — demand faults from
+  ANY instance are posted urgent on the shared submit queue, so they
+  overtake every queued prefetch extent, including a neighbour's.
+* **Cross-instance fairness** — prefetch extents are drained round-robin
+  with a deficit counter (DRR) across fan-out groups, so a heavy
+  prefetcher cannot starve a co-located light restore.
+* **Cross-instance doorbell batching** — the pump coalesces posts from
+  multiple restores into one doorbell, amortizing the per-op latency
+  budget (QP-depth pipelining) across instances instead of per instance.
+* **Hot-chunk fan-out** — when k instances concurrently restore the same
+  ``(name, version)``, each CXL hot chunk and each RDMA cold extent is
+  physically read ONCE and scattered k times (:class:`HotChunkCache`,
+  refcounted per group, released on un-borrow).  The link then carries 1x
+  bytes instead of kx, which the per-host :class:`~repro.core.pool.LinkArbiter`
+  turns into k-fold lower modeled contention.
+
+Lifecycle: the server parks its threads when the last session detaches and
+restarts them on the next attach, so idle hosts carry no thread residue.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .pagestore import PAGE_SIZE
+from .pool import HierarchicalPool, TimeLedger
+from .serving import AsyncRDMAEngine, BufferPool, Instance, RestoreEngine, ScatterFn
+from .snapshot import SnapshotReader
+
+
+class _ChunkEntry:
+    __slots__ = ("data", "modeled_s", "ready")
+
+    def __init__(self):
+        self.data: Optional[np.ndarray] = None
+        self.modeled_s = 0.0
+        self.ready = threading.Event()
+
+
+class HotChunkCache:
+    """Refcounted fan-out cache: one physical read, k borrowers.
+
+    Entries are keyed ``(group_key, byte_offset)``; the first requester (the
+    leader) performs the read and records the modeled seconds it was charged,
+    followers wait on the entry and replay the same charge to their own
+    ledger — they logically waited for the same transfer, but the link only
+    carried the bytes once.  Entries live while their fan-out group has at
+    least one attached session and are dropped on the group's un-borrow.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: Dict[Tuple[object, int], _ChunkEntry] = {}
+        self.stats = {"reads": 0, "fanout_hits": 0}
+
+    def get_or_read(self, key, read_fn) -> Tuple[np.ndarray, float, bool]:
+        """-> (data, modeled_s, was_leader); `read_fn() -> (data, modeled_s)`."""
+        with self._lock:
+            entry = self._entries.get(key)
+            leader = entry is None
+            if leader:
+                entry = self._entries[key] = _ChunkEntry()
+        if leader:
+            try:
+                entry.data, entry.modeled_s = read_fn()
+            finally:
+                entry.ready.set()
+            with self._lock:
+                self.stats["reads"] += 1
+            return entry.data, entry.modeled_s, True
+        entry.ready.wait(timeout=30.0)
+        if entry.data is None:      # leader failed: fall back to a private read
+            data, t = read_fn()
+            return data, t, True
+        with self._lock:
+            self.stats["fanout_hits"] += 1
+        return entry.data, entry.modeled_s, False
+
+    def drop_group(self, group_key) -> int:
+        with self._lock:
+            dead = [k for k in self._entries if k[0] == group_key]
+            for k in dead:
+                del self._entries[k]
+            return len(dead)
+
+
+class _Extent:
+    __slots__ = ("es", "en", "rank0", "pool_off", "nbytes")
+
+    def __init__(self, es, en, rank0, pool_off, nbytes):
+        self.es, self.en, self.rank0 = es, en, rank0
+        self.pool_off, self.nbytes = pool_off, nbytes
+
+
+class FanoutGroup:
+    """All co-located sessions restoring one published ``(name, version)``."""
+
+    def __init__(self, key, reader: SnapshotReader):
+        self.key = key
+        self.reader = reader
+        self.sessions: Dict[int, RestoreEngine] = {}
+        self.queue: Deque[_Extent] = deque()
+        self.deficit = 0
+        self.enqueued = False
+        self.poster: Optional[RestoreEngine] = None
+        # extent starts currently covered by the pump (queued or in flight):
+        # a session joining AFTER some extents completed re-enqueues exactly
+        # the ones it still needs (they are no longer in this set)
+        self.covered: set = set()
+
+
+class NodePageServer:
+    """One per host: the shared page-serving runtime for all restores."""
+
+    DRR_QUANTUM = 1 << 20    # prefetch bytes a group may post per DRR round
+
+    def __init__(self, host: str, pool: HierarchicalPool,
+                 buffer_pool_pages: int = 512, poll_budget: int = 1024,
+                 drr_quantum: Optional[int] = None):
+        self.host = host
+        self.pool = pool
+        self.drr_quantum = drr_quantum or self.DRR_QUANTUM
+        self.engine = AsyncRDMAEngine(pool.rdma, TimeLedger(),
+                                      poll_budget=poll_budget, host=host,
+                                      start=False)
+        self.buffers = BufferPool(buffer_pool_pages)
+        self.chunks = HotChunkCache()
+        self._cxl_arbiter = pool.cxl.arbiter_for(host)
+        self._rdma_arbiter = pool.rdma.arbiter_for(host)
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._lifecycle = threading.Lock()
+        self._stop = threading.Event()
+        self._sem = threading.Semaphore(max(1, pool.rdma.cost.max_inflight))
+        self._groups: Dict[object, FanoutGroup] = {}
+        self._sessions: Dict[int, RestoreEngine] = {}
+        self._completion_thread: Optional[threading.Thread] = None
+        self._pump_thread: Optional[threading.Thread] = None
+        self.stats = {"attached": 0, "detached": 0, "demand_reads": 0,
+                      "extents_posted": 0, "extents_skipped": 0,
+                      "doorbells": 0, "fanout_installs": 0}
+        # post order of (group_key, extent_start): fairness is observable
+        self.post_order: Deque[Tuple[object, int]] = deque(maxlen=4096)
+
+    # -- session lifecycle ---------------------------------------------------
+    def attach(self, name: str, version: int, reader: SnapshotReader,
+               instance: Instance,
+               scatter_fn: Optional[ScatterFn] = None) -> RestoreEngine:
+        """Join the host runtime; sessions restoring the same ``(name,
+        version)`` form one fan-out group (ONE arbiter stream: their reads
+        are served by shared physical transfers)."""
+        session = RestoreEngine(reader, instance, rdma_engine=None,
+                                buffer_pool=self.buffers,
+                                scatter_fn=scatter_fn, server=self)
+        gkey = (name, version)
+        with self._lifecycle:
+            self._ensure_running()
+            with self._lock:
+                group = self._groups.get(gkey)
+                if group is None:
+                    group = self._groups[gkey] = FanoutGroup(gkey, reader)
+                    self._cxl_arbiter.register(gkey)
+                    self._rdma_arbiter.register(gkey)
+                group.sessions[id(session)] = session
+                self._sessions[id(session)] = session
+                session._group = group
+            self.stats["attached"] += 1
+        return session
+
+    def detach(self, session: RestoreEngine) -> None:
+        """Un-borrow: leave the group; the last session out drops the
+        group's fan-out cache entries and its arbiter stream, and parks the
+        runtime threads when the host goes fully idle."""
+        with self._lifecycle:
+            with self._lock:
+                self._sessions.pop(id(session), None)
+                group = session._group
+                session._group = None
+                emptied = False
+                if group is not None:
+                    group.sessions.pop(id(session), None)
+                    if not group.sessions:
+                        self._groups.pop(group.key, None)
+                        group.queue.clear()
+                        emptied = True
+                idle = not self._sessions
+            if group is not None and emptied:
+                self.chunks.drop_group(group.key)
+                self._cxl_arbiter.unregister(group.key)
+                self._rdma_arbiter.unregister(group.key)
+            self.stats["detached"] += 1
+            if idle:
+                self._park()
+
+    def close(self) -> None:
+        """Park the runtime if the host is idle.  With sessions still
+        attached this is a no-op — live restores stay wired to a running
+        engine, and the threads park on the last detach anyway."""
+        with self._lifecycle:
+            with self._lock:
+                busy = bool(self._sessions)
+            if not busy:
+                self._park()
+
+    def _ensure_running(self) -> None:
+        if self._pump_thread is not None:
+            return
+        self._stop.clear()
+        self.engine.start()
+        self._completion_thread = threading.Thread(
+            target=self._completion_loop, daemon=True)
+        self._completion_thread.start()
+        self._pump_thread = threading.Thread(target=self._pump_loop, daemon=True)
+        self._pump_thread.start()
+
+    def _park(self) -> None:
+        """Stop threads, drain the engine, keep the server reusable."""
+        self._stop.set()
+        with self._work:
+            self._work.notify_all()
+        for t in (self._pump_thread, self._completion_thread):
+            if t is not None:
+                t.join(timeout=5.0)
+        self._pump_thread = self._completion_thread = None
+        self.engine.quiesce()
+        while True:     # orphaned completions: return buffers / QP slots
+            item = self.engine.poll_completion(block=False)
+            if item is None:
+                break
+            self._route(*item)
+        self.engine.close()
+        self._stop.clear()
+
+    # -- hot-chunk fan-out ----------------------------------------------------
+    def hot_chunk(self, session: RestoreEngine, off: int, nbytes: int) -> np.ndarray:
+        group = session._group
+        with self._lock:
+            solo = len(group.sessions) <= 1
+        if solo:
+            # nothing to fan out to — don't duplicate the hot region in the
+            # cache for the common one-restore-per-snapshot case
+            return session.reader.view.read(off, nbytes)
+        data, modeled_s, leader = self.chunks.get_or_read(
+            (group.key, off, nbytes),
+            lambda: session.reader.view.read_charged(off, nbytes))
+        if not leader:
+            # borrower: the bytes crossed the link once (leader's read);
+            # we waited for the same transfer, so we model the same time
+            session.ledger.add("cxl_read", modeled_s)
+        return data
+
+    # -- demand faults ---------------------------------------------------------
+    def submit_demand(self, session: RestoreEngine, pool_off: int, nbytes: int,
+                      buf: np.ndarray, token_tail: tuple) -> None:
+        """Urgent one-sided read for a demand fault: overtakes every queued
+        prefetch extent from EVERY co-located instance."""
+        self.stats["demand_reads"] += 1
+        self.engine.submit_read(pool_off, nbytes, buf,
+                                ("spage", id(session)) + token_tail,
+                                urgent=True, ledger=session.ledger)
+
+    # -- prefetch pump ---------------------------------------------------------
+    def enqueue_prefetch(self, session: RestoreEngine, max_extent_pages: int = 64) -> None:
+        """Queue the group's cold runs (largest-first, split into extents);
+        completed extents are scattered into every session of the group.
+
+        The first caller enqueues the full walk.  A session that joins the
+        group LATER re-enqueues only the extents it still needs and the
+        pump no longer covers (an extent that is queued or in flight will
+        install into this session on completion, so it is never duplicated;
+        one already completed before this session attached is re-fetched)."""
+        group = session._group
+        reader = session.reader
+        if group is None:
+            return
+        extents = [_Extent(*tup)
+                   for tup in reader.iter_cold_extents(max_extent_pages)]
+        present = session.instance.present
+
+        def needs(ext: _Extent) -> bool:
+            """True iff some page of the extent will NOT reach this session:
+            not covered by the pump, not installed, and not already arriving
+            via an in-flight read (pump-marked extent or demand single)."""
+            if ext.es in group.covered:
+                return False
+            if present[ext.es : ext.es + ext.en].all():
+                return False
+            with session._inflight_lock:
+                return not all(present[p] or session._inflight.get(p)
+                               for p in range(ext.es, ext.es + ext.en))
+
+        with self._work:
+            # decide first-vs-joiner and fill queue+covered in ONE critical
+            # section: a concurrent enqueuer must observe the full walk as
+            # covered, never a half-filled one (else it would duplicate it)
+            first = not group.enqueued
+            group.enqueued = True
+            if first:
+                group.poster = session
+            for ext in extents:
+                if not first and not needs(ext):
+                    continue
+                group.covered.add(ext.es)
+                group.queue.append(ext)
+            self._work.notify_all()
+
+    def _flush_doorbell(self, pend: Dict[FanoutGroup, List[int]]) -> None:
+        """One doorbell over extents from possibly MANY groups: the QP-depth
+        latency budget is amortized across the whole batch and split by op
+        share; every session of a group is charged the group's share (they
+        all wait on the same shared transfer)."""
+        if not pend:
+            return
+        cost = self.pool.rdma.cost
+        total_ops = sum(o for _b, o in pend.values())
+        lat_total = -(-total_ops // max(1, cost.max_inflight)) * cost.op_latency_s
+        for group, (nbytes, ops) in pend.items():
+            serial_g = (ops / total_ops) * lat_total + nbytes / cost.bandwidth_Bps
+            t_g = self._rdma_arbiter.shared(serial_g, nbytes)
+            with self._lock:
+                sessions = list(group.sessions.values())
+            for s in sessions:
+                s.ledger.add("rdma_prefetch", t_g)
+                s.prefetch_stats["doorbells"] += 1
+        self.stats["doorbells"] += 1
+        pend.clear()
+
+    def _pump_loop(self) -> None:
+        qp = max(1, self.pool.rdma.cost.max_inflight)
+        pend: Dict[FanoutGroup, List[int]] = {}
+
+        def pend_ops() -> int:
+            return sum(o for _b, o in pend.values())
+
+        while not self._stop.is_set():
+            with self._work:
+                ready = [g for g in self._groups.values() if g.queue]
+                if not ready:
+                    pass_groups = None
+                else:
+                    pass_groups = ready
+            if pass_groups is None:
+                self._flush_doorbell(pend)
+                with self._work:
+                    if not any(g.queue for g in self._groups.values()):
+                        self._work.wait(timeout=0.05)
+                continue
+            for group in pass_groups:       # one DRR round
+                if self._stop.is_set():
+                    break
+                group.deficit += self.drr_quantum
+                while True:
+                    with self._lock:
+                        if not group.queue:
+                            group.deficit = 0
+                            break
+                        ext = group.queue[0]
+                        if ext.nbytes > group.deficit:
+                            break
+                        group.queue.popleft()
+                        group.deficit -= ext.nbytes
+                        sessions = list(group.sessions.values())
+                    if not sessions or all(
+                            s.instance.present[ext.es : ext.es + ext.en].all()
+                            for s in sessions):
+                        with self._lock:
+                            group.covered.discard(ext.es)
+                        self.stats["extents_skipped"] += 1
+                        continue
+                    got = False
+                    while not got:
+                        got = self._sem.acquire(timeout=0.05)
+                        if self._stop.is_set():
+                            if got:
+                                self._sem.release()
+                            self._flush_doorbell(pend)
+                            return
+                    for s in sessions:
+                        with s._inflight_lock:
+                            for p in range(ext.es, ext.es + ext.en):
+                                s._inflight.setdefault(p, True)
+                    buf = np.empty(ext.nbytes, dtype=np.uint8)
+                    self.engine.submit_read(
+                        ext.pool_off, ext.nbytes, buf,
+                        ("gext", group.key, ext.es, ext.en, ext.rank0),
+                        urgent=False, charge=False)
+                    if group.poster is not None:
+                        group.poster.prefetch_stats["extents_posted"] += 1
+                    self.stats["extents_posted"] += 1
+                    self.post_order.append((group.key, ext.es))
+                    b_o = pend.setdefault(group, [0, 0])
+                    b_o[0] += ext.nbytes
+                    b_o[1] += 1
+                    if pend_ops() >= qp:
+                        self._flush_doorbell(pend)
+            self._flush_doorbell(pend)
+        self._flush_doorbell(pend)
+
+    # -- completion routing -----------------------------------------------------
+    def _route(self, buf: np.ndarray, token: tuple) -> None:
+        if token[0] == "gext":
+            _tag, gkey, es, en, rank0 = token
+            with self._lock:
+                group = self._groups.get(gkey)
+                sessions = list(group.sessions.values()) if group else []
+                reader = group.reader if group else None
+                if group is not None:
+                    # un-cover INSIDE the snapshot's critical section: a
+                    # joiner that saw this extent as covered is in `sessions`
+                    group.covered.discard(es)
+            try:
+                if sessions:
+                    mat = reader.split_cold_extent(rank0, en, buf)
+                    pages = np.arange(es, es + en)
+                    for s in sessions:
+                        k = s.instance.uffd_copy_batch(pages, mat)
+                        s.prefetch_stats["pages_installed"] += k
+                        with s._inflight_lock:
+                            for p in range(es, es + en):
+                                s._inflight.pop(p, None)
+                    if len(sessions) > 1:
+                        self.stats["fanout_installs"] += len(sessions) - 1
+            finally:
+                self._sem.release()
+            return
+        _tag, sid, page, nbytes, raw, kind = token
+        with self._lock:
+            session = self._sessions.get(sid)
+        try:
+            if session is not None:
+                data = (session.reader.decompress_page(buf[:nbytes], raw)
+                        if kind == "rdma_z" else buf[:PAGE_SIZE])
+                session.instance.uffd_copy(int(page), data)
+                with session._inflight_lock:
+                    session._inflight.pop(int(page), None)
+        finally:
+            self.buffers.release(buf)
+
+    def _completion_loop(self) -> None:
+        eng = self.engine
+        while not self._stop.is_set():
+            item = eng.poll_completion(block=True)
+            if item is None:
+                continue
+            while item is not None:
+                self._route(*item)
+                polled = None
+                for _ in range(eng.poll_budget):
+                    polled = eng.poll_completion(block=False)
+                    if polled is not None:
+                        eng.stats["busy_polls"] += 1
+                        break
+                item = polled

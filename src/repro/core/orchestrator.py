@@ -5,6 +5,14 @@ restores instances by: borrow → clflushopt the snapshot's CXL sections →
 load machine state → pre-install hot set → resume, with cold pages
 demand-paged asynchronously from RDMA.  Falls back to cold start when the
 borrow CAS fails (§3.3).
+
+Restores are served through the host-wide :class:`NodePageServer` by
+default — one shared RDMA engine / completion worker / prefetch pump per
+host, with hot-chunk fan-out across same-snapshot restores (DESIGN.md §10).
+``use_node_server=False`` keeps the legacy per-instance engine path (one
+private engine + completion thread per restore) for A/B comparison; that
+path registers each restore as its own stream on the host's link arbiters
+so its modeled time is contention-aware too.
 """
 from __future__ import annotations
 
@@ -13,6 +21,7 @@ import threading
 from typing import Callable, Dict, List, Optional
 
 from .coherence import Borrow, Catalog
+from .nodeserver import NodePageServer
 from .pagestore import StateImage
 from .pool import HierarchicalPool, HostView, TimeLedger
 from .serving import AsyncRDMAEngine, BufferPool, Instance, RestoreEngine
@@ -48,6 +57,8 @@ class Orchestrator:
         prefetch_cold: bool = False,
         max_extent_pages: int = 64,
         scatter_fn=None,
+        node_server: Optional[NodePageServer] = None,
+        use_node_server: bool = True,
     ):
         self.host = host
         self.pool = pool
@@ -57,8 +68,29 @@ class Orchestrator:
         self.prefetch_cold = prefetch_cold
         self.max_extent_pages = max_extent_pages
         self.scatter_fn = scatter_fn
+        self.node_server = node_server
+        self.use_node_server = bool(use_node_server) and use_async_rdma
+        self._owned_server: Optional[NodePageServer] = None
         self.stats = {"warm_restores": 0, "cold_starts": 0}
         self._lock = threading.Lock()
+
+    def _get_server(self) -> NodePageServer:
+        if self.node_server is not None:
+            return self.node_server
+        with self._lock:
+            if self._owned_server is None:
+                self._owned_server = NodePageServer(
+                    self.host, self.pool,
+                    buffer_pool_pages=self.buffer_pool_pages)
+            return self._owned_server
+
+    def close(self) -> None:
+        """Park the owned node server (its threads auto-park when the last
+        session detaches, so this is belt-and-braces for early teardown)."""
+        with self._lock:
+            srv, self._owned_server = self._owned_server, None
+        if srv is not None:
+            srv.close()
 
     def restore(self, name: str, pre_install: bool = True,
                 prefetch_cold: Optional[bool] = None) -> Optional[RestoredInstance]:
@@ -83,13 +115,27 @@ class Orchestrator:
 
         instance = Instance(StateImage.empty_like(manifest), ledger,
                             clock=self.pool.clock)
-        rdma_engine = (
-            AsyncRDMAEngine(self.pool.rdma, ledger) if self.use_async_rdma else None
-        )
-        engine = RestoreEngine(
-            reader, instance, rdma_engine, BufferPool(self.buffer_pool_pages),
-            scatter_fn=self.scatter_fn,
-        )
+        if self.use_node_server:
+            engine = self._get_server().attach(
+                name, borrow.regions.version, reader, instance,
+                scatter_fn=self.scatter_fn)
+        else:
+            rdma_engine = (
+                AsyncRDMAEngine(self.pool.rdma, ledger, host=self.host)
+                if self.use_async_rdma else None
+            )
+            engine = RestoreEngine(
+                reader, instance, rdma_engine, BufferPool(self.buffer_pool_pages),
+                scatter_fn=self.scatter_fn,
+            )
+            # A/B honesty: a private-engine restore is still one stream on
+            # the host's CXL link and RNIC — register it so its modeled
+            # time sees the same contention the shared runtime sees
+            key = ("restore", id(engine))
+            for tier in (self.pool.cxl, self.pool.rdma):
+                arbiter = tier.arbiter_for(self.host)
+                arbiter.register(key)
+                engine.link_keys.append((arbiter, key))
         if pre_install:
             engine.pre_install_hot()
         engine.start_completion_handler()

@@ -20,6 +20,7 @@ Cost-model constants (see DESIGN.md §8 for sources):
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import threading
 from typing import Dict, List, Optional, Tuple
@@ -86,6 +87,57 @@ class AllocError(RuntimeError):
     pass
 
 
+class LinkArbiter:
+    """Contention-aware modeled time for one host's link to a tier.
+
+    Streams that offer traffic to the link register for their active
+    restore window (attach/restore until stop/detach) — a restore session
+    with its own engine, or a fan-out group of same-snapshot sessions
+    whose reads are served by one physical transfer
+    (`repro.core.nodeserver`).  Each modeled transfer is charged
+
+        max(serial_time,  nbytes * active_streams / bandwidth)
+
+    i.e. its own serial pipeline time or its fair share of the link,
+    whichever is slower.  This is the executed-path counterpart of the
+    analytic contention model in ``serve/strategies._shared``; with at most
+    one stream registered every charge equals the uncontended serial time,
+    so single-restore ledgers are unchanged.
+    """
+
+    def __init__(self, cost: CostModel):
+        self.cost = cost
+        self._lock = threading.Lock()
+        self._streams: Dict[object, int] = {}
+
+    def register(self, key: object) -> None:
+        """Refcounted: k registrations of one key count as ONE stream."""
+        with self._lock:
+            self._streams[key] = self._streams.get(key, 0) + 1
+
+    def unregister(self, key: object) -> None:
+        with self._lock:
+            n = self._streams.get(key, 0) - 1
+            if n <= 0:
+                self._streams.pop(key, None)
+            else:
+                self._streams[key] = n
+
+    def active(self) -> int:
+        with self._lock:
+            return max(1, len(self._streams))
+
+    def shared(self, serial_s: float, nbytes: int) -> float:
+        """max(serial, fair-share-bandwidth time) — `strategies._shared`."""
+        return max(serial_s, nbytes * self.active() / self.cost.bandwidth_Bps)
+
+    def charge(self, nbytes: int, ops: int = 1) -> float:
+        return self.shared(self.cost.xfer_time(nbytes, ops), nbytes)
+
+    def charge_pipelined(self, nbytes: int, ops: int) -> float:
+        return self.shared(self.cost.xfer_time_pipelined(nbytes, ops), nbytes)
+
+
 @dataclasses.dataclass
 class TimeLedger:
     """Accumulated modeled time, by operation class."""
@@ -112,8 +164,19 @@ class MemoryTier:
         self.cost = cost
         self.buf = np.zeros(capacity, dtype=np.uint8)
         self._lock = threading.Lock()
-        self._free: List[Tuple[int, int]] = [(0, capacity)]  # (offset, size)
+        self._free: List[Tuple[int, int]] = [(0, capacity)]  # (offset, size), sorted
         self.bytes_in_use = 0
+        self._arbiters: Dict[str, LinkArbiter] = {}
+
+    def arbiter_for(self, host: str = "") -> LinkArbiter:
+        """The contention arbiter for `host`'s link to this tier (per-host
+        CXL link / per-host RNIC — co-located restores on one host share it,
+        restores on different hosts do not)."""
+        with self._lock:
+            arb = self._arbiters.get(host)
+            if arb is None:
+                arb = self._arbiters[host] = LinkArbiter(self.cost)
+            return arb
 
     # -- allocator --------------------------------------------------------
     def alloc(self, nbytes: int) -> int:
@@ -131,18 +194,33 @@ class MemoryTier:
                          f"({self.bytes_in_use}/{self.capacity} in use)")
 
     def free(self, offset: int, nbytes: int) -> None:
+        """Return a block: O(log n) position search + O(1) neighbor merge
+        (the free list is kept sorted and fully coalesced at all times, so
+        no append-then-full-sort pass is ever needed)."""
         nbytes = max(1, -(-nbytes // PAGE_SIZE) * PAGE_SIZE)
         with self._lock:
-            self._free.append((offset, nbytes))
-            self._free.sort()
-            merged: List[Tuple[int, int]] = []
-            for off, size in self._free:
-                if merged and merged[-1][0] + merged[-1][1] == off:
-                    merged[-1] = (merged[-1][0], merged[-1][1] + size)
-                else:
-                    merged.append((off, size))
-            self._free = merged
+            i = bisect.bisect_left(self._free, (offset, 0))
+            prev_adj = i > 0 and self._free[i - 1][0] + self._free[i - 1][1] == offset
+            next_adj = i < len(self._free) and offset + nbytes == self._free[i][0]
+            if prev_adj and next_adj:
+                po, ps = self._free[i - 1]
+                self._free[i - 1] = (po, ps + nbytes + self._free[i][1])
+                self._free.pop(i)
+            elif prev_adj:
+                po, ps = self._free[i - 1]
+                self._free[i - 1] = (po, ps + nbytes)
+            elif next_adj:
+                no, ns = self._free[i]
+                self._free[i] = (offset, nbytes + ns)
+            else:
+                self._free.insert(i, (offset, nbytes))
             self.bytes_in_use -= nbytes
+
+    def free_list_stats(self) -> Dict[str, int]:
+        """Fragmentation snapshot: block count + total free bytes."""
+        with self._lock:
+            return {"blocks": len(self._free),
+                    "free_bytes": sum(s for _o, s in self._free)}
 
     # -- raw access (owner-side; bypasses host caches) ---------------------
     def write(self, offset: int, data: np.ndarray) -> None:
@@ -165,11 +243,15 @@ class HostView:
         self.host = host
         self.tier = tier
         self.ledger = ledger or TimeLedger()
+        self.arbiter = tier.arbiter_for(host)
         self._cache: Dict[int, np.ndarray] = {}  # line index -> 64B snapshot
         self.stats = {"cached_reads": 0, "pool_reads": 0, "flushed_lines": 0,
                       "bytes_read": 0}
 
-    def read(self, offset: int, nbytes: int) -> np.ndarray:
+    def read_charged(self, offset: int, nbytes: int) -> Tuple[np.ndarray, float]:
+        """Like :meth:`read`, also returning the modeled seconds charged for
+        this read — the fan-out cache replays that charge to borrowers that
+        reuse the bytes without re-reading the link."""
         out = np.empty(nbytes, dtype=np.uint8)
         first = offset // CACHELINE
         last = (offset + nbytes - 1) // CACHELINE
@@ -187,8 +269,12 @@ class HostView:
             out[pos : pos + hi - lo] = cached[lo - line * CACHELINE : hi - line * CACHELINE]
             pos += hi - lo
         self.stats["bytes_read"] += nbytes
-        self.ledger.add("cxl_read", self.tier.cost.xfer_time(nbytes))
-        return out
+        t = self.arbiter.charge(nbytes)
+        self.ledger.add("cxl_read", t)
+        return out, t
+
+    def read(self, offset: int, nbytes: int) -> np.ndarray:
+        return self.read_charged(offset, nbytes)[0]
 
     def read_page(self, offset: int) -> np.ndarray:
         return self.read(offset, PAGE_SIZE)

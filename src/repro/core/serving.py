@@ -27,7 +27,9 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
-from typing import Callable, Dict, Optional, Sequence
+import time
+import weakref
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -154,17 +156,33 @@ class Instance:
 
 
 class BufferPool:
-    """Local pool of free page buffers for in-flight RDMA reads (§3.4)."""
+    """Local pool of free page buffers for in-flight RDMA reads (§3.4).
+
+    ``outstanding`` counts buffers currently acquired; the test suite's
+    conftest asserts buffer-count conservation (outstanding == 0) after
+    every test, so a stopped engine may not strand demand-read buffers.
+    """
+
+    _all_pools: "weakref.WeakSet[BufferPool]" = weakref.WeakSet()
 
     def __init__(self, n_pages: int = 256):
+        self.capacity = n_pages
+        self.outstanding = 0
+        self._lock = threading.Lock()
         self._q: "queue.Queue[np.ndarray]" = queue.Queue()
         for _ in range(n_pages):
             self._q.put(np.empty(PAGE_SIZE, dtype=np.uint8))
+        BufferPool._all_pools.add(self)
 
     def acquire(self) -> np.ndarray:
-        return self._q.get()
+        buf = self._q.get()
+        with self._lock:
+            self.outstanding += 1
+        return buf
 
     def release(self, buf: np.ndarray) -> None:
+        with self._lock:
+            self.outstanding -= 1
         self._q.put(buf)
 
 
@@ -179,28 +197,59 @@ class AsyncRDMAEngine:
     blocking on the CQ (the paper's hybrid strategy, §4).
     """
 
-    def __init__(self, tier: MemoryTier, ledger: TimeLedger, poll_budget: int = 1024):
+    def __init__(self, tier: MemoryTier, ledger: TimeLedger, poll_budget: int = 1024,
+                 host: str = "", start: bool = True):
         self.tier = tier
         self.ledger = ledger
         self.poll_budget = poll_budget
+        self.arbiter = tier.arbiter_for(host)
         self._sq: "queue.PriorityQueue" = queue.PriorityQueue()
         self._seq = itertools.count()
         self._cq: "queue.Queue" = queue.Queue()
         self._stop = threading.Event()
-        self._worker = threading.Thread(target=self._run, daemon=True)
-        self._worker.start()
+        self._pending_lock = threading.Lock()
+        self._pending_ops = 0            # submitted, completion not yet queued
+        self._worker: Optional[threading.Thread] = None
         self.stats = {"reads": 0, "busy_polls": 0, "event_waits": 0,
                       "urgent_reads": 0, "bytes_read": 0}
+        if start:
+            self.start()
+
+    def start(self) -> None:
+        """(Re)start the worker thread; a no-op while it is running — a
+        host-wide server parks its engine when idle and restarts it here."""
+        if self._worker is not None and self._worker.is_alive():
+            return
+        self._stop.clear()
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
 
     def submit_read(self, pool_off: int, nbytes: int, buf: np.ndarray, token,
-                    urgent: bool = False, charge: bool = True) -> None:
+                    urgent: bool = False, charge: bool = True,
+                    ledger: Optional[TimeLedger] = None) -> None:
         """Post a one-sided read of `nbytes` at `pool_off` into `buf`.
 
         ``urgent`` reads (demand faults) are served before queued prefetch
         extents.  ``charge=False`` suppresses the per-op ledger charge for
-        callers that account a whole doorbell batch themselves."""
+        callers that account a whole doorbell batch themselves.  ``ledger``
+        routes the per-op charge to a specific session's ledger when one
+        engine is shared by many sessions (NodePageServer)."""
         prio = 0 if urgent else 1
-        self._sq.put((prio, next(self._seq), (pool_off, nbytes, buf, token, charge)))
+        with self._pending_lock:
+            self._pending_ops += 1
+        self._sq.put((prio, next(self._seq),
+                      (pool_off, nbytes, buf, token, charge, ledger)))
+
+    def quiesce(self, timeout_s: float = 5.0) -> bool:
+        """Wait until every submitted read has executed and its completion
+        is queued on the CQ (the CQ itself may still hold entries)."""
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            with self._pending_lock:
+                if self._pending_ops == 0:
+                    return True
+            time.sleep(0.002)
+        return False
 
     def poll_completion(self, block: bool, timeout_s: float = 0.05):
         """-> (buf, token) or None. Emulates CQ poll / completion channel.
@@ -221,7 +270,8 @@ class AsyncRDMAEngine:
     def _run(self) -> None:
         while not self._stop.is_set():
             try:
-                prio, _seq, (pool_off, nbytes, buf, token, charge) = self._sq.get(timeout=0.05)
+                prio, _seq, (pool_off, nbytes, buf, token, charge, ledger) = \
+                    self._sq.get(timeout=0.05)
             except queue.Empty:
                 continue
             buf[:nbytes] = self.tier.buf[pool_off : pool_off + nbytes]
@@ -230,12 +280,15 @@ class AsyncRDMAEngine:
             if prio == 0:
                 self.stats["urgent_reads"] += 1
             if charge:
-                self.ledger.add("rdma_read", self.tier.cost.op_latency_s + nbytes / self.tier.cost.bandwidth_Bps)
+                (ledger or self.ledger).add("rdma_read", self.arbiter.charge(nbytes))
             self._cq.put((buf, token))
+            with self._pending_lock:
+                self._pending_ops -= 1
 
     def close(self) -> None:
         self._stop.set()
-        self._worker.join(timeout=1.0)
+        if self._worker is not None:
+            self._worker.join(timeout=1.0)
 
 
 class RestoreEngine:
@@ -250,6 +303,7 @@ class RestoreEngine:
         buffer_pool: Optional[BufferPool] = None,
         scatter_fn: Optional[ScatterFn] = None,
         clock: Optional[Clock] = None,
+        server=None,
     ):
         self.reader = reader
         self.instance = instance
@@ -262,7 +316,14 @@ class RestoreEngine:
         self.clock = clock or instance.clock
         self.ledger = instance.ledger
         self.rdma_engine = rdma_engine
+        # host-wide page-serving runtime (repro.core.nodeserver): when set,
+        # demand reads / prefetch / completions are multiplexed through the
+        # shared per-host engine instead of private threads
+        self.server = server
+        self._group = None          # FanoutGroup, set by NodePageServer.attach
         self.buffers = buffer_pool or BufferPool()
+        self._rdma_arbiter = reader.rdma.arbiter_for(reader.view.host)
+        self.link_keys: List[Tuple[object, object]] = []   # (arbiter, key)
         self._inflight: Dict[int, bool] = {}
         self._inflight_lock = threading.Lock()
         self._completion_thread: Optional[threading.Thread] = None
@@ -305,12 +366,25 @@ class RestoreEngine:
             if self.instance.present[hot[r0:r1]].all():
                 continue    # already installed (e.g. repeated pre-install)
             # ranks r0:r1 are back-to-back in the hot region: ONE CXL read
-            raw = self.reader.view.read(hot_off + r0 * PAGE_SIZE,
-                                        (r1 - r0) * PAGE_SIZE)
+            nbytes = (r1 - r0) * PAGE_SIZE
+            if self.server is not None:
+                # hot-chunk fan-out: co-located same-snapshot restores share
+                # one physical chunk read (one CXL read, k scatters)
+                raw = self.server.hot_chunk(self, hot_off + r0 * PAGE_SIZE, nbytes)
+            else:
+                raw = self.reader.view.read(hot_off + r0 * PAGE_SIZE, nbytes)
             installed = self.instance.uffd_copy_batch(
                 hot[r0:r1], raw.reshape(r1 - r0, PAGE_SIZE))
             self.instance.stats["pre_installed"] += installed
         return int(hot.size)
+
+    def install_zero_runs(self) -> int:
+        """uffd.zeropage the zero runs (one ioctl per run); full-restore
+        helper used by benchmarks and the node-server restore flow."""
+        k = 0
+        for start, n in self.reader.zero_runs():
+            k += self.instance.uffd_zeropage_range(int(start), int(n))
+        return k
 
     # -- phase 2: demand faults -------------------------------------------------
     def start_completion_handler(self) -> None:
@@ -323,7 +397,14 @@ class RestoreEngine:
         """Background cold-run prefetch: walk cold runs largest-first, post
         multi-page one-sided reads (up to `max_extent_pages` each), install
         completed extents via the batch API.  Demand faults for pages not yet
-        in flight still take priority on the RDMA engine's submit queue."""
+        in flight still take priority on the RDMA engine's submit queue.
+
+        Under a NodePageServer the extents are enqueued ONCE per fan-out
+        group on the host-wide pump, which drains them round-robin across
+        all co-located restores instead of spawning a private thread."""
+        if self.server is not None:
+            self.server.enqueue_prefetch(self, max_extent_pages)
+            return
         if self.rdma_engine is None or self._prefetch_thread is not None:
             return
         inflight = max(1, self.rdma_engine.tier.cost.max_inflight)
@@ -333,11 +414,36 @@ class RestoreEngine:
         self._prefetch_thread.start()
 
     def stop(self) -> None:
+        """Stop serving and leave no residue: in-flight completions are
+        drained (their demand-read buffers go back to the BufferPool, their
+        pages install normally) and stale ``_inflight`` entries are cleared.
+        Node-server sessions detach from the shared runtime instead."""
         self._stop.set()
+        if self.server is not None:
+            self.server.detach(self)
+            self._unregister_links()
+            return
         if self._prefetch_thread is not None:
             self._prefetch_thread.join(timeout=1.0)
+        if self.rdma_engine is not None:
+            # let already-posted reads execute so their buffers come back
+            self.rdma_engine.quiesce()
         if self._completion_thread is not None:
             self._completion_thread.join(timeout=1.0)
+        if self.rdma_engine is not None:
+            while True:
+                item = self.rdma_engine.poll_completion(block=False)
+                if item is None:
+                    break
+                self._install_completion(*item)
+        with self._inflight_lock:
+            self._inflight.clear()
+        self._unregister_links()
+
+    def _unregister_links(self) -> None:
+        for arbiter, key in self.link_keys:
+            arbiter.unregister(key)
+        self.link_keys = []
 
     def handle_fault(self, page: int) -> None:
         """userfaultfd fault for `page`; never blocks on RDMA (§3.4)."""
@@ -359,12 +465,9 @@ class RestoreEngine:
             pool_off, nbytes, raw = self.reader.cold_extent(off)
         else:
             pool_off, nbytes, raw = off, PAGE_SIZE, True
-        if self.rdma_engine is None:
+        if self.rdma_engine is None and self.server is None:
             payload = self.reader.rdma.read(pool_off, nbytes)
-            self.ledger.add(
-                "rdma_read",
-                self.reader.rdma.cost.op_latency_s + nbytes / self.reader.rdma.cost.bandwidth_Bps,
-            )
+            self.ledger.add("rdma_read", self._rdma_arbiter.charge(nbytes))
             self.instance.uffd_copy(page, self.reader.decompress_page(payload, raw)
                                     if kind == "rdma_z" else payload)
             return
@@ -373,8 +476,13 @@ class RestoreEngine:
                 return     # already in flight (demand or prefetch extent)
             self._inflight[page] = True
         buf = self.buffers.acquire()
-        self.rdma_engine.submit_read(pool_off, nbytes, buf,
-                                     ("page", page, nbytes, raw, kind), urgent=True)
+        if self.server is not None:
+            self.server.submit_demand(self, pool_off, nbytes, buf,
+                                      (page, nbytes, raw, kind))
+        else:
+            self.rdma_engine.submit_read(pool_off, nbytes, buf,
+                                         ("page", page, nbytes, raw, kind),
+                                         urgent=True)
 
     def access(self, page: int, timeout_s: float = 30.0) -> None:
         """Guest touch: fault if needed and wait for install (test/replay API)."""
@@ -428,65 +536,70 @@ class RestoreEngine:
         eng = self.rdma_engine
         assert eng is not None and self._prefetch_sem is not None
         cost = eng.tier.cost
-        runs = self.reader.cold_runs()
-        order = np.argsort(-runs[:, 1], kind="stable") if runs.size else []
         pending_bytes, pending_ops = 0, 0
 
         def flush_doorbell():
             nonlocal pending_bytes, pending_ops
             if pending_ops:
-                # doorbell-batched posts: op latencies overlap up to QP depth
+                # doorbell-batched posts: op latencies overlap up to QP depth;
+                # the link arbiter floors the charge at this session's fair
+                # share of the RNIC when co-located restores contend
                 self.ledger.add("rdma_prefetch",
-                                cost.xfer_time_pipelined(pending_bytes, pending_ops))
+                                eng.arbiter.charge_pipelined(pending_bytes, pending_ops))
                 self.prefetch_stats["doorbells"] += 1
                 pending_bytes, pending_ops = 0, 0
 
-        for ri in order:
-            start, n = int(runs[ri, 0]), int(runs[ri, 1])
-            for es in range(start, start + n, max_extent_pages):
+        for es, en, rank0, pool_off, nbytes in \
+                self.reader.iter_cold_extents(max_extent_pages):
+            if self._stop.is_set():
+                flush_doorbell()
+                return
+            if self.instance.present[es : es + en].all():
+                self.prefetch_stats["extents_skipped"] += 1
+                continue
+            while not self._prefetch_sem.acquire(timeout=0.05):
                 if self._stop.is_set():
                     flush_doorbell()
                     return
-                en = min(max_extent_pages, start + n - es)
-                if self.instance.present[es : es + en].all():
-                    self.prefetch_stats["extents_skipped"] += 1
-                    continue
-                rank0 = self.reader.cold_rank(es)
-                pool_off, nbytes = self.reader.cold_extent_span(rank0, en)
-                while not self._prefetch_sem.acquire(timeout=0.05):
-                    if self._stop.is_set():
-                        flush_doorbell()
-                        return
-                # mark in flight only once a QP slot is held: demand faults on
-                # these pages must keep their urgent-read path while the
-                # extent is still waiting for a slot
-                with self._inflight_lock:
-                    for p in range(es, es + en):
-                        self._inflight.setdefault(p, True)
-                pending_bytes += nbytes
-                pending_ops += 1
-                if pending_ops >= cost.max_inflight:
-                    flush_doorbell()
-                buf = np.empty(nbytes, dtype=np.uint8)
-                eng.submit_read(pool_off, nbytes, buf, ("extent", es, en, rank0),
-                                urgent=False, charge=False)
-                self.prefetch_stats["extents_posted"] += 1
+            # mark in flight only once a QP slot is held: demand faults on
+            # these pages must keep their urgent-read path while the
+            # extent is still waiting for a slot
+            with self._inflight_lock:
+                for p in range(es, es + en):
+                    self._inflight.setdefault(p, True)
+            pending_bytes += nbytes
+            pending_ops += 1
+            if pending_ops >= cost.max_inflight:
+                flush_doorbell()
+            buf = np.empty(nbytes, dtype=np.uint8)
+            eng.submit_read(pool_off, nbytes, buf, ("extent", es, en, rank0),
+                            urgent=False, charge=False)
+            self.prefetch_stats["extents_posted"] += 1
         flush_doorbell()
 
     def wait_prefetch_idle(self, timeout_s: float = 30.0) -> bool:
         """Block until the prefetch walk posted everything and all cold pages
-        are installed (test/benchmark helper)."""
-        if self._prefetch_thread is None:
+        are installed (test/benchmark helper).
+
+        Vectorized: ONE condition-variable wait on a predicate over the
+        `present` bitmap sliced by the cold page index — no per-page Python
+        loop, and no per-page lock/notify round trips."""
+        if self.server is not None:
+            if self._group is None or not getattr(self._group, "enqueued", False):
+                return True
+        elif self._prefetch_thread is None:
             return True
-        self._prefetch_thread.join(timeout=timeout_s)
-        if self._prefetch_thread.is_alive():
-            return False
-        for start, n in self.reader.cold_runs():
-            for p in range(int(start), int(start) + int(n)):
-                if not self.instance.present[p]:
-                    if not self.instance.wait_present(p, timeout_s):
-                        return False
-        return True
+        else:
+            self._prefetch_thread.join(timeout=timeout_s)
+            if self._prefetch_thread.is_alive():
+                return False
+        cold = self.reader.cold_page_indices()
+        if cold.size == 0:
+            return True
+        present = self.instance.present
+        with self.instance._cv:
+            return self.instance.clock.cv_wait_for(
+                self.instance._cv, lambda: bool(present[cold].all()), timeout_s)
 
     # -- bulk restore (used by tests / eager baselines) --------------------------
     def install_all_sync(self, use_batch: bool = True) -> None:
@@ -501,8 +614,7 @@ class RestoreEngine:
                     else:
                         nbytes = (self.reader.cold_extent(off)[1]
                                   if kind == "rdma_z" else PAGE_SIZE)
-                        self.ledger.add("rdma_read",
-                                        self.reader.rdma.cost.xfer_time(nbytes))
+                        self.ledger.add("rdma_read", self._rdma_arbiter.charge(nbytes))
                         self.instance.uffd_copy(page, self.reader.read_page(page))
             return
         for start, n in self.reader.zero_runs():
@@ -513,7 +625,7 @@ class RestoreEngine:
             rank0 = self.reader.cold_rank(start)
             pool_off, nbytes = self.reader.cold_extent_span(rank0, n)
             payload = self.reader.rdma.read(pool_off, nbytes)
-            self.ledger.add("rdma_read", self.reader.rdma.cost.xfer_time(nbytes))
+            self.ledger.add("rdma_read", self._rdma_arbiter.charge(nbytes))
             self.instance.uffd_copy_batch(np.arange(start, start + n),
                                           self.reader.split_cold_extent(rank0, n, payload))
 

@@ -407,6 +407,26 @@ class SnapshotReader:
             self._zero_runs = runs_of_indices(self.zero_page_indices())
         return self._zero_runs
 
+    def iter_cold_extents(self, max_extent_pages: int = 64,
+                          largest_first: bool = True):
+        """Yield ``(es, en, rank0, pool_off, nbytes)`` extents covering the
+        cold runs (largest-first by default), each readable with ONE
+        one-sided read.  This is THE extent-splitting arithmetic: the
+        per-instance prefetcher, the node server's pump, and the analytic
+        restore model all consume it, so they can never drift apart."""
+        runs = self.cold_runs()
+        if runs.size == 0:
+            return
+        order = (np.argsort(-runs[:, 1], kind="stable") if largest_first
+                 else range(runs.shape[0]))
+        for ri in order:
+            start, n = int(runs[ri, 0]), int(runs[ri, 1])
+            for es in range(start, start + n, max_extent_pages):
+                en = min(max_extent_pages, start + n - es)
+                rank0 = self.cold_rank(es)
+                pool_off, nbytes = self.cold_extent_span(rank0, en)
+                yield es, en, rank0, pool_off, nbytes
+
     def cold_rank(self, page: int) -> int:
         """Rank (position in the sorted cold set) of a cold page."""
         _tier, off = decode_slot(self.offset_array()[page])

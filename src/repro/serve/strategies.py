@@ -40,6 +40,7 @@ from ..core.pool import (
     UFFD_COPY_PER_PAGE_S,
     UFFD_ZEROPAGE_PER_PAGE_S,
     uffd_copy_batch_cost,
+    uffd_zeropage_range_cost,
 )
 from ..core.serving import Instance, RestoreEngine
 
@@ -127,14 +128,24 @@ def _cxl_pages(n_pages: int, conc: int = 1) -> float:
 
 
 def _classify(spec: WorkloadSpec):
+    """Vectorized page classification: numpy boolean masks over the zero
+    bitmap and a working-set membership mask, instead of Python set lookups
+    per touched page.  Outputs are equivalent to the scalar reference: the
+    ``t_*`` arrays preserve ``spec.touched`` order (duplicates included),
+    the ``ws_*`` arrays are the deduplicated working set in sorted order."""
     zero = spec.image.zero_page_bitmap()
-    ws: Set[int] = set(int(p) for p in spec.working_set)
-    touched = [int(p) for p in spec.touched]
-    t_zero = [p for p in touched if zero[p]]
-    t_hot = [p for p in touched if not zero[p] and p in ws]
-    t_cold = [p for p in touched if not zero[p] and p not in ws]
-    ws_zero = [p for p in ws if zero[p]]
-    ws_nonzero = [p for p in ws if not zero[p]]
+    ws_idx = np.unique(np.asarray(spec.working_set, dtype=np.int64)) \
+        if len(spec.working_set) else np.zeros(0, dtype=np.int64)
+    ws_mask = np.zeros(zero.size, dtype=bool)
+    ws_mask[ws_idx] = True
+    touched = np.asarray(spec.touched, dtype=np.int64).reshape(-1)
+    t_is_zero = zero[touched]
+    t_in_ws = ws_mask[touched]
+    t_zero = touched[t_is_zero]
+    t_hot = touched[~t_is_zero & t_in_ws]
+    t_cold = touched[~t_is_zero & ~t_in_ws]
+    ws_zero = ws_idx[zero[ws_idx]]
+    ws_nonzero = ws_idx[~zero[ws_idx]]
     return zero, t_zero, t_hot, t_cold, ws_zero, ws_nonzero
 
 
@@ -255,6 +266,69 @@ def hot_preinstall_time(spec: WorkloadSpec, batched: bool = True) -> float:
     n_chunks = -(-n_hot // HOT_CHUNK_PAGES) if n_hot else 0
     read = n_chunks * CXL_LAT_S + n_hot * PAGE_SIZE / CXL_BW
     return read + uffd_copy_batch_cost(n_hot, max(1, n_runs))
+
+
+def modeled_concurrent_restore_s(reader, conc: int, max_extent_pages: int = 64,
+                                 chunk_pages: Optional[int] = None) -> float:
+    """Analytic modeled time of ONE full restore — machine-state + index
+    reads, borrow clflush, chunked hot pre-install, zero ranges, and a
+    doorbell-batched cold-extent prefetch that covers every cold page (no
+    demand faults) — while `conc` independent streams contend for the
+    host's CXL link and RNIC.
+
+    Every transfer term is `_shared()` over the same run/extent arithmetic
+    the serving path executes, so this is the analytic twin of the executed
+    path's per-host ``LinkArbiter`` accounting: the property tests require
+    the two to agree within 15% across random concurrency/workload mixes.
+    For fan-out groups (k same-snapshot restores through a NodePageServer)
+    pass the number of distinct *groups* as `conc` — the link carries each
+    group's bytes once regardless of k.
+    """
+    r = reader.regions
+    chunk = chunk_pages or HOT_CHUNK_PAGES
+    conc = max(1, conc)
+    # machine state + offset array (one HostView read each), cold index if
+    # the cold tier is compressed
+    t = _shared(CXL_LAT_S + r.ms_size / CXL_BW, r.ms_size, CXL_BW, conc)
+    oa_bytes = r.total_pages * 8
+    t += _shared(CXL_LAT_S + oa_bytes / CXL_BW, oa_bytes, CXL_BW, conc)
+    if r.cold_compressed and r.n_cold:
+        ci_bytes = r.n_cold * 4
+        t += _shared(CXL_LAT_S + ci_bytes / CXL_BW, ci_bytes, CXL_BW, conc)
+    # borrow-protocol clflushopt over the snapshot's CXL sections
+    n_lines = -(-(r.ms_size + r.oa_size + max(r.hot_bytes, 0)) // 64)
+    t += n_lines * CLFLUSH_PER_LINE_S
+    # hot pre-install: one CXL read per chunk, one uffd.copy ioctl per
+    # guest-contiguous run within each chunk
+    hot = reader.hot_page_indices()
+    n_hot = int(hot.size)
+    if n_hot:
+        n_chunks = -(-n_hot // chunk)
+        t += _shared(n_chunks * CXL_LAT_S + n_hot * PAGE_SIZE / CXL_BW,
+                     n_hot * PAGE_SIZE, CXL_BW, conc)
+        n_ranges = 0
+        for c0 in range(0, n_hot, chunk):
+            seg = hot[c0 : c0 + chunk]
+            n_ranges += 1 + int(np.count_nonzero(np.diff(seg) != 1))
+        t += uffd_copy_batch_cost(n_hot, n_ranges)
+    # zero pages: one uffd.zeropage ioctl per zero run
+    zr = reader.zero_runs()
+    if zr.size:
+        t += uffd_zeropage_range_cost(int(zr[:, 1].sum()), int(zr.shape[0]))
+    # cold prefetch: pipelined extent reads (QP-depth doorbell batching),
+    # one uffd.copy ioctl per extent install
+    cr = reader.cold_runs()
+    n_cold = int(cr[:, 1].sum()) if cr.size else 0
+    if n_cold:
+        n_ext, cold_bytes = 0, 0
+        for _es, _en, _rank0, _off, nbytes in \
+                reader.iter_cold_extents(max_extent_pages):
+            cold_bytes += nbytes
+            n_ext += 1
+        serial = -(-n_ext // RDMA_INFLIGHT) * RDMA_LAT_S + cold_bytes / RDMA_BW
+        t += _shared(serial, cold_bytes, RDMA_BW, conc)
+        t += uffd_copy_batch_cost(n_cold, n_ext)
+    return t
 
 
 def verify_restore_correctness(pool: HierarchicalPool, reader: SnapshotReader,

@@ -182,8 +182,14 @@ def _our_leaked_threads(before):
 @pytest.fixture(autouse=True)
 def no_thread_leaks():
     """Every test must join the threads it started (FailoverNode heartbeats,
-    RDMA completion workers, skeleton-pool replenishers, ...)."""
+    RDMA completion workers, skeleton-pool replenishers, ...) AND return
+    every demand-read buffer it acquired: once the threads are gone, each
+    BufferPool created during the test must have outstanding == 0 (a stop
+    with reads in flight may not strand buffers)."""
+    from repro.core.serving import BufferPool
+
     before = set(threading.enumerate())
+    pools_before = set(BufferPool._all_pools)   # strong refs: stable snapshot
     yield
     deadline = time.monotonic() + 2.0
     leaked = _our_leaked_threads(before)
@@ -193,3 +199,17 @@ def no_thread_leaks():
     assert not leaked, (
         f"test leaked threads: {[t.name for t in leaked]} — join/stop them "
         f"(FailoverNode.stop(), RestoredInstance.shutdown(), SkeletonPool.close(), ...)")
+
+    def _unreturned():
+        return [p for p in BufferPool._all_pools
+                if p not in pools_before and p.outstanding != 0]
+
+    deadline = time.monotonic() + 2.0
+    stranded = _unreturned()
+    while stranded and time.monotonic() < deadline:
+        time.sleep(0.02)
+        stranded = _unreturned()
+    assert not stranded, (
+        f"test stranded {[p.outstanding for p in stranded]} demand-read "
+        f"buffer(s) in {len(stranded)} BufferPool(s) — RestoreEngine.stop() "
+        f"must drain in-flight completions back to the pool")

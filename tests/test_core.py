@@ -138,6 +138,56 @@ class TestSnapshotFormat:
         np.testing.assert_array_equal(pool.cxl.buf, before)  # pool untouched
 
 
+class TestMemoryTierFreeList:
+    """bisect-insert + neighbor-merge free list: conservation + coalescing."""
+
+    def _tier(self, capacity=1 << 20):
+        from repro.core import MemoryTier
+        from repro.core.pool import CXL_COST
+        return MemoryTier("t", capacity, CXL_COST)
+
+    def test_conservation_and_merge_under_random_churn(self):
+        tier = self._tier()
+        rng = np.random.default_rng(0)
+        live = {}
+        for step in range(400):
+            if live and (len(live) > 24 or rng.random() < 0.45):
+                off = list(live)[int(rng.integers(0, len(live)))]
+                tier.free(off, live.pop(off))
+            else:
+                nbytes = int(rng.integers(1, 16)) * PAGE_SIZE
+                try:
+                    live[tier.alloc(nbytes)] = nbytes
+                except Exception:
+                    continue
+            # invariants after EVERY operation: bytes conserved, free list
+            # sorted, fully coalesced, non-overlapping
+            st = tier.free_list_stats()
+            assert st["free_bytes"] + tier.bytes_in_use == tier.capacity
+            fl = tier._free
+            for (o1, s1), (o2, _s2) in zip(fl, fl[1:]):
+                assert o1 + s1 < o2      # sorted, disjoint, and UNMERGEABLE
+        for off, nbytes in live.items():
+            tier.free(off, nbytes)
+        # everything returned: one block, zero fragmentation, zero in use
+        assert tier._free == [(0, tier.capacity)]
+        assert tier.bytes_in_use == 0
+
+    def test_free_merges_both_neighbors(self):
+        tier = self._tier(capacity=16 * PAGE_SIZE)
+        a = tier.alloc(4 * PAGE_SIZE)
+        b = tier.alloc(4 * PAGE_SIZE)
+        c = tier.alloc(4 * PAGE_SIZE)
+        tier.free(a, 4 * PAGE_SIZE)
+        tier.free(c, 4 * PAGE_SIZE)
+        assert tier.free_list_stats()["blocks"] == 2   # a-hole, c+tail
+        tier.free(b, 4 * PAGE_SIZE)                    # merges a+b+c+tail
+        assert tier._free == [(0, tier.capacity)]
+        # a full-capacity allocation fits again (no phantom fragmentation)
+        off = tier.alloc(tier.capacity)
+        assert off == 0
+
+
 class TestEviction:
     def test_borrow_counter_eviction(self):
         img, _ = make_image(n_params=500, n_zero_rows=8)

@@ -1,0 +1,405 @@
+"""Host-wide page-serving runtime (core/nodeserver.py) + contention-aware
+modeled time (core/pool.LinkArbiter):
+
+* hot-chunk fan-out bit-identity — k same-snapshot restores, ONE physical
+  CXL read per chunk, k scatters;
+* demand-over-prefetch priority across instances on the shared engine;
+* cross-instance DRR fairness — a heavy prefetcher neighbour cannot starve
+  a co-located light restore;
+* property test: executed modeled restore time under the LinkArbiter
+  matches the analytic `strategies._shared()`-based model within 15%
+  across random concurrency/workload mixes, in BOTH runtimes;
+* RestoreEngine.stop() drains in-flight completions and conserves
+  demand-read buffers;
+* vectorized `strategies._classify` equivalence with the scalar reference.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    HierarchicalPool,
+    Instance,
+    LinkArbiter,
+    NodePageServer,
+    Orchestrator,
+    PoolMaster,
+    RestoreEngine,
+    SnapshotReader,
+    StateImage,
+    TimeLedger,
+)
+from repro.core.pagestore import PAGE_SIZE
+from repro.core.pool import RDMA_COST
+from repro.core.profiler import AccessRecorder
+from repro.core.serving import AsyncRDMAEngine
+from repro.serve.strategies import (
+    WorkloadSpec,
+    _classify,
+    modeled_concurrent_restore_s,
+)
+
+
+def make_image(seed=0, hot_pages=128, cold_pages=384, zero_pages=512):
+    rng = np.random.default_rng(seed)
+    arrays = {
+        "params": rng.standard_normal(hot_pages * PAGE_SIZE // 4).astype(np.float32),
+        "runtime": rng.integers(1, 7, (cold_pages * PAGE_SIZE,)).astype(np.uint8),
+        "arena": np.zeros(zero_pages * PAGE_SIZE, np.uint8),
+    }
+    img = StateImage.build(arrays)
+    rec = AccessRecorder(img.manifest)
+    rec.touch_array("params")
+    rt = img.manifest.by_name()["runtime"]
+    for s in range(5, cold_pages - 4, max(8, cold_pages // 12)):
+        rec.touch_pages(range(rt.first_page + s, rt.first_page + s + 2))
+    return img, rec.working_set()
+
+
+def make_stack(images, names=None):
+    pool = HierarchicalPool(256 << 20, 512 << 20)
+    master = PoolMaster(pool)
+    names = names or [f"s{i}" for i in range(len(images))]
+    for name, (img, ws) in zip(names, images):
+        master.publish(name, img, ws)
+    return pool, master, names
+
+
+def drive_full_restore(ris, max_extent_pages=64):
+    """Concurrently run each restore to completion: hot pre-install + zero
+    ranges + cold extent prefetch (the benchmark flow)."""
+    errs = []
+
+    def drive(ri):
+        try:
+            ri.engine.pre_install_hot()
+            ri.engine.install_zero_runs()
+            ri.engine.start_prefetcher(max_extent_pages)
+            assert ri.engine.wait_prefetch_idle(60.0)
+        except Exception as exc:            # pragma: no cover
+            errs.append(exc)
+
+    threads = [threading.Thread(target=drive, args=(ri,)) for ri in ris]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errs, errs
+
+
+class TestLinkArbiter:
+    def test_uncontended_charge_is_serial(self):
+        arb = LinkArbiter(RDMA_COST)
+        assert arb.active() == 1
+        assert arb.charge(PAGE_SIZE) == pytest.approx(RDMA_COST.xfer_time(PAGE_SIZE))
+
+    def test_fair_share_floor_and_refcount(self):
+        arb = LinkArbiter(RDMA_COST)
+        for key in ("a", "b", "c"):
+            arb.register(key)
+        arb.register("a")                   # refcounted: still 3 streams
+        assert arb.active() == 3
+        nbytes = 1 << 20
+        serial = RDMA_COST.xfer_time(nbytes)
+        assert arb.charge(nbytes) == pytest.approx(
+            max(serial, nbytes * 3 / RDMA_COST.bandwidth_Bps))
+        arb.unregister("a")
+        assert arb.active() == 3            # one ref of "a" remains
+        arb.unregister("a")
+        assert arb.active() == 2
+        arb.unregister("b")
+        arb.unregister("c")
+        assert arb.active() == 1
+        assert arb.charge(nbytes) == pytest.approx(serial)
+
+    def test_charge_pipelined_floor(self):
+        arb = LinkArbiter(RDMA_COST)
+        arb.register("x")
+        arb.register("y")
+        nbytes, ops = 4 << 20, 128
+        assert arb.charge_pipelined(nbytes, ops) == pytest.approx(
+            max(RDMA_COST.xfer_time_pipelined(nbytes, ops),
+                nbytes * 2 / RDMA_COST.bandwidth_Bps))
+
+
+class TestHotChunkFanout:
+    def test_one_read_k_scatters_bit_identical(self):
+        k = 4
+        img, ws = make_image(seed=1)
+        pool, master, names = make_stack([(img, ws)])
+        server = NodePageServer("h0", pool)
+        orch = Orchestrator("h0", pool, master.catalog, node_server=server)
+        ris = [orch.restore(names[0], pre_install=False, prefetch_cold=False)
+               for _ in range(k)]
+        assert all(ri is not None for ri in ris)
+        drive_full_restore(ris)
+
+        for ri in ris:
+            assert ri.instance.present.all()
+            assert np.array_equal(ri.instance.image.buf, img.buf)
+            assert ri.engine.prefetch_stats["pages_installed"] > 0
+
+        reader = ris[0].engine.reader
+        n_hot = int(reader.hot_page_indices().size)
+        n_chunks = -(-n_hot // RestoreEngine.HOT_CHUNK_PAGES)
+        assert server.chunks.stats["reads"] == n_chunks
+        assert server.chunks.stats["fanout_hits"] == (k - 1) * n_chunks
+        assert server.stats["fanout_installs"] > 0
+
+        # the CXL link carried the hot bytes ONCE; each session still read
+        # its own machine state + offset array
+        r = reader.regions
+        per_session_index = r.ms_size + r.total_pages * 8
+        total_read = sum(ri.engine.reader.view.stats["bytes_read"] for ri in ris)
+        assert total_read == k * per_session_index + n_hot * PAGE_SIZE
+
+        # followers were still CHARGED the chunk-read time they waited on
+        for ri in ris:
+            assert ri.ledger.seconds.get("cxl_read", 0.0) > 0.0
+        for ri in ris:
+            ri.shutdown()
+        # un-borrow released the refcounted cache: nothing left for the group
+        assert server.chunks.drop_group((names[0], r.version)) == 0
+        orch.close()
+        server.close()
+
+    def test_solo_restores_bypass_cache_and_stay_exact(self):
+        """A one-session group has nobody to fan out to: the cache is not
+        populated (no hot-region duplication in DRAM), and sequential
+        restores of the same snapshot stay bit-identical."""
+        img, ws = make_image(seed=2)
+        pool, master, names = make_stack([(img, ws)])
+        server = NodePageServer("h0", pool)
+        orch = Orchestrator("h0", pool, master.catalog, node_server=server)
+        ri1 = orch.restore(names[0], pre_install=True, prefetch_cold=False)
+        assert server.chunks.stats["reads"] == 0
+        assert server.chunks.stats["fanout_hits"] == 0
+        ri1.shutdown()
+        ri2 = orch.restore(names[0], pre_install=True, prefetch_cold=False)
+        ri2.engine.install_all_sync()
+        assert np.array_equal(ri2.instance.image.buf, img.buf)
+        ri2.shutdown()
+        server.close()
+
+    def test_late_joiner_gets_cold_pages(self):
+        """Regression: a session attaching to a LIVE group after the group's
+        prefetch walk completed must still get its cold pages prefetched
+        (its start_prefetcher re-enqueues what the pump no longer covers)."""
+        img, ws = make_image(seed=12)
+        pool, master, names = make_stack([(img, ws)])
+        server = NodePageServer("h0", pool)
+        orch = Orchestrator("h0", pool, master.catalog, node_server=server)
+        ri_a = orch.restore(names[0], pre_install=False, prefetch_cold=True)
+        assert ri_a.engine.wait_prefetch_idle(60)       # A's walk fully done
+        # B joins while A is still alive: same FanoutGroup, walk already run
+        ri_b = orch.restore(names[0], pre_install=False, prefetch_cold=True)
+        assert ri_b.engine.wait_prefetch_idle(60)
+        cold = ri_b.engine.reader.cold_page_indices()
+        assert ri_b.instance.present[cold].all()
+        ri_b.engine.pre_install_hot()
+        ri_b.engine.install_zero_runs()
+        assert np.array_equal(ri_b.instance.image.buf, img.buf)
+        ri_a.shutdown()
+        ri_b.shutdown()
+        server.close()
+
+
+class TestDemandOverPrefetchPriority:
+    def test_urgent_overtakes_queued_prefetch_across_instances(self):
+        """Deterministic: queue prefetch extents from instance A, then demand
+        faults from instance B, on a stopped engine; on start, B's demand
+        reads complete FIRST despite being posted last."""
+        pool = HierarchicalPool(8 << 20, 8 << 20)
+        eng = AsyncRDMAEngine(pool.rdma, TimeLedger(), start=False)
+        for i in range(6):
+            eng.submit_read(i * PAGE_SIZE, PAGE_SIZE,
+                            np.empty(PAGE_SIZE, np.uint8),
+                            ("prefetch", "instA", i), urgent=False)
+        for j in range(2):
+            eng.submit_read(j * PAGE_SIZE, PAGE_SIZE,
+                            np.empty(PAGE_SIZE, np.uint8),
+                            ("demand", "instB", j), urgent=True)
+        eng.start()
+        try:
+            order = []
+            while len(order) < 8:
+                item = eng.poll_completion(block=True, timeout_s=1.0)
+                assert item is not None
+                order.append(item[1])
+            assert [t[0] for t in order[:2]] == ["demand", "demand"]
+            assert eng.stats["urgent_reads"] == 2
+        finally:
+            eng.close()
+
+    def test_server_demand_faults_are_urgent(self):
+        imgs = [make_image(seed=3), make_image(seed=4)]
+        pool, master, names = make_stack(imgs)
+        server = NodePageServer("h0", pool)
+        orch = Orchestrator("h0", pool, master.catalog, node_server=server)
+        ri_a = orch.restore(names[0], pre_install=False, prefetch_cold=True)
+        ri_b = orch.restore(names[1], pre_install=False, prefetch_cold=False)
+        cold_b = ri_b.engine.reader.cold_page_indices()[:16]
+        for p in cold_b:
+            ri_b.engine.access(int(p), timeout_s=30)
+        assert server.stats["demand_reads"] >= cold_b.size
+        assert server.engine.stats["urgent_reads"] >= cold_b.size
+        assert ri_a.engine.wait_prefetch_idle(60)
+        ri_a.shutdown()
+        ri_b.shutdown()
+        server.close()
+
+
+class TestCrossInstanceFairness:
+    def test_light_restore_not_starved_by_heavy_prefetcher(self):
+        heavy = make_image(seed=5, hot_pages=16, cold_pages=512, zero_pages=32)
+        light = make_image(seed=6, hot_pages=16, cold_pages=64, zero_pages=32)
+        pool, master, names = make_stack([heavy, light],
+                                         names=["heavy", "light"])
+        # quantum = one 8-page extent: strict round-robin alternation
+        server = NodePageServer("h0", pool, drr_quantum=8 * PAGE_SIZE)
+        orch = Orchestrator("h0", pool, master.catalog, node_server=server,
+                            max_extent_pages=8)
+        ri_h = orch.restore("heavy", pre_install=False, prefetch_cold=False)
+        ri_l = orch.restore("light", pre_install=False, prefetch_cold=False)
+        ri_h.engine.start_prefetcher(max_extent_pages=8)   # heavy first
+        ri_l.engine.start_prefetcher(max_extent_pages=8)
+        assert ri_h.engine.wait_prefetch_idle(60)
+        assert ri_l.engine.wait_prefetch_idle(60)
+
+        posts = list(server.post_order)
+        h_key = ri_h.engine._group.key if ri_h.engine._group else ("heavy", 0)
+        light_posts = [i for i, (g, _es) in enumerate(posts) if g != h_key]
+        heavy_posts = [i for i, (g, _es) in enumerate(posts) if g == h_key]
+        n_light = len(light_posts)
+        assert n_light >= 8                        # all light extents posted
+        # DRR: the light group's last extent is posted long before the heavy
+        # walk finishes (FIFO starvation would place it at the very end)
+        assert light_posts[-1] < len(posts) - len(heavy_posts) // 3
+        assert light_posts[-1] < 3 * n_light + 16
+        # genuinely interleaved
+        assert any(h > light_posts[0] for h in heavy_posts)
+
+        # both restores complete exactly
+        drive_full_restore([ri_h, ri_l], max_extent_pages=8)
+        assert np.array_equal(ri_h.instance.image.buf, heavy[0].buf)
+        assert np.array_equal(ri_l.instance.image.buf, light[0].buf)
+        ri_h.shutdown()
+        ri_l.shutdown()
+        server.close()
+
+
+class TestExecutedMatchesAnalyticShared:
+    """Property: executed modeled restore time under the LinkArbiter tracks
+    the analytic `_shared()`-based model within 15% across random
+    concurrency/workload mixes, for BOTH runtimes."""
+
+    @pytest.mark.parametrize("shared,same_snapshot,conc,seed", [
+        (True, False, 3, 10),     # shared runtime, 3 distinct groups
+        (True, True, 4, 11),      # shared runtime, one fan-out group of 4
+        (False, True, 3, 12),     # per-instance engines, same snapshot
+        (False, False, 2, 13),    # per-instance engines, mixed
+    ])
+    def test_executed_within_15pct(self, shared, same_snapshot, conc, seed):
+        rng = np.random.default_rng(seed)
+        n_imgs = 1 if same_snapshot else conc
+        images = [make_image(seed=seed + i,
+                             hot_pages=int(rng.integers(32, 160)),
+                             cold_pages=int(rng.integers(64, 384)),
+                             zero_pages=int(rng.integers(64, 512)))
+                  for i in range(n_imgs)]
+        pool, master, names = make_stack(images)
+        orch = Orchestrator("h0", pool, master.catalog, use_node_server=shared)
+        ris = [orch.restore(names[0 if same_snapshot else k],
+                            pre_install=False, prefetch_cold=False)
+               for k in range(conc)]
+        drive_full_restore(ris)
+        groups = 1 if (shared and same_snapshot) else conc
+        for k, ri in enumerate(ris):
+            src = images[0 if same_snapshot else k][0]
+            assert np.array_equal(ri.instance.image.buf, src.buf)
+            t_exec = ri.ledger.total()
+            t_model = modeled_concurrent_restore_s(ri.engine.reader, groups)
+            assert t_exec == pytest.approx(t_model, rel=0.15), \
+                (t_exec, t_model, shared, same_snapshot, conc)
+        for ri in ris:
+            ri.shutdown()
+        orch.close()
+
+
+class TestStopDrainsInflight:
+    def test_stop_returns_demand_buffers_per_instance_engine(self):
+        img, ws = make_image(seed=7)
+        pool, master, names = make_stack([(img, ws)])
+        orch = Orchestrator("h0", pool, master.catalog, use_node_server=False)
+        ri = orch.restore(names[0], pre_install=False, prefetch_cold=False)
+        cold = ri.engine.reader.cold_page_indices()
+        for p in cold[:64]:                  # posts urgent reads, no waiting
+            ri.engine.handle_fault(int(p))
+        ri.shutdown()                        # stop with reads in flight
+        assert ri.engine.buffers.outstanding == 0
+        assert ri.engine._inflight == {}
+        # drained completions installed normally (no lost pages, no doubles)
+        installed = int(ri.instance.present[cold[:64]].sum())
+        assert installed == ri.instance.stats["uffd_copies"]
+        orch.close()
+
+    def test_stop_shared_runtime_conserves_buffers(self):
+        img, ws = make_image(seed=8)
+        pool, master, names = make_stack([(img, ws)])
+        server = NodePageServer("h0", pool)
+        orch = Orchestrator("h0", pool, master.catalog, node_server=server)
+        ri = orch.restore(names[0], pre_install=False, prefetch_cold=False)
+        cold = ri.engine.reader.cold_page_indices()
+        for p in cold[:32]:
+            ri.engine.handle_fault(int(p))
+        ri.shutdown()                        # detach parks + drains the host
+        assert server.buffers.outstanding == 0
+        server.close()
+
+
+class TestClassifyVectorized:
+    @staticmethod
+    def _classify_reference(spec):
+        zero = spec.image.zero_page_bitmap()
+        ws = set(int(p) for p in spec.working_set)
+        touched = [int(p) for p in spec.touched]
+        t_zero = [p for p in touched if zero[p]]
+        t_hot = [p for p in touched if not zero[p] and p in ws]
+        t_cold = [p for p in touched if not zero[p] and p not in ws]
+        ws_zero = [p for p in ws if zero[p]]
+        ws_nonzero = [p for p in ws if not zero[p]]
+        return zero, t_zero, t_hot, t_cold, ws_zero, ws_nonzero
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_identical_to_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        img, _ws = make_image(seed=seed, hot_pages=32, cold_pages=64,
+                              zero_pages=96)
+        total = img.total_pages
+        ws = rng.choice(total, size=int(rng.integers(1, total // 2)),
+                        replace=False)
+        touched = rng.integers(0, total, size=int(rng.integers(1, total)))
+        touched = np.concatenate([touched, touched[:7]])    # duplicates too
+        spec = WorkloadSpec(name="t", image=img, working_set=ws,
+                            touched=touched, compute_s=0.0)
+        zero_v, tz_v, th_v, tc_v, wsz_v, wsn_v = _classify(spec)
+        zero_r, tz_r, th_r, tc_r, wsz_r, wsn_r = self._classify_reference(spec)
+        np.testing.assert_array_equal(zero_v, zero_r)
+        # touched classes preserve order + duplicates exactly
+        assert list(tz_v) == tz_r
+        assert list(th_v) == th_r
+        assert list(tc_v) == tc_r
+        # working-set classes are the same sets (vectorized form is sorted)
+        assert set(int(p) for p in wsz_v) == set(wsz_r)
+        assert set(int(p) for p in wsn_v) == set(wsn_r)
+        assert list(wsz_v) == sorted(wsz_v)
+        assert list(wsn_v) == sorted(wsn_v)
+
+    def test_empty_touched(self):
+        img, ws = make_image(seed=9, hot_pages=16, cold_pages=16, zero_pages=16)
+        spec = WorkloadSpec(name="t", image=img, working_set=ws,
+                            touched=np.zeros(0, np.int64), compute_s=0.0)
+        _zero, tz, th, tc, _wsz, wsn = _classify(spec)
+        assert len(tz) == len(th) == len(tc) == 0
+        assert len(wsn) > 0
