@@ -1,0 +1,274 @@
+"""Online hotness-feedback benchmark (ISSUE 4 acceptance).
+
+The paper's hotness classification is offline: the hot set is frozen into
+the snapshot at publish time.  This benchmark drifts the invocation working
+set mid-run and compares invocation latency under
+
+  frozen    : the v0 snapshot keeps serving — every drifted page takes the
+              demand-fault path (trap + urgent RDMA read + uffd.copy) on
+              every fresh restore, forever;
+  adaptive  : the restores' demand-fault/prefetch-hit/touch telemetry feeds
+              the per-(name, version) HeatMap; once the modeled benefit
+              clears the rebuild break-even (strategies.recuration_economics)
+              the PoolMaster re-curates — promoting the hot-faulting drift
+              pages into the CXL region and demoting the never-touched
+              "hot" pages to RDMA — and republishes through the ownership
+              protocol; post-re-curation restores pre-install the drifted
+              set.
+
+All restores perform REAL byte movement and are verified bit-identical to
+the published image (including across the re-curation republish).  Times
+are modeled seconds (DESIGN.md §2): ledger deltas during the invocation
+plus the userfaultfd trap cost per major fault.
+
+A second section exercises the CXL capacity manager: snapshots published
+into a pod whose CXL budget fits only a fraction of them must degrade
+(clock-demote LRU victims to RDMA / spill the newcomer's hot set) instead
+of failing alloc — every one of them must still restore bit-identically.
+
+Acceptance (checked into the emitted json): after the drift, re-curated
+restores recover >= 1.3x first-invocation latency vs the frozen hot set,
+every restore bit-identical.
+
+Results land in experiments/adaptive_bench.json (full) or
+experiments/adaptive_bench_quick.json (--quick CI smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (
+    AccessRecorder,
+    HeatRegistry,
+    HierarchicalPool,
+    Orchestrator,
+    PoolMaster,
+    StateImage,
+)
+from repro.core.pagestore import PAGE_SIZE
+from repro.serve.strategies import FAULT_TRAP_S
+
+OUT = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def make_drift_image(seed: int = 0, scale: int = 1):
+    """Image with an over-approximated offline hot set and a driftable mass:
+
+      params_used    pages the invocations actually touch (stays hot)
+      params_unused  profiled hot but never invoked (demotion candidate)
+      table          invocations touch region A, then drift to region B
+      arena          zero pages
+    """
+    rng = np.random.default_rng(seed)
+    n_used, n_unused, n_table, n_zero = (96 * scale, 64 * scale,
+                                         512 * scale, 192 * scale)
+    img = StateImage.build({
+        "params_used": rng.standard_normal(n_used * PAGE_SIZE // 4).astype(np.float32),
+        "params_unused": rng.standard_normal(n_unused * PAGE_SIZE // 4).astype(np.float32),
+        "table": rng.integers(1, 255, (n_table * PAGE_SIZE,)).astype(np.uint8),
+        "arena": np.zeros(n_zero * PAGE_SIZE, np.uint8),
+    })
+    by = img.manifest.by_name()
+    t0 = by["table"].first_page
+    n_region = n_table // 4
+    region_a = np.arange(t0, t0 + n_region)
+    region_b = np.arange(t0 + 2 * n_region, t0 + 3 * n_region)
+    used = np.asarray(list(by["params_used"].pages()), dtype=np.int64)
+    unused = np.asarray(list(by["params_unused"].pages()), dtype=np.int64)
+    # offline profile: params (both) + region A — B is cold in v0
+    rec = AccessRecorder(img.manifest)
+    rec.touch_array("params_used")
+    rec.touch_array("params_unused")
+    rec.touch_pages(region_a)
+    return img, rec.working_set(), {
+        "invoke_hot": used, "unused": unused,
+        "region_a": region_a, "region_b": region_b,
+    }
+
+
+def run_restore_invocations(orch, name, image, touch_set, n_invocations=3):
+    """One full restore lifecycle: warm-restore, replay invocations over
+    ``touch_set``, then force-complete + bit-verify.  Per-invocation modeled
+    latency = ledger delta + trap cost per major fault taken."""
+    ri = orch.restore(name)
+    assert ri is not None, "warm restore failed"
+    setup_s = ri.ledger.total()
+    inv_lat = []
+    for _ in range(n_invocations):
+        led0 = ri.ledger.total()
+        flt0 = ri.instance.stats["fault_rdma"]
+        ri.engine.touch_pages(touch_set)
+        n_flt = ri.instance.stats["fault_rdma"] - flt0
+        inv_lat.append(ri.ledger.total() - led0 + n_flt * FAULT_TRAP_S)
+    ri.engine.install_all_sync()
+    bit_identical = bool(np.array_equal(ri.instance.image.buf, image.buf))
+    version = ri.borrow.version
+    stats = dict(ri.instance.stats)
+    ri.shutdown()
+    return {
+        "version": version,
+        "setup_modeled_s": setup_s,
+        "invocation_s": inv_lat,
+        "first_invocation_s": inv_lat[0],
+        "fault_rdma": stats["fault_rdma"],
+        "bit_identical": bit_identical,
+    }
+
+
+def run_adaptive(quick: bool = False, restores_per_phase: int = 3) -> dict:
+    scale = 1 if quick else 2
+    img, ws0, sets = make_drift_image(scale=scale)
+    pool = HierarchicalPool(cxl_capacity=512 << 20, rdma_capacity=1 << 30)
+    heat = HeatRegistry(clock=pool.clock, half_life_s=1e6)
+    master = PoolMaster(pool, heat=heat)
+    regions0 = master.publish("drifty", img, ws0)
+    orch = Orchestrator("bench-host", pool, master.catalog, heat=heat)
+
+    invoke = {
+        "warm": np.concatenate([sets["invoke_hot"], sets["region_a"]]),
+        "drift": np.concatenate([sets["invoke_hot"], sets["region_b"]]),
+    }
+    phases = {"warm": [], "frozen": [], "adaptive": []}
+    # phase 1: working set matches the profile — the frozen hot set is right
+    for _ in range(restores_per_phase):
+        phases["warm"].append(
+            run_restore_invocations(orch, "drifty", img, invoke["warm"]))
+    # phase 2: DRIFT — same snapshot, invocations moved to region B; these
+    # restores both measure the frozen penalty and feed the heat map
+    for _ in range(restores_per_phase):
+        phases["frozen"].append(
+            run_restore_invocations(orch, "drifty", img, invoke["drift"]))
+
+    # closed loop: re-curate when the modeled benefit clears the break-even
+    hm = heat.find("drifty", regions0.version)
+    regions1 = master.recurate("drifty", expected_restores=64)
+    assert regions1 is not None, "re-curation should clear the break-even"
+
+    # phase 3: fresh restores serve the re-curated snapshot
+    for _ in range(restores_per_phase):
+        phases["adaptive"].append(
+            run_restore_invocations(orch, "drifty", img, invoke["drift"]))
+    orch.close()
+
+    def mean(phase, key):
+        return float(np.mean([r[key] for r in phases[phase]]))
+
+    frozen_first = mean("frozen", "first_invocation_s")
+    adaptive_first = mean("adaptive", "first_invocation_s")
+    # the restore-to-first-response comparison: re-curation moves the drift
+    # pages from the per-restore demand-fault path into the (cheaper, CXL)
+    # pre-install, so setup grows a little while the first invocation
+    # collapses — the ratio of the SUMS is the honest recovery number
+    frozen_e2e = mean("frozen", "setup_modeled_s") + frozen_first
+    adaptive_e2e = mean("adaptive", "setup_modeled_s") + adaptive_first
+    recovery_x = frozen_e2e / max(adaptive_e2e, 1e-12)
+    all_bit_identical = all(r["bit_identical"]
+                            for rs in phases.values() for r in rs)
+    from repro.serve.strategies import recuration_economics
+    from repro.core.snapshot import plan_recuration
+    return {
+        "snapshot": {
+            "v0": {"n_hot": regions0.n_hot, "n_cold": regions0.n_cold,
+                   "n_zero": regions0.n_zero},
+            "recurated": {"version": regions1.version, "n_hot": regions1.n_hot,
+                          "n_cold": regions1.n_cold},
+            "drift_pages": int(sets["region_b"].size),
+            "unused_hot_pages": int(sets["unused"].size),
+        },
+        "heat": dict(hm.stats),
+        "phases": phases,
+        "frozen_first_invocation_s": frozen_first,
+        "adaptive_first_invocation_s": adaptive_first,
+        "frozen_e2e_s": frozen_e2e,
+        "adaptive_e2e_s": adaptive_e2e,
+        "recovery_x": recovery_x,
+        "all_bit_identical": all_bit_identical,
+    }
+
+
+def run_capacity(quick: bool = False) -> dict:
+    """CXL budget sized for ~2 of 4 snapshots' hot regions: later publishes
+    must clock-demote LRU victims (or spill their own hot set) and every
+    snapshot must keep restoring bit-identically — alloc never fails."""
+    n_hot, n_cold = (128, 64) if quick else (256, 128)
+    pool = HierarchicalPool(cxl_capacity=256 << 20, rdma_capacity=1 << 30)
+    per_snap_cxl = (n_hot + 16) * PAGE_SIZE
+    master = PoolMaster(pool, cxl_budget=int(2.5 * per_snap_cxl))
+    images = {}
+    for i in range(4):
+        rng = np.random.default_rng(100 + i)
+        img = StateImage.build({
+            "params": rng.standard_normal(n_hot * PAGE_SIZE // 4).astype(np.float32),
+            "runtime": rng.integers(1, 7, (n_cold * PAGE_SIZE,)).astype(np.uint8),
+        })
+        rec = AccessRecorder(img.manifest)
+        rec.touch_array("params")
+        images[f"cap{i}"] = img
+        master.publish(f"cap{i}", img, rec.working_set())
+    orch = Orchestrator("cap-host", pool, master.catalog)
+    bit = {}
+    hot_pages = {}
+    for i in range(4):
+        ri = orch.restore(f"cap{i}")
+        ri.engine.install_all_sync()
+        bit[f"cap{i}"] = bool(np.array_equal(ri.instance.image.buf,
+                                             images[f"cap{i}"].buf))
+        hot_pages[f"cap{i}"] = ri.borrow.regions.n_hot
+        ri.shutdown()
+    orch.close()
+    report = master.capacity.report()
+    return {
+        "budget_report": report,
+        "n_hot_by_snapshot": hot_pages,
+        "all_bit_identical": all(bit.values()),
+        "alloc_failures": 0,          # reaching here means none were raised
+        "demoted_or_degraded": int(report["demotions"] + report["degraded"]),
+    }
+
+
+def run(quick: bool = False) -> dict:
+    adaptive = run_adaptive(quick=quick)
+    capacity = run_capacity(quick=quick)
+    criteria = {
+        "recovery_ge_1_3x": bool(adaptive["recovery_x"] >= 1.3),
+        "all_restores_bit_identical": bool(adaptive["all_bit_identical"]
+                                           and capacity["all_bit_identical"]),
+        "recuration_happened": adaptive["snapshot"]["recurated"]["version"] >= 1,
+        "capacity_managed": capacity["demoted_or_degraded"] >= 1,
+    }
+    out = {"adaptive": adaptive, "capacity": capacity,
+           "criteria": criteria, "quick": quick}
+    OUT.mkdir(exist_ok=True)
+    name = "adaptive_bench_quick.json" if quick else "adaptive_bench.json"
+    (OUT / name).write_text(json.dumps(out, indent=2))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke (small image)")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    a = out["adaptive"]
+    print(f"v0 hot={a['snapshot']['v0']['n_hot']} -> re-curated "
+          f"hot={a['snapshot']['recurated']['n_hot']} "
+          f"(drift={a['snapshot']['drift_pages']}, "
+          f"unused={a['snapshot']['unused_hot_pages']})")
+    print(f"first-invocation modeled latency: frozen "
+          f"{a['frozen_first_invocation_s']*1e3:.3f} ms -> adaptive "
+          f"{a['adaptive_first_invocation_s']*1e3:.3f} ms")
+    print(f"restore-to-first-response: frozen {a['frozen_e2e_s']*1e3:.3f} ms "
+          f"-> adaptive {a['adaptive_e2e_s']*1e3:.3f} ms "
+          f"({a['recovery_x']:.2f}x recovery)")
+    print(f"capacity: {out['capacity']['budget_report']}")
+    ok = all(out["criteria"].values())
+    print(f"criteria: {out['criteria']}  ->  {'PASS' if ok else 'FAIL'}")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

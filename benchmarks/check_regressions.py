@@ -1,0 +1,215 @@
+"""Benchmark-regression CI gate (ISSUE 4 satellite).
+
+Re-runs the quick benchmark suite in-process and compares the modeled-time
+/ throughput keys below against the *committed* baselines under
+``experiments/`` (read via ``git show HEAD:...`` so an earlier CI step that
+rewrote the working-tree files cannot launder a regression).  Any key
+drifting beyond its tolerance — or any boolean correctness key flipping —
+fails the gate with a non-zero exit.
+
+Previously only ``concurrency_bench`` self-checked its acceptance criteria;
+``breakdown`` and ``serving_bench`` smoke steps could silently regress.
+This is the single gate over all of them, wired as the last fast-tier CI
+step.
+
+Usage:
+    python -m benchmarks.check_regressions            # re-run + compare
+    python -m benchmarks.check_regressions --no-run   # compare disk files
+    python -m benchmarks.check_regressions --baseline-dir DIR   # tests
+
+All compared keys are modeled/deterministic (re-running the benches twice
+produces bit-equal values — wall-clock keys are never compared), so the
+±10% default tolerance only absorbs genuine algorithmic drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+REPO = Path(__file__).resolve().parents[1]
+EXPERIMENTS = REPO / "experiments"
+
+DEFAULT_TOLERANCE = 0.10
+
+# Key spec: dotted path into the benchmark's JSON (integers index lists);
+# optionally (path, tolerance).  Booleans compare exactly.
+KeySpec = Union[str, Tuple[str, float]]
+
+BASELINES: Dict[str, List[KeySpec]] = {
+    "breakdown.json": [
+        "breakdown.firecracker.total",
+        "breakdown.reap.total",
+        "breakdown.faasnap.total",
+        "breakdown.fctiered.total",
+        "breakdown.aquifer.total",
+        "breakdown.aquifer_perpage.total",
+        "hot_preinstall.speedup",
+        "speedup_vs_firecracker",
+        "speedup_vs_faasnap",
+        "restore_bit_identical",
+    ],
+    "serving_bench.json": [
+        "rows.0.modes.per_page.total_modeled_s",
+        "rows.0.modes.batched.total_modeled_s",
+        "rows.0.modes.batched.preinstall_modeled_s",
+        "rows.0.preinstall_speedup",
+        "rows.0.total_speedup",
+        "all_bit_identical_and_not_slower",
+    ],
+    "concurrency_bench_quick.json": [
+        "rows.0.restore_p50_ms",
+        "rows.0.agg_throughput_GBps",
+        "rows.1.restore_p50_ms",
+        "rows.1.agg_throughput_GBps",
+        "rows.2.restore_p50_ms",
+        "rows.2.agg_throughput_GBps",
+        "rows.3.restore_p50_ms",
+        "rows.3.agg_throughput_GBps",
+        "criteria.all_bit_identical",
+        "criteria.model_within_15pct",
+    ],
+    "adaptive_bench_quick.json": [
+        "adaptive.frozen_first_invocation_s",
+        "adaptive.frozen_e2e_s",
+        "adaptive.adaptive_e2e_s",
+        "adaptive.recovery_x",
+        "criteria.recovery_ge_1_3x",
+        "criteria.all_restores_bit_identical",
+        "criteria.recuration_happened",
+        "criteria.capacity_managed",
+    ],
+}
+
+
+def get_path(obj, path: str):
+    cur = obj
+    for part in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        else:
+            cur = cur[part]
+    return cur
+
+
+def compare(name: str, baseline: dict, fresh: dict,
+            keys: Sequence[KeySpec],
+            tolerance: float = DEFAULT_TOLERANCE) -> List[str]:
+    """Violation messages for every key that regressed beyond tolerance."""
+    violations: List[str] = []
+    for spec in keys:
+        path, tol = (spec, tolerance) if isinstance(spec, str) else spec
+        try:
+            base = get_path(baseline, path)
+        except (KeyError, IndexError, TypeError):
+            violations.append(f"{name}: baseline is missing key {path!r}")
+            continue
+        try:
+            new = get_path(fresh, path)
+        except (KeyError, IndexError, TypeError):
+            violations.append(f"{name}: fresh run is missing key {path!r}")
+            continue
+        if isinstance(base, bool) or isinstance(new, bool):
+            if bool(base) != bool(new):
+                violations.append(
+                    f"{name}: {path} flipped {base!r} -> {new!r}")
+            continue
+        base_f, new_f = float(base), float(new)
+        denom = max(abs(base_f), 1e-12)
+        rel = abs(new_f - base_f) / denom
+        if rel > tol:
+            violations.append(
+                f"{name}: {path} drifted {rel:+.1%} beyond ±{tol:.0%} "
+                f"(baseline {base_f:.6g}, now {new_f:.6g})")
+    return violations
+
+
+def load_baseline(fname: str, baseline_dir: Optional[Path] = None) -> dict:
+    """The committed baseline: ``git show HEAD:experiments/<fname>`` so a
+    working-tree overwrite by an earlier bench step cannot mask drift;
+    ``baseline_dir`` overrides for tests / non-git checkouts."""
+    if baseline_dir is not None:
+        return json.loads((Path(baseline_dir) / fname).read_text())
+    proc = subprocess.run(
+        ["git", "-C", str(REPO), "show", f"HEAD:experiments/{fname}"],
+        capture_output=True, text=True)
+    if proc.returncode == 0:
+        return json.loads(proc.stdout)
+    # non-git fallback: the on-disk file (warn — it may have been rewritten)
+    path = EXPERIMENTS / fname
+    if not path.exists():
+        raise FileNotFoundError(
+            f"no committed baseline for {fname} (git show failed: "
+            f"{proc.stderr.strip()!r}) and {path} does not exist")
+    print(f"warning: using working-tree {path} as baseline (not in git)",
+          file=sys.stderr)
+    return json.loads(path.read_text())
+
+
+def run_fresh() -> Dict[str, dict]:
+    """Re-run the quick benches in-process; returns results keyed like
+    BASELINES.  (Each run() also rewrites its experiments/*.json, which is
+    why baselines are read from git, not disk.)"""
+    from . import adaptive_bench, breakdown, concurrency_bench, serving_bench
+
+    return {
+        "breakdown.json": breakdown.run(),
+        "serving_bench.json": serving_bench.run(["chameleon"]),
+        "concurrency_bench_quick.json": concurrency_bench.run(quick=True),
+        "adaptive_bench_quick.json": adaptive_bench.run(quick=True),
+    }
+
+
+def check_all(fresh: Dict[str, dict],
+              baseline_dir: Optional[Path] = None,
+              tolerance: float = DEFAULT_TOLERANCE) -> List[str]:
+    violations: List[str] = []
+    for fname, keys in BASELINES.items():
+        if fname not in fresh:
+            violations.append(f"{fname}: no fresh result produced")
+            continue
+        try:
+            baseline = load_baseline(fname, baseline_dir)
+        except (FileNotFoundError, json.JSONDecodeError) as e:
+            violations.append(f"{fname}: cannot load baseline ({e})")
+            continue
+        violations.extend(compare(fname, baseline, fresh[fname], keys,
+                                  tolerance))
+    return violations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-run", action="store_true",
+                    help="compare the on-disk experiments/*.json instead of "
+                         "re-running the quick benches")
+    ap.add_argument("--baseline-dir", type=Path, default=None,
+                    help="read baselines from this directory instead of "
+                         "`git show HEAD:experiments/`")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE)
+    args = ap.parse_args(argv)
+
+    if args.no_run:
+        fresh = {f: json.loads((EXPERIMENTS / f).read_text())
+                 for f in BASELINES if (EXPERIMENTS / f).exists()}
+    else:
+        fresh = run_fresh()
+    violations = check_all(fresh, baseline_dir=args.baseline_dir,
+                           tolerance=args.tolerance)
+    n_keys = sum(len(k) for k in BASELINES.values())
+    if violations:
+        print(f"REGRESSION GATE FAILED — {len(violations)} violation(s) "
+              f"across {n_keys} checked keys:")
+        for v in violations:
+            print(f"  ✗ {v}")
+        return 1
+    print(f"regression gate OK: {n_keys} keys across {len(BASELINES)} "
+          f"baselines within ±{args.tolerance:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

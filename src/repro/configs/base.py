@@ -125,7 +125,8 @@ class ModelConfig:
         dense_ffn = 3 * d * f  # SwiGLU
         if self.family == "moe":
             fe = self.d_ff_expert
-            moe_ffn = self.n_experts * 3 * d * fe + self.n_shared_experts * 3 * d * fe + d * self.n_experts
+            moe_ffn = (self.n_experts * 3 * d * fe
+                       + self.n_shared_experts * 3 * d * fe + d * self.n_experts)
             n_moe = L - self.n_dense_layers
             ffn_total = self.n_dense_layers * dense_ffn + n_moe * moe_ffn
             return emb + L * attn + ffn_total

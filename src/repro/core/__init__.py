@@ -22,6 +22,7 @@ from .pool import (
     TIER_CXL,
     TIER_RDMA,
     CostModel,
+    CXLBudget,
     HierarchicalPool,
     HostView,
     LinkArbiter,
@@ -31,13 +32,17 @@ from .pool import (
 from .snapshot import (
     ZERO_SENTINEL,
     PageClasses,
+    RecurationPlan,
     SnapshotReader,
     SnapshotRegions,
     build_snapshot,
     classify_pages,
     decode_slot,
     encode_slot,
+    estimate_snapshot_cxl_size,
     free_snapshot,
+    plan_recuration,
+    reconstruct_image,
     runs_of_indices,
 )
 from .coherence import (
@@ -58,8 +63,14 @@ from .serving import (
     RestoreSession,
     mmap_install_cost,
 )
-from .profiler import AccessRecorder, WorkloadProfile, profile_invocations
-from .master import PoolMaster
+from .profiler import (
+    AccessRecorder,
+    HeatMap,
+    HeatRegistry,
+    WorkloadProfile,
+    profile_invocations,
+)
+from .master import CXLCapacityManager, PoolMaster
 from .nodeserver import FanoutGroup, HotChunkCache, NodePageServer
 from .orchestrator import Orchestrator, RestoredInstance
 from .dedup import DedupStore, fnv1a_page, fnv1a_pages

@@ -84,6 +84,11 @@ class CatalogEntry:
     state: AtomicU64 = dataclasses.field(default_factory=lambda: AtomicU64(STATE_FREE))
     refcount: AtomicU64 = dataclasses.field(default_factory=AtomicU64)
     borrow_counter: AtomicU64 = dataclasses.field(default_factory=AtomicU64)  # §3.6 eviction
+    # clock-eviction metadata (CXLCapacityManager): the reference bit gives
+    # borrowed-since-last-sweep second chances, the timestamp records restore
+    # recency for introspection/LRU tie-breaks.
+    referenced: AtomicU64 = dataclasses.field(default_factory=AtomicU64)
+    last_borrow_s: float = 0.0
     # Region record (rewritten only by the owner while TOMBSTONE & refcount==0).
     regions: Optional[SnapshotRegions] = None
     name: str = ""
@@ -170,6 +175,8 @@ class Catalog:
         # 2) CAS state expecting PUBLISHED — atomic, ordered after the increment
         if entry.state.compare_exchange(STATE_PUBLISHED, STATE_PUBLISHED):
             entry.borrow_counter.fetch_add(1)
+            entry.referenced.store(1)
+            entry.last_borrow_s = self.clock.monotonic()
             yield ("done", Borrow(entry, noop))
             return
         # CAS failed: snapshot is being reclaimed → back out, cold start
@@ -191,6 +198,8 @@ class Catalog:
         entry.name = name
         entry.version = version
         entry.borrow_counter.store(0)
+        entry.referenced.store(0)
+        entry.last_borrow_s = 0.0
         assert entry.refcount.load() == 0
         self._bind(name, entry.index)
         ok = entry.state.compare_exchange(entry.state.load(), STATE_PUBLISHED)
@@ -275,6 +284,8 @@ class LeaseFallback:
                 return None
             entry.refcount.fetch_add(1)
             entry.borrow_counter.fetch_add(1)
+            entry.referenced.store(1)
+            entry.last_borrow_s = self.catalog.clock.monotonic()
             return Borrow(entry, self._on_release)
 
     def _on_release(self) -> None:

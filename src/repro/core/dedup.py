@@ -14,7 +14,7 @@ the offset array and flush per page (§3.6).
 from __future__ import annotations
 
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -63,7 +63,8 @@ class DedupStore:
             if hit is not None:
                 off, rc = hit
                 # hash collision guard: verify bytes
-                if np.array_equal(self.tier.buf[off : off + PAGE_SIZE], page.view(np.uint8).reshape(-1)):
+                if np.array_equal(self.tier.buf[off : off + PAGE_SIZE],
+                                  page.view(np.uint8).reshape(-1)):
                     self._by_hash[h] = (off, rc + 1)
                     self.stats["dedup_hits"] += 1
                     return off

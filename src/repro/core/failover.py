@@ -19,7 +19,7 @@ Time is injected (:mod:`repro.core.clock`): under the real clock a
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict, Optional
+from typing import Optional
 
 from .clock import Clock, REAL_CLOCK
 from .coherence import AtomicU64, Catalog

@@ -4,6 +4,13 @@ Responsibilities: publish / update / delete snapshots under the ownership
 protocol, reclaim tombstoned regions once their refcount drains, and run the
 borrow-counter based CXL eviction policy (§3.6).  Content-hash deduplication
 (§3.6) is an optional layer applied at publish time.
+
+Beyond the paper: a per-pod CXL capacity manager (clock eviction over
+snapshot hot regions, degrade-to-RDMA on over-subscription) and the
+heat-feedback re-curation pipeline (``recurate``), which rebuilds a
+published snapshot with a corrected hot set and republishes it through the
+same ownership protocol — so the coherence invariants I1–I5 cover
+re-curation with no new protocol states.
 """
 from __future__ import annotations
 
@@ -13,18 +20,172 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .clock import Clock, REAL_CLOCK
-from .coherence import STATE_TOMBSTONE, Catalog, CatalogEntry
+from .coherence import STATE_PUBLISHED, STATE_TOMBSTONE, Catalog, CatalogEntry
 from .pagestore import StateImage
-from .pool import HierarchicalPool
-from .snapshot import SnapshotRegions, build_snapshot, free_snapshot
+from .pool import AllocError, CXLBudget, HierarchicalPool
+from .snapshot import (
+    SnapshotRegions,
+    build_snapshot,
+    estimate_snapshot_cxl_size,
+    free_snapshot,
+    plan_recuration,
+    reconstruct_image,
+)
+
+
+class CXLCapacityManager:
+    """Per-pod CXL budget enforcement with clock eviction (§3.6 grown up).
+
+    Admission: before a publish builds its CXL region, the master asks
+    :meth:`admit` whether the estimated bytes fit the pod budget.  When they
+    do not, a clock hand sweeps the catalog's published snapshots:
+
+    * entries borrowed since the last sweep carry a ``referenced`` bit —
+      the hand clears it and gives them a second chance (clock ≈ LRU by
+      restore recency without a sorted list in shared memory);
+    * entries with a nonzero refcount are SKIPPED, never evicted — a live
+      borrow (including fan-out restores holding ``HotChunkCache`` chunks
+      borrowed against the entry) pins the hot region;
+    * the victim is *demoted*, not deleted: its image is reconstructed and
+      republished with an empty working set through the ownership protocol,
+      so its hot region moves to RDMA and later restores degrade to
+      demand-paging instead of disappearing.
+
+    When even a full sweep cannot make room, :meth:`admit` returns False
+    and the caller publishes the NEW snapshot all-cold (hot set spilled to
+    RDMA) — over-subscription degrades, it never fails ``alloc``.
+    """
+
+    def __init__(self, master: "PoolMaster", budget_bytes: int,
+                 demote_drain_timeout_s: float = 0.25):
+        self.master = master
+        self.budget = CXLBudget(budget_bytes)
+        self.demote_drain_timeout_s = demote_drain_timeout_s
+        self._hand = 0
+        self._lock = threading.Lock()
+
+    def usage(self) -> int:
+        """Authoritative: sum of live catalog entries' CXL regions (the
+        gauge in :class:`~repro.core.pool.CXLBudget` is synced from this,
+        so accounting can never drift from the shared truth).  Each entry's
+        ``regions`` is read ONCE — a concurrent update may null it between
+        a check and a re-read."""
+        regions = [e.regions for e in self.master.catalog.entries]
+        total = sum(r.cxl_size for r in regions if r is not None)
+        self.budget.set_usage(total)
+        return total
+
+    def admit(self, needed_bytes: int, exclude_name: str = "") -> bool:
+        """True ⇒ the CXL region fits (possibly after demotions); False ⇒
+        caller must degrade the publish to RDMA."""
+        with self._lock:
+            budget = self.budget.budget_bytes
+            if self.usage() + needed_bytes <= budget:
+                self.budget.stats["admitted"] += 1
+                return True
+            self.budget.stats["sweeps"] += 1
+            # keep demoting clock victims until we fit or run out of victims
+            while self.usage() + needed_bytes > budget:
+                if not self._demote_one(exclude_name):
+                    break
+            if self.usage() + needed_bytes <= budget:
+                self.budget.stats["admitted"] += 1
+                return True
+            self.budget.stats["degraded"] += 1
+            return False
+
+    def _demote_one(self, exclude_name: str) -> bool:
+        """One clock sweep: demote the first unreferenced, unborrowed
+        published snapshot with a non-empty hot region.  Two full rounds so
+        every referenced bit can be cleared once before we give up."""
+        entries = self.master.catalog.entries
+        n = len(entries)
+        for _ in range(2 * n):
+            entry = entries[self._hand % n]
+            self._hand += 1
+            r = entry.regions
+            if (entry.state.load() != STATE_PUBLISHED or r is None
+                    or not entry.name or entry.name == exclude_name
+                    or r.hot_bytes <= 0):
+                continue
+            if entry.referenced.exchange(0):
+                continue                      # second chance (recently restored)
+            if entry.refcount.load() != 0:
+                continue                      # pinned by live borrows / fan-out
+            name = entry.name
+            # pin the regions while materializing them: a concurrent owner op
+            # on this name cannot free bytes we are still reading.  Released
+            # BEFORE the demoting publish — our own pin would deadlock its
+            # drain otherwise.
+            pin = self.master.catalog.borrow(name)
+            if pin is None or pin.regions is not r:
+                if pin is not None:
+                    pin.release()
+                continue                      # owner op raced us: skip victim
+            try:
+                image = reconstruct_image(self.master.pool, r)
+            finally:
+                pin.release()
+                # our own pin set the reference bit — clear it so a FAILED
+                # demotion does not grant the victim an unearned second
+                # chance on every later sweep
+                entry.referenced.store(0)
+            if not self._demote_publish(name, image, r.version):
+                continue                      # a borrow landed mid-drain: skip
+            self.budget.stats["demotions"] += 1
+            return True
+        return False
+
+    def _demote_publish(self, name: str, image: StateImage, old_version: int) -> bool:
+        """Drive the demoting publish with a bounded drain.  On a drain
+        timeout the victim is rolled back to PUBLISHED (the update path
+        tombstones before freeing; until the drain completes the old
+        regions are untouched, so flipping the state back simply restores
+        borrowability) — a timed-out demotion must never wedge the victim
+        as a permanent TOMBSTONE."""
+        gen = self.master.publish_steps(name, image, [],
+                                        metadata={"demoted_from": old_version},
+                                        expect_version=old_version)
+        clock = self.master.clock
+        deadline: Optional[float] = None
+        entry: Optional[CatalogEntry] = None
+        for label, value in gen:
+            if label == "tombstoned":
+                entry = value
+            elif label == "done":
+                return True
+            elif label == "stale":
+                return False      # an owner update raced us: not our victim
+            if label in ("draining", "owner_busy"):
+                if deadline is None:
+                    deadline = clock.monotonic() + self.demote_drain_timeout_s
+                if clock.monotonic() > deadline:
+                    gen.close()
+                    if (label == "draining" and entry is not None
+                            and entry.regions is not None):
+                        entry.state.compare_exchange(STATE_TOMBSTONE,
+                                                     STATE_PUBLISHED)
+                    return False
+                clock.sleep(1e-5)
+        return False
+
+    def report(self) -> Dict[str, int]:
+        self.usage()
+        return self.budget.report()
 
 
 class PoolMaster:
     def __init__(self, pool: HierarchicalPool, catalog: Optional[Catalog] = None,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None, cxl_budget: Optional[int] = None,
+                 heat=None):
         self.pool = pool
         self.clock = clock or getattr(pool, "clock", None) or REAL_CLOCK
         self.catalog = catalog or Catalog(clock=self.clock)
+        # per-pod CXL capacity manager (None ⇒ unmanaged, paper behaviour)
+        self.capacity = (CXLCapacityManager(self, cxl_budget)
+                         if cxl_budget is not None else None)
+        # pod-level HeatRegistry (online feedback); recurate() reads it
+        self.heat = heat
         self._versions: Dict[str, int] = {}
         self._pending_reclaim: List[CatalogEntry] = []
         self._lock = threading.Lock()
@@ -46,6 +207,7 @@ class PoolMaster:
         zero_bitmap: Optional[np.ndarray] = None,
         gather_fn=None,
         compress_cold: bool = False,
+        expect_version: Optional[int] = None,
     ) -> Iterator[Tuple[str, object]]:
         """Generator form of :meth:`publish`, yielding at the owner protocol's
         phase boundaries so the deterministic simulator can interleave
@@ -54,6 +216,10 @@ class PoolMaster:
 
         * ``("owner_busy", name)``     — another publish of this name is in
           flight; the driver waits (sleep / timeout) and resumes to re-poll;
+        * ``("stale", entry)``         — terminal: ``expect_version`` was
+          given and the entry's version moved before we claimed the name
+          (used by re-curation, which republishes *reconstructed* bytes and
+          must never overwrite a newer legitimate update with them);
         * ``("built_new", regions)``   — new-name path, data written;
         * ``("tombstoned", entry)``    — update path, new borrows now fail;
         * ``("draining", entry)``      — refcount still nonzero; the driver
@@ -73,19 +239,25 @@ class PoolMaster:
             yield ("owner_busy", name)
         existing = None
         try:
+            existing = self.catalog.find(name)
+            if expect_version is not None and (
+                    existing is None or existing.version != expect_version):
+                yield ("stale", existing)
+                return
             with self._lock:
                 version = self._versions.get(name, -1) + 1
                 self._versions[name] = version
-            existing = self.catalog.find(name)
             if existing is None:
-                regions = build_snapshot(
-                    self.pool, image, working_set, name,
+                regions = self._build_admitted(
+                    name, image, working_set,
                     version=version, metadata=metadata,
                     zero_bitmap=zero_bitmap, gather_fn=gather_fn,
                     compress_cold=compress_cold,
                 )
                 yield ("built_new", regions)
                 self.catalog.publish_new(name, regions, version)
+                if self.heat is not None:
+                    self.heat.prune(name, version - 1)
                 yield ("done", regions)
                 return
             # Update (§3.3): tombstone → wait for borrows to drain → rewrite
@@ -115,14 +287,16 @@ class PoolMaster:
                 # delete()+gc() must not free these bytes a second time
                 existing.regions = None
             yield ("freed_old", existing)
-            regions = build_snapshot(
-                self.pool, image, working_set, name,
+            regions = self._build_admitted(
+                name, image, working_set,
                 version=version, metadata=metadata,
                 zero_bitmap=zero_bitmap, gather_fn=gather_fn,
                 compress_cold=compress_cold,
             )
             yield ("rebuilt", regions)
             self.catalog.republish(existing, regions, version)
+            if self.heat is not None:
+                self.heat.prune(name, version - 1)
             # a delete() that landed during our drain window is superseded by
             # this update (last writer wins): clear its pending reclaim, else
             # the now-PUBLISHED entry sits in _pending_reclaim forever
@@ -150,13 +324,22 @@ class PoolMaster:
         drain_timeout_s: float = 30.0,
     ) -> SnapshotRegions:
         """Blocking driver over :meth:`publish_steps` (production path)."""
+        regions = self._drive_steps(
+            self.publish_steps(name, image, working_set, metadata=metadata,
+                               zero_bitmap=zero_bitmap, gather_fn=gather_fn,
+                               compress_cold=compress_cold),
+            name, drain_timeout_s)
+        assert regions is not None
+        return regions
+
+    def _drive_steps(self, gen: Iterator[Tuple[str, object]], name: str,
+                     drain_timeout_s: float) -> Optional[SnapshotRegions]:
+        """Shared blocking driver for the owner-op step generators: poll
+        through draining/owner_busy with one overall drain deadline, return
+        the regions on ``done`` or None on ``skipped``/``missing``."""
         deadline: Optional[float] = None
         regions: Optional[SnapshotRegions] = None
-        for label, value in self.publish_steps(
-            name, image, working_set, metadata=metadata,
-            zero_bitmap=zero_bitmap, gather_fn=gather_fn,
-            compress_cold=compress_cold,
-        ):
+        for label, value in gen:
             if label in ("draining", "owner_busy"):
                 if deadline is None:
                     deadline = self.clock.monotonic() + drain_timeout_s
@@ -165,8 +348,119 @@ class PoolMaster:
                 self.clock.sleep(1e-5)
             elif label == "done":
                 regions = value
-        assert regions is not None
+            elif label in ("skipped", "missing", "stale"):
+                return None
         return regions
+
+    def _build_admitted(self, name: str, image: StateImage,
+                        working_set: Sequence[int], **build_kw) -> SnapshotRegions:
+        """Build one snapshot under the pod CXL budget: ask the capacity
+        manager to admit the estimated CXL bytes (demoting clock victims if
+        needed), and degrade the hot set to RDMA (empty working set) when it
+        cannot — or when first-fit fragmentation still fails the alloc.
+        Over-subscribed pods degrade; they do not raise ``AllocError``."""
+        ws = working_set
+        if self.capacity is not None and len(ws):
+            need = estimate_snapshot_cxl_size(
+                image, ws, build_kw.get("zero_bitmap"),
+                metadata=build_kw.get("metadata"),
+                compress_cold=build_kw.get("compress_cold", False))
+            if not self.capacity.admit(need, exclude_name=name):
+                ws = []
+        try:
+            return build_snapshot(self.pool, image, ws, name, **build_kw)
+        except AllocError as e:
+            # degrade only on a CXL-side failure: an all-cold rebuild needs
+            # strictly MORE RDMA bytes, so retrying an RDMA failure is
+            # guaranteed to fail again (and in the update path would leave
+            # the entry wedged with its old regions already freed)
+            if (self.capacity is None or not len(ws)
+                    or getattr(e, "tier", "") != "cxl"):
+                raise
+            self.capacity.budget.stats["degraded"] += 1
+            return build_snapshot(self.pool, image, [], name, **build_kw)
+
+    # -- online re-curation (heat feedback → snapshot rebuild) -----------------
+    def recurate_steps(
+        self,
+        name: str,
+        heat=None,
+        min_promote_heat: float = 1.0,
+        demote_max_heat: float = 1e-3,
+        min_restores: int = 2,
+        expected_restores: int = 64,
+        force: bool = False,
+    ) -> Iterator[Tuple[str, object]]:
+        """Generator form of :meth:`recurate` (simulator-steppable).
+
+        Phases: ``("planned", (plan, economics))`` → either
+        ``("skipped", economics)`` (benefit below break-even and not
+        forced) or the full :meth:`publish_steps` update sequence —
+        re-curation IS an owner update, so tombstone/drain/republish and
+        the I1–I5 invariants cover it unchanged.  The rebuilt image is
+        reconstructed from the stored snapshot itself, so restores of the
+        new version remain bit-identical to the original publish.
+        """
+        from ..serve.strategies import recuration_economics
+
+        # pin the published regions for the whole read phase (plan +
+        # reconstruction): a concurrent owner update/delete of this name
+        # frees the old regions only after borrows drain, so the bytes we
+        # materialize can never be reused under us.  The pin is released
+        # before the republish below — our own borrow would deadlock its
+        # drain.  (A legitimate update landing between release and our
+        # tombstone is overwritten last-writer-wins, same as delete-vs-
+        # update; it cannot corrupt data.)
+        pin = self.catalog.borrow(name)
+        if pin is None or pin.regions is None:
+            if pin is not None:
+                pin.release()
+            yield ("missing", name)
+            return
+        image = None
+        try:
+            # NO yields while pinned: the pin must not outlive this block
+            # (a paused generator would hold the refcount indefinitely, and
+            # our own borrow would deadlock the republish drain below)
+            regions = pin.regions
+            if heat is None and self.heat is not None:
+                heat = self.heat.find(name, regions.version)
+            if heat is not None:
+                plan = plan_recuration(self.pool, regions, heat,
+                                       min_promote_heat=min_promote_heat,
+                                       demote_max_heat=demote_max_heat,
+                                       min_restores=min_restores)
+                econ = recuration_economics(regions, plan, expected_restores)
+                if force or (plan.changed and econ["worthwhile"]):
+                    image = reconstruct_image(self.pool, regions)
+        finally:
+            pin.release()
+        if heat is None:
+            yield ("missing", name)
+            return
+        yield ("planned", (plan, econ))
+        if image is None:
+            yield ("skipped", econ)
+            return
+        yield ("reconstructed", image)
+        # expect_version: if a legitimate owner update raced in after the
+        # pin was released, our reconstructed (now stale) bytes must NOT
+        # overwrite it — the republish aborts with ("stale", ...) instead
+        yield from self.publish_steps(
+            name, image, plan.new_working_set,
+            metadata={"recurated_from": regions.version,
+                      "promoted": int(plan.promote.size),
+                      "demoted": int(plan.demote.size)},
+            expect_version=regions.version,
+        )
+
+    def recurate(self, name: str, heat=None, drain_timeout_s: float = 30.0,
+                 **kw) -> Optional[SnapshotRegions]:
+        """Blocking driver over :meth:`recurate_steps`.  Returns the new
+        regions, or None when re-curation was skipped (below break-even,
+        no change, or no heat recorded for the published version)."""
+        return self._drive_steps(self.recurate_steps(name, heat=heat, **kw),
+                                 name, drain_timeout_s)
 
     def delete(self, name: str, gc_now: bool = True) -> bool:
         """Tombstone + schedule reclaim.  ``gc_now=False`` defers the reclaim

@@ -131,9 +131,13 @@ class NodePageServer:
 
     def __init__(self, host: str, pool: HierarchicalPool,
                  buffer_pool_pages: int = 512, poll_budget: int = 1024,
-                 drr_quantum: Optional[int] = None):
+                 drr_quantum: Optional[int] = None, heat=None):
         self.host = host
         self.pool = pool
+        # online hotness feedback: a HeatRegistry shared with the pod's
+        # PoolMaster; every attached session reports per-(name, version)
+        # demand-fault / prefetch-hit / touch telemetry into it
+        self.heat = heat
         self.drr_quantum = drr_quantum or self.DRR_QUANTUM
         self.engine = AsyncRDMAEngine(pool.rdma, TimeLedger(),
                                       poll_budget=poll_budget, host=host,
@@ -167,6 +171,10 @@ class NodePageServer:
         session = RestoreEngine(reader, instance, rdma_engine=None,
                                 buffer_pool=self.buffers,
                                 scatter_fn=scatter_fn, server=self)
+        if self.heat is not None:
+            hm = self.heat.map_for(name, version, instance.image.total_pages)
+            hm.note_restore()
+            session.heat = hm
         gkey = (name, version)
         with self._lifecycle:
             self._ensure_running()

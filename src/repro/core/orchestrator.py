@@ -18,12 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable, Dict, List, Optional
+from typing import Optional
 
 from .coherence import Borrow, Catalog
 from .nodeserver import NodePageServer
 from .pagestore import StateImage
-from .pool import HierarchicalPool, HostView, TimeLedger
+from .pool import HierarchicalPool, TimeLedger
 from .serving import AsyncRDMAEngine, BufferPool, Instance, RestoreEngine
 from .snapshot import SnapshotReader
 
@@ -59,10 +59,15 @@ class Orchestrator:
         scatter_fn=None,
         node_server: Optional[NodePageServer] = None,
         use_node_server: bool = True,
+        heat=None,
     ):
         self.host = host
         self.pool = pool
         self.catalog = catalog
+        # online hotness feedback: pod-shared HeatRegistry; every restore's
+        # demand-fault / prefetch-hit / touch telemetry lands there keyed by
+        # the borrowed (name, version)
+        self.heat = heat
         self.use_async_rdma = use_async_rdma
         self.buffer_pool_pages = buffer_pool_pages
         self.prefetch_cold = prefetch_cold
@@ -81,7 +86,8 @@ class Orchestrator:
             if self._owned_server is None:
                 self._owned_server = NodePageServer(
                     self.host, self.pool,
-                    buffer_pool_pages=self.buffer_pool_pages)
+                    buffer_pool_pages=self.buffer_pool_pages,
+                    heat=self.heat)
             return self._owned_server
 
     def close(self) -> None:
@@ -128,6 +134,11 @@ class Orchestrator:
                 reader, instance, rdma_engine, BufferPool(self.buffer_pool_pages),
                 scatter_fn=self.scatter_fn,
             )
+            if self.heat is not None:
+                hm = self.heat.map_for(name, borrow.regions.version,
+                                       instance.image.total_pages)
+                hm.note_restore()
+                engine.heat = hm
             # A/B honesty: a private-engine restore is still one stream on
             # the host's CXL link and RNIC — register it so its modeled
             # time sees the same contention the shared runtime sees

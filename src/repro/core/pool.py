@@ -87,6 +87,41 @@ class AllocError(RuntimeError):
     pass
 
 
+class CXLBudget:
+    """Per-pod byte budget over snapshot CXL regions (Pond-style capacity
+    management: the CXL tier must be actively managed per-pod to stay inside
+    its latency/capacity envelope, instead of letting snapshots accumulate
+    until ``alloc`` fails).
+
+    This is the accounting substrate only — the eviction *policy* (clock
+    sweep over snapshot hot regions, LRU by restore recency) lives in
+    :class:`repro.core.master.CXLCapacityManager`, which recomputes the
+    authoritative usage from the catalog and syncs it here via
+    :meth:`set_usage` so the gauge can never drift from the truth.
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget_bytes = int(budget_bytes)
+        self._lock = threading.Lock()
+        self._in_use = 0
+        self.stats = {"admitted": 0, "degraded": 0, "demotions": 0,
+                      "sweeps": 0}
+
+    @property
+    def in_use(self) -> int:
+        with self._lock:
+            return self._in_use
+
+    def set_usage(self, nbytes: int) -> None:
+        with self._lock:
+            self._in_use = int(nbytes)
+
+    def report(self) -> Dict[str, int]:
+        with self._lock:
+            return {"budget_bytes": self.budget_bytes, "in_use": self._in_use,
+                    **self.stats}
+
+
 class LinkArbiter:
     """Contention-aware modeled time for one host's link to a tier.
 
@@ -190,8 +225,10 @@ class MemoryTier:
                         self._free[i] = (off + nbytes, size - nbytes)
                     self.bytes_in_use += nbytes
                     return off
-        raise AllocError(f"tier {self.name}: cannot alloc {nbytes} B "
+        err = AllocError(f"tier {self.name}: cannot alloc {nbytes} B "
                          f"({self.bytes_in_use}/{self.capacity} in use)")
+        err.tier = self.name    # which tier failed (degrade paths branch on it)
+        raise err
 
     def free(self, offset: int, nbytes: int) -> None:
         """Return a block: O(log n) position search + O(1) neighbor merge

@@ -1,9 +1,18 @@
-"""Offline hotness profiling (§3.2).
+"""Hotness profiling: offline replay (§3.2) + online feedback.
 
-The orchestrator replays sampled invocations against a freshly restored
-instance and records every page it serves into a *working-set array*.  Since
-read-only pages are negligible (0.05% of pages, §2.3.3), we do not separate
-reads from writes — only touched/untouched matters.
+Offline: the orchestrator replays sampled invocations against a freshly
+restored instance and records every page it serves into a *working-set
+array*.  Since read-only pages are negligible (0.05% of pages, §2.3.3), we
+do not separate reads from writes — only touched/untouched matters.
+
+Online (beyond the paper's frozen hot set): every restore exports
+per-``(name, version)`` access telemetry — demand faults, prefetch hits and
+guest touches — into a :class:`HeatMap`, a decayed per-page counter array.
+The re-curation pipeline (``core/snapshot.plan_recuration`` +
+``PoolMaster.recurate``) consumes the heat map to promote hot-faulting cold
+pages into the CXL region and demote never-touched "hot" pages to RDMA when
+the modeled benefit exceeds the rebuild break-even
+(``serve/strategies.recuration_economics``).
 
 `AccessRecorder` is the framework-side hook: model code (embedding gathers,
 MoE routing, KV writes, layer weight reads) reports logical accesses and the
@@ -12,29 +21,50 @@ recorder resolves them to page indices through the image manifest.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Set
+import threading
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
-from .pagestore import Manifest, runs_from_pages
+from .clock import Clock, REAL_CLOCK
+from .pagestore import PAGE_SIZE, Manifest, runs_from_pages
 
 
 class AccessRecorder:
     def __init__(self, manifest: Manifest):
         self.manifest = manifest
         self._extents = manifest.by_name()
-        self.pages: Set[int] = set()
+        self.pages: set = set()
 
     # -- logical access APIs ---------------------------------------------------
     def touch_array(self, name: str) -> None:
         self.pages.update(self._extents[name].pages())
 
     def touch_rows(self, name: str, rows: Iterable[int]) -> None:
-        """Leading-axis rows (embedding rows, expert slices, cache slots)."""
+        """Leading-axis rows (embedding rows, expert slices, cache slots).
+
+        Vectorized: the byte span of every requested row is computed in one
+        shot and expanded to page indices with a repeat/cumsum range
+        expansion + ``np.unique`` — no per-row Python loop.  Equivalent to
+        ``extent.row_pages`` per row (reference-equivalence tested).
+        """
         e = self._extents[name]
+        rows_arr = np.asarray(list(rows) if not isinstance(rows, np.ndarray) else rows,
+                              dtype=np.int64).reshape(-1)
+        if rows_arr.size == 0:
+            return
         row_elems = int(np.prod(e.shape[1:])) if len(e.shape) > 1 else 1
-        for r in rows:
-            self.pages.update(e.row_pages(int(r), row_elems))
+        itemsize = np.dtype(e.dtype).itemsize
+        lo = e.byte_offset + rows_arr * row_elems * itemsize
+        hi = e.byte_offset + (rows_arr + 1) * row_elems * itemsize
+        first = lo // PAGE_SIZE
+        last = -(-hi // PAGE_SIZE)                       # exclusive page end
+        lens = last - first
+        offsets = np.cumsum(lens) - lens
+        pages = (np.repeat(first, lens)
+                 + np.arange(int(lens.sum()), dtype=np.int64)
+                 - np.repeat(offsets, lens))
+        self.pages.update(np.unique(pages).tolist())
 
     def touch_elements(self, name: str, start: int, stop: int) -> None:
         e = self._extents[name]
@@ -63,7 +93,8 @@ class WorkloadProfile:
         runs = runs_from_pages(self.working_set.tolist())
         lens = np.asarray([n for _, n in runs], dtype=np.float64)
         if lens.size == 0:
-            return {"n_runs": 0, "mean_run": 0.0, "p90_run": 0.0}
+            return {"n_runs": 0, "mean_run": 0.0, "p90_run": 0.0,
+                    "frac_runs_lt4": 0.0}
         return {
             "n_runs": int(lens.size),
             "mean_run": float(lens.mean()),
@@ -87,3 +118,152 @@ def profile_invocations(
     for i in range(n_invocations):
         invocation_fn(rec, i)
     return WorkloadProfile(name, n_invocations, rec.working_set())
+
+
+# --------------------------------------------------------------------------
+# Online hotness feedback
+# --------------------------------------------------------------------------
+
+class HeatMap:
+    """Decayed per-page access-heat accumulator for one ``(name, version)``.
+
+    Counters decay exponentially with half-life ``half_life_s`` in the
+    pod clock's time base (lazy, vectorized: one multiply of the whole
+    array per observation batch, no per-page timers).  Three telemetry
+    kinds feed it, each with its own weight:
+
+      demand_fault  1.0   cold page demand-faulted over RDMA — the page the
+                          frozen hot set is most wrong about;
+      prefetch_hit  0.6   demand fault that landed while a prefetch extent
+                          covering the page was already in flight (latency
+                          partially hidden, but the page is clearly needed);
+      touch         0.25  guest touch served without a major fault (hot
+                          pre-installed or already prefetched) — the
+                          keep-me-hot signal for demotion scoring.
+
+    Thread-safe: fault handlers and completion workers record concurrently.
+    """
+
+    KIND_WEIGHT = {"demand_fault": 1.0, "prefetch_hit": 0.6, "touch": 0.25}
+
+    def __init__(self, total_pages: int, half_life_s: float = 30.0,
+                 clock: Optional[Clock] = None):
+        self.total_pages = total_pages
+        self.half_life_s = float(half_life_s)
+        self.clock = clock or REAL_CLOCK
+        self._counts = np.zeros(total_pages, dtype=np.float64)
+        self._last_t = self.clock.monotonic()
+        self._lock = threading.Lock()
+        self.restores = 0
+        self.stats = {"demand_faults": 0, "prefetch_hits": 0, "touches": 0,
+                      "records": 0}
+
+    def _decay_locked(self, now: float) -> None:
+        dt = now - self._last_t
+        if dt <= 0.0:
+            return
+        self._counts *= 0.5 ** (dt / self.half_life_s)
+        self._last_t = now
+
+    def record(self, pages, kind: str = "demand_fault",
+               weight: Optional[float] = None, now: Optional[float] = None) -> None:
+        """Accumulate heat on ``pages`` (vectorized; duplicates add up)."""
+        pages = np.asarray(pages, dtype=np.int64).reshape(-1)
+        if pages.size == 0:
+            return
+        w = self.KIND_WEIGHT[kind] if weight is None else float(weight)
+        t = self.clock.monotonic() if now is None else float(now)
+        with self._lock:
+            self._decay_locked(t)
+            np.add.at(self._counts, pages, w)
+            self.stats["records"] += 1
+            if kind == "demand_fault":
+                self.stats["demand_faults"] += int(pages.size)
+            elif kind == "prefetch_hit":
+                self.stats["prefetch_hits"] += int(pages.size)
+            else:
+                self.stats["touches"] += int(pages.size)
+
+    def note_restore(self) -> None:
+        """Called once per restore of this snapshot (demotion scoring needs
+        to know how many chances a hot page had to be touched)."""
+        with self._lock:
+            self.restores += 1
+
+    def counts(self, now: Optional[float] = None) -> np.ndarray:
+        """Decayed heat per page at ``now`` (copy; does not mutate state
+        when an explicit ``now`` is given)."""
+        with self._lock:
+            if now is None:
+                self._decay_locked(self.clock.monotonic())
+                return self._counts.copy()
+            dt = max(0.0, float(now) - self._last_t)
+            return self._counts * (0.5 ** (dt / self.half_life_s))
+
+    def promotion_candidates(self, cold_pages: np.ndarray,
+                             min_heat: float = 1.0) -> np.ndarray:
+        """Cold pages whose decayed heat says they belong in CXL."""
+        cold_pages = np.asarray(cold_pages, dtype=np.int64)
+        if cold_pages.size == 0:
+            return cold_pages
+        c = self.counts()
+        return cold_pages[c[cold_pages] >= min_heat]
+
+    def demotion_candidates(self, hot_pages: np.ndarray,
+                            max_heat: float = 1e-3,
+                            min_restores: int = 2) -> np.ndarray:
+        """Hot pages never (meaningfully) touched across enough restores."""
+        hot_pages = np.asarray(hot_pages, dtype=np.int64)
+        if hot_pages.size == 0 or self.restores < min_restores:
+            return np.zeros(0, dtype=np.int64)
+        c = self.counts()
+        return hot_pages[c[hot_pages] <= max_heat]
+
+
+class HeatRegistry:
+    """Pod-level registry of heat maps, keyed ``(name, version)``.
+
+    The :class:`~repro.core.nodeserver.NodePageServer` and the per-instance
+    restore path both resolve their session's map here at attach time, so
+    telemetry from every host lands in one place the re-curation pipeline
+    can read.
+    """
+
+    def __init__(self, clock: Optional[Clock] = None, half_life_s: float = 30.0):
+        self.clock = clock or REAL_CLOCK
+        self.half_life_s = half_life_s
+        self._lock = threading.Lock()
+        self.maps: Dict[Tuple[str, int], HeatMap] = {}
+
+    def map_for(self, name: str, version: int, total_pages: int) -> HeatMap:
+        key = (name, int(version))
+        with self._lock:
+            hm = self.maps.get(key)
+            if hm is None:
+                hm = self.maps[key] = HeatMap(total_pages, self.half_life_s,
+                                              clock=self.clock)
+            return hm
+
+    def find(self, name: str, version: int) -> Optional[HeatMap]:
+        with self._lock:
+            return self.maps.get((name, int(version)))
+
+    def latest(self, name: str) -> Optional[Tuple[int, HeatMap]]:
+        """(version, map) with the highest version recorded for ``name``."""
+        with self._lock:
+            versions = [v for (n, v) in self.maps if n == name]
+            if not versions:
+                return None
+            v = max(versions)
+            return v, self.maps[(name, v)]
+
+    def prune(self, name: str, min_version: int) -> int:
+        """Drop ``name``'s maps below ``min_version`` (superseded snapshot
+        versions — the master prunes to version-1 on every publish, so a
+        long-lived pod keeps at most the current and the draining version
+        per name instead of one counter array per republish forever)."""
+        with self._lock:
+            dead = [k for k in self.maps if k[0] == name and k[1] < min_version]
+            for k in dead:
+                del self.maps[k]
+            return len(dead)

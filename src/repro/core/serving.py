@@ -321,6 +321,10 @@ class RestoreEngine:
         # shared per-host engine instead of private threads
         self.server = server
         self._group = None          # FanoutGroup, set by NodePageServer.attach
+        # online hotness feedback: when set (NodePageServer.attach or the
+        # Orchestrator's per-instance path), demand faults / prefetch hits /
+        # guest touches are recorded into the snapshot's HeatMap
+        self.heat = None
         self.buffers = buffer_pool or BufferPool()
         self._rdma_arbiter = reader.rdma.arbiter_for(reader.view.host)
         self.link_keys: List[Tuple[object, object]] = []   # (arbiter, key)
@@ -456,6 +460,8 @@ class RestoreEngine:
             return
         if kind == "cxl":
             self.instance.stats["fault_cxl"] += 1
+            if self.heat is not None:
+                self.heat.record([page], kind="touch")
             src = self.reader.view.read(off, PAGE_SIZE)
             self.instance.uffd_copy(page, src)
             return
@@ -466,15 +472,25 @@ class RestoreEngine:
         else:
             pool_off, nbytes, raw = off, PAGE_SIZE, True
         if self.rdma_engine is None and self.server is None:
+            if self.heat is not None:
+                self.heat.record([page], kind="demand_fault")
             payload = self.reader.rdma.read(pool_off, nbytes)
             self.ledger.add("rdma_read", self._rdma_arbiter.charge(nbytes))
             self.instance.uffd_copy(page, self.reader.decompress_page(payload, raw)
                                     if kind == "rdma_z" else payload)
             return
         with self._inflight_lock:
-            if self._inflight.get(page):
-                return     # already in flight (demand or prefetch extent)
-            self._inflight[page] = True
+            covered = bool(self._inflight.get(page))
+            if not covered:
+                self._inflight[page] = True
+        if self.heat is not None:
+            # a fault landing on an in-flight prefetch extent is a prefetch
+            # hit: the page is clearly part of the live working set, but the
+            # demand-path latency was (partially) hidden
+            self.heat.record([page],
+                             kind="prefetch_hit" if covered else "demand_fault")
+        if covered:
+            return     # already in flight (demand or prefetch extent)
         buf = self.buffers.acquire()
         if self.server is not None:
             self.server.submit_demand(self, pool_off, nbytes, buf,
@@ -487,10 +503,37 @@ class RestoreEngine:
     def access(self, page: int, timeout_s: float = 30.0) -> None:
         """Guest touch: fault if needed and wait for install (test/replay API)."""
         if self.instance.present[page]:
+            if self.heat is not None:
+                self.heat.record([page], kind="touch")
             return
         self.handle_fault(page)
         if not self.instance.wait_present(page, timeout_s):
             raise TimeoutError(f"page {page} not installed within {timeout_s}s")
+
+    def touch_pages(self, pages, timeout_s: float = 30.0) -> Dict[str, int]:
+        """Replay one invocation's guest touches (batch form of :meth:`access`).
+
+        Already-present pages (hot pre-installed or prefetched) are recorded
+        as heat `touch`es in ONE vectorized record; the rest go through the
+        fault path, which reports its own demand-fault / prefetch-hit
+        telemetry.  Returns {"present": ..., "faulted": ...}.
+        """
+        pages = np.asarray(pages, dtype=np.int64).reshape(-1)
+        if pages.size == 0:
+            return {"present": 0, "faulted": 0}
+        present_mask = self.instance.present[pages]
+        if self.heat is not None:
+            hit = pages[present_mask]
+            if hit.size:
+                self.heat.record(hit, kind="touch")
+        missing = pages[~present_mask]
+        for p in missing:
+            if not self.instance.present[p]:
+                self.handle_fault(int(p))
+        for p in missing:
+            if not self.instance.wait_present(int(p), timeout_s):
+                raise TimeoutError(f"page {int(p)} not installed within {timeout_s}s")
+        return {"present": int(present_mask.sum()), "faulted": int(missing.size)}
 
     def _install_completion(self, buf: np.ndarray, token) -> None:
         if token[0] == "extent":

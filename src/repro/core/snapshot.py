@@ -253,7 +253,13 @@ def build_snapshot(
     cold_size = _align_pages(cold_data.nbytes) if cold_data.nbytes else 0
 
     cxl_off = pool.cxl.alloc(cxl_size)
-    rdma_off = pool.rdma.alloc(max(cold_size, PAGE_SIZE))
+    try:
+        rdma_off = pool.rdma.alloc(max(cold_size, PAGE_SIZE))
+    except Exception:
+        # don't leak the CXL region when the cold alloc fails — callers
+        # (e.g. the capacity manager's degrade path) may catch and rebuild
+        pool.cxl.free(cxl_off, cxl_size)
+        raise
 
     regions = SnapshotRegions(
         name=name, version=version,
@@ -281,6 +287,143 @@ def build_snapshot(
 def free_snapshot(pool: HierarchicalPool, regions: SnapshotRegions) -> None:
     pool.cxl.free(regions.cxl_off, regions.cxl_size)
     pool.rdma.free(regions.rdma_off, regions.rdma_size)
+
+
+def estimate_snapshot_cxl_size(
+    image: StateImage,
+    working_set: Sequence[int],
+    zero_bitmap: Optional[np.ndarray] = None,
+    metadata: Optional[dict] = None,
+    compress_cold: bool = False,
+) -> int:
+    """CXL bytes :func:`build_snapshot` would allocate for this publish —
+    machine state + offset array + cold-length index (compressed cold
+    tier) + hot data — WITHOUT building anything.  The capacity manager
+    admits/degrades on this estimate before the build; it must match the
+    build's own arithmetic exactly (asserted in tests).
+    """
+    compress_cold = compress_cold and _zstd is not None
+    classes = classify_pages(image, working_set, zero_bitmap)
+    ms = _serialize_machine_state(image.manifest, metadata or {})
+    ms_size = _align_pages(len(ms))
+    oa_size = _align_pages(image.total_pages * 8)
+    ci_size = (_align_pages(int(classes.cold_pages.size) * 4)
+               if compress_cold and classes.cold_pages.size else 0)
+    hot_size = _align_pages(int(classes.hot_pages.size) * PAGE_SIZE) \
+        if classes.hot_pages.size else 0
+    return ms_size + oa_size + ci_size + hot_size
+
+
+def reconstruct_image(pool: HierarchicalPool, regions: SnapshotRegions) -> StateImage:
+    """Owner-side full materialization of a stored snapshot.
+
+    Reads the tiers directly (the owner wrote these bytes; no incoherent
+    HostView cache in the path) and reassembles the exact ``StateImage`` the
+    snapshot was built from: hot pages from the CXL data region, cold pages
+    from RDMA (decompressed when the cold tier is zstd'd), zero pages left
+    zero.  Re-curation rebuilds snapshots from this image, so restores of
+    the re-curated version stay bit-identical to the original publish.
+    """
+    ms_raw = pool.cxl.read(regions.ms_off, regions.ms_size)
+    manifest, _meta = _deserialize_machine_state(ms_raw)
+    oa = pool.cxl.read(regions.oa_off, regions.total_pages * 8).view(np.uint64)
+    image = StateImage.empty_like(manifest)
+    mat = image.pages_matrix()
+    nonzero = oa != ZERO_SENTINEL
+    tiers = (oa >> TIER_SHIFT).astype(np.int64)
+    offs = (oa & OFFSET_MASK).astype(np.int64)
+    hot = np.nonzero(nonzero & (tiers == TIER_CXL))[0]
+    cold = np.nonzero(nonzero & (tiers == TIER_RDMA))[0]
+    if hot.size:
+        # hot data is rank-compacted: ranks are ordered by guest page index
+        raw = pool.cxl.read(regions.hot_off, int(hot.size) * PAGE_SIZE)
+        mat[hot] = raw.reshape(int(hot.size), PAGE_SIZE)
+    if cold.size:
+        if regions.cold_compressed:
+            ci = pool.cxl.read(regions.ci_off, regions.n_cold * 4).view(np.uint32)
+            lens = (ci & np.uint32(0x7FFF_FFFF)).astype(np.int64)
+            starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+            dctx = _zstd.ZstdDecompressor()
+            for p in cold:
+                rank = int(offs[p])
+                payload = pool.rdma.read(regions.rdma_off + int(starts[rank]),
+                                         int(lens[rank]))
+                if ci[rank] & np.uint32(0x8000_0000):
+                    mat[p] = payload[:PAGE_SIZE]
+                else:
+                    out = dctx.decompress(payload.tobytes(),
+                                          max_output_size=PAGE_SIZE)
+                    mat[p] = np.frombuffer(out, dtype=np.uint8)
+        else:
+            raw = pool.rdma.read(regions.rdma_off, int(cold.size) * PAGE_SIZE)
+            mat[cold] = raw.reshape(int(cold.size), PAGE_SIZE)
+    return image
+
+
+# --------------------------------------------------------------------------
+# Online re-curation (heat-feedback snapshot rebuild)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RecurationPlan:
+    """What a heat-driven rebuild of one snapshot would change.
+
+    ``promote`` — currently-cold pages whose decayed heat says they belong
+    in the CXL hot region; ``demote`` — currently-hot pages never touched
+    across enough restores; ``new_working_set`` — the hot set the rebuilt
+    snapshot will pre-install.
+    """
+
+    name: str
+    version: int
+    promote: np.ndarray
+    demote: np.ndarray
+    new_working_set: np.ndarray
+    n_hot_before: int
+    n_hot_after: int
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.promote.size or self.demote.size)
+
+    def summary(self) -> Dict[str, int]:
+        return {
+            "promote": int(self.promote.size),
+            "demote": int(self.demote.size),
+            "hot_before": self.n_hot_before,
+            "hot_after": self.n_hot_after,
+        }
+
+
+def plan_recuration(
+    pool: HierarchicalPool,
+    regions: SnapshotRegions,
+    heat,
+    min_promote_heat: float = 1.0,
+    demote_max_heat: float = 1e-3,
+    min_restores: int = 2,
+) -> RecurationPlan:
+    """Derive promote/demote sets for one snapshot from its heat map.
+
+    Owner-side: the offset array is read directly from the tier (the owner
+    wrote it; no HostView cache in the path).  ``heat`` is the snapshot's
+    :class:`~repro.core.profiler.HeatMap`.
+    """
+    oa = pool.cxl.read(regions.oa_off, regions.total_pages * 8).view(np.uint64)
+    nonzero = oa != ZERO_SENTINEL
+    tiers = oa >> TIER_SHIFT
+    hot = np.nonzero(nonzero & (tiers == np.uint64(TIER_CXL)))[0].astype(np.int64)
+    cold = np.nonzero(nonzero & (tiers == np.uint64(TIER_RDMA)))[0].astype(np.int64)
+    promote = heat.promotion_candidates(cold, min_heat=min_promote_heat)
+    demote = heat.demotion_candidates(hot, max_heat=demote_max_heat,
+                                      min_restores=min_restores)
+    keep = hot[~np.isin(hot, demote)] if demote.size else hot
+    new_ws = np.union1d(keep, promote).astype(np.int64)
+    return RecurationPlan(
+        name=regions.name, version=regions.version,
+        promote=promote, demote=demote, new_working_set=new_ws,
+        n_hot_before=int(hot.size), n_hot_after=int(new_ws.size),
+    )
 
 
 class SnapshotReader:

@@ -3,7 +3,6 @@ chunked online-softmax formulation (the CPU/compile path for long sequences —
 same FLOPs and working-set structure as the Pallas kernel, so dry-run
 cost/memory analysis reflects the TPU kernel rather than a naive S×S blowup).
 """
-import functools
 
 import jax
 import jax.numpy as jnp

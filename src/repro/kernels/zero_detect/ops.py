@@ -1,6 +1,4 @@
 """jit'd wrapper: pad-to-block, dispatch Pallas on TPU / interpret elsewhere."""
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,5 +1,6 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
 # ^ MUST be the first two lines: jax locks device count on first init.
 
 """Multi-pod dry-run: lower + compile every (arch × shape) cell on the
@@ -29,7 +30,6 @@ from ..roofline.analysis import analyze, model_flops_for
 from ..sharding.partition import (
     batch_specs,
     cache_specs,
-    dp_axes,
     param_specs,
 )
 from ..train.trainstep import TrainState, make_train_step
@@ -79,8 +79,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True
                 params=params_sds,
                 opt=AdamWState(
                     step=jax.ShapeDtypeStruct((), jnp.int32),
-                    m=jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), params_sds),
-                    v=jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), params_sds),
+                    m=jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), params_sds),
+                    v=jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), params_sds),
                 ),
             )
             sspecs = _state_specs(params_sds)
@@ -149,7 +151,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True
     if verbose:
         print(f"[{arch} × {shape_name} × {'2x16x16' if multi_pod else '16x16'}] "
               f"compile={t_compile:.1f}s  "
-              f"mem(arg={result['memory']['argument_bytes']}, temp={result['memory']['temp_bytes']})  "
+              f"mem(arg={result['memory']['argument_bytes']}, "
+              f"temp={result['memory']['temp_bytes']})  "
               f"terms: C={terms.compute_s:.4f}s M={terms.memory_s:.4f}s "
               f"X={terms.collective_s:.4f}s dom={terms.dominant}")
         print("  memory_analysis:", mem)

@@ -10,8 +10,6 @@ config trains (same family/code paths). Pass --full only on real hardware.
 import argparse
 import sys
 
-import jax
-
 from ..configs.base import all_arch_names, get_config
 from ..core import HierarchicalPool, PoolMaster
 from ..data.pipeline import DataConfig, SyntheticLMData

@@ -11,7 +11,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -78,7 +78,10 @@ def build(cfg: ModelConfig) -> Model:
         def make_batch(rng: np.random.Generator, shape: ShapeSpec):
             b, s = shape.global_batch, shape.seq_len
             out = {
-                "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, max(1, s) if shape.kind != "decode" else 1)), jnp.int32),
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab,
+                                 (b, max(1, s) if shape.kind != "decode" else 1)),
+                    jnp.int32),
             }
             if shape.kind != "decode":
                 out["frames"] = jnp.asarray(

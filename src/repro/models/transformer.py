@@ -14,7 +14,6 @@ lax.scan as xs/ys, so decode HLO is as compact as train HLO.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -314,7 +313,8 @@ def lm_forward_mtp(params: Dict, tokens: jnp.ndarray, cfg: ModelConfig):
     )
     h = jnp.einsum("bse,ed->bsd", comb, m["proj"])
     h = dense_block(m["block"], h, cfg, jnp.arange(tokens.shape[1]))
-    mtp_logits = unembed(cparams["embed"], rmsnorm(cparams["final_norm"], h), cfg.logits_fp32, vocab=cfg.vocab)
+    mtp_logits = unembed(cparams["embed"], rmsnorm(cparams["final_norm"], h),
+                         cfg.logits_fp32, vocab=cfg.vocab)
     return logits, mtp_logits, aux
 
 
@@ -328,7 +328,9 @@ def init_lm_caches(cfg: ModelConfig, batch: int, max_len: int):
 
     def stack(n, make):
         one = make()
-        return jax.tree.map(lambda t: jnp.broadcast_to(t[None], (n, *t.shape)).copy() if hasattr(t, "shape") else t, one)
+        return jax.tree.map(
+            lambda t: (jnp.broadcast_to(t[None], (n, *t.shape)).copy()
+                       if hasattr(t, "shape") else t), one)
 
     if fam in ("dense", "vlm"):
         return stack(cfg.n_layers, lambda: attn_mod.init_cache(cfg, batch, max_len, cdt))

@@ -20,9 +20,8 @@ Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -12,16 +12,12 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Any, Dict, Optional
 
 from ..configs.base import ModelConfig
-from ..core import Orchestrator, TimeLedger
+from ..core import Orchestrator
 from ..core.clock import Clock, REAL_CLOCK
-from ..checkpoint.ckpt import restore_checkpoint, unflatten_state
+from ..checkpoint.ckpt import restore_checkpoint
 from ..models.model_zoo import Model, build
 from .engine import ServerInstance, _decode_jit
 

@@ -7,8 +7,7 @@ are filled by a scanned decode pass (compact HLO, works for every family).
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

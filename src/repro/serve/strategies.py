@@ -24,7 +24,7 @@ an optional ``scale`` that linearly extrapolates page counts to the paper's
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -329,6 +329,71 @@ def modeled_concurrent_restore_s(reader, conc: int, max_extent_pages: int = 64,
         t += _shared(serial, cold_bytes, RDMA_BW, conc)
         t += uffd_copy_batch_cost(n_cold, n_ext)
     return t
+
+
+def recuration_benefit_s(n_promote: int, n_demote: int,
+                         expected_restores: int = 64) -> float:
+    """Modeled seconds saved over ``expected_restores`` future restores if
+    ``n_promote`` hot-faulting cold pages move into the CXL hot region and
+    ``n_demote`` never-touched hot pages move out to RDMA.
+
+    Per restore:
+
+    * each promoted page stops paying the demand-fault path
+      (trap + synchronous-feeling RDMA read + per-page uffd.copy) and
+      instead rides the chunked CXL pre-install (amortized op latency +
+      bandwidth + its share of a batched uffd.copy);
+    * each demoted page stops being pre-installed at all (it was never
+      touched, so it costs nothing after demotion).
+    """
+    if expected_restores <= 0:
+        return 0.0
+    promote_now = n_promote * (FAULT_TRAP_S + RDMA_PAGE_READ_S
+                               + UFFD_COPY_PER_PAGE_S)
+    promote_after = _cxl_chunks(n_promote) + uffd_copy_batch_cost(n_promote) \
+        if n_promote else 0.0
+    demote_saved = (_cxl_chunks(n_demote) + uffd_copy_batch_cost(n_demote)) \
+        if n_demote else 0.0
+    per_restore = (promote_now - promote_after) + demote_saved
+    return per_restore * expected_restores
+
+
+def recuration_cost_s(regions) -> float:
+    """Modeled cost of one re-curation rebuild: the owner materializes the
+    full image (hot region streamed from CXL, cold region bulk-read from
+    RDMA), rewrites both data regions, and republishes through the
+    ownership protocol (tombstone + drain + catalog writes ~ one RDMA RPC
+    budget).  Zero pages are free in both directions."""
+    hot_pages = regions.n_hot
+    cold_pages = regions.n_cold
+    cold_payload = (regions.cold_bytes if regions.cold_compressed
+                    else cold_pages * PAGE_SIZE)
+    read = _cxl_chunks(hot_pages) + \
+        _shared(-(-cold_pages // RDMA_INFLIGHT) * RDMA_LAT_S
+                + cold_payload / RDMA_BW, cold_payload, RDMA_BW, 1)
+    # rewrite: every non-zero page crosses a link once more (hot→CXL write,
+    # cold→RDMA write; promoted/demoted pages just swap which link)
+    write = _cxl_chunks(hot_pages) + \
+        _shared(-(-cold_pages // RDMA_INFLIGHT) * RDMA_LAT_S
+                + cold_payload / RDMA_BW, cold_payload, RDMA_BW, 1)
+    return read + write + SNAPSHOT_API_S
+
+
+def recuration_economics(regions, plan, expected_restores: int = 64) -> Dict[str, float]:
+    """Break-even model gating re-curation (the analytic twin the
+    ``PoolMaster.recurate`` pipeline consults): rebuild only when the
+    modeled fault-latency savings over the snapshot's expected remaining
+    restores exceed the modeled rebuild cost."""
+    benefit = recuration_benefit_s(int(plan.promote.size), int(plan.demote.size),
+                                   expected_restores)
+    cost = recuration_cost_s(regions)
+    return {
+        "benefit_s": benefit,
+        "cost_s": cost,
+        "net_s": benefit - cost,
+        "expected_restores": float(expected_restores),
+        "worthwhile": bool(benefit > cost),
+    }
 
 
 def verify_restore_correctness(pool: HierarchicalPool, reader: SnapshotReader,

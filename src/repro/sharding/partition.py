@@ -166,7 +166,8 @@ def cache_specs(cache_tree, cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
                     # flash-decoding layout: sequence over the TP axis
                     # (partial softmax combines with tiny (B,h) collectives)
                     ax[sdim] = "model"
-                elif (bdim is None or not batch_shardable) and shape[sdim] % mesh.shape.get("data", 1) == 0:
+                elif ((bdim is None or not batch_shardable)
+                      and shape[sdim] % mesh.shape.get("data", 1) == 0):
                     ax[sdim] = "data"
             else:
                 hdim, sdim, ddim = nd - 3, nd - 2, nd - 1
@@ -174,7 +175,8 @@ def cache_specs(cache_tree, cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
                     ax[hdim] = "model"
                 elif shape[ddim] % tp == 0:
                     ax[ddim] = "model"
-                if (bdim is None or not batch_shardable) and shape[sdim] % mesh.shape.get("data", 1) == 0:
+                if ((bdim is None or not batch_shardable)
+                        and shape[sdim] % mesh.shape.get("data", 1) == 0):
                     ax[sdim] = "data"
         elif any(k in p for k in ("ssm", "conv", "/C", "/n", "/m", "/h", "/c")):
             pass  # recurrent states: batch dim (handled above) or replicated

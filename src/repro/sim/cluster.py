@@ -400,6 +400,89 @@ class SimCluster:
             label = next(pending, None)     # pause mid-borrow if the path allows
             yield label if label is not None else "borrow:noop"
 
+    def drift_borrower_program(self, host: str, name: str, heat_registry,
+                               attempts: int = 3, cold_reads: int = 2,
+                               pause_s: float = 1e-4):
+        """Borrower whose working set has DRIFTED off the snapshot's frozen
+        hot set: each attempt borrows, touches one hot page (keep-hot
+        signal) and demand-reads ``cold_reads`` cold pages, recording both
+        into the pod's :class:`~repro.core.profiler.HeatRegistry` keyed by
+        the borrowed version — the online-feedback signal the re-curation
+        pipeline consumes.  Every cold read is verified against the
+        canonical image (torn/stale bytes raise, the I4 data-level check).
+        """
+        for i in range(attempts):
+            rec = yield from self.borrow_program_steps(host, name)
+            if rec is None:
+                self.events.append(f"cold_start:{host}")
+                yield ("sleep", pause_s)
+                continue
+            view = self.pool.host_view(f"{host}:d{i}")
+            reader = SnapshotReader(rec.borrow.regions, view, self.pool.rdma)
+            reader.invalidate_cxl()
+            yield "borrower:flushed"
+            hm = heat_registry.map_for(name, rec.version,
+                                       rec.borrow.regions.total_pages)
+            hm.note_restore()
+            canonical = self.content[name][rec.version].pages_matrix()
+            hot = reader.hot_page_indices()
+            if hot.size:
+                hm.record(hot[:1], kind="touch")
+            for p in reader.cold_page_indices()[:cold_reads]:
+                got = reader.read_page(int(p))
+                if not np.array_equal(got, canonical[int(p)]):
+                    raise InvariantViolation(
+                        f"[seed={self.seed} step={self.step_no}] {host} observed "
+                        f"torn/stale cold bytes of {name!r} v{rec.version} "
+                        f"page {int(p)}")
+                hm.record([int(p)], kind="demand_fault")
+                yield "borrower:cold_read"
+            self.release(rec)
+            yield "borrower:released"
+            yield ("sleep", pause_s)
+        self.events.append(f"drift_done:{host}")
+
+    def recurate_program(self, name: str, heat_registry,
+                         master: Optional[PoolMaster] = None,
+                         expected_restores: int = 64, min_restores: int = 1,
+                         force: bool = False,
+                         drain_limit: Optional[int] = None,
+                         drain_sleep: float = 1e-5):
+        """Heat-feedback re-curation through ``PoolMaster.recurate_steps``,
+        one protocol phase per scheduler turn.  The rebuilt image is
+        recorded as the canonical content of the new version the moment the
+        republish lands, so borrowers scheduled next turn verify against
+        it (re-curated restores must stay bit-identical)."""
+        master = master or self.master
+        entry = self.catalog.find(name)
+        heat = None
+        if entry is not None and entry.regions is not None:
+            heat = heat_registry.find(name, entry.regions.version)
+        polls = 0
+        reconstructed = None
+        gen = master.recurate_steps(name, heat=heat,
+                                    expected_restores=expected_restores,
+                                    min_restores=min_restores, force=force)
+        for label, val in gen:
+            if label == "reconstructed":
+                reconstructed = val
+            elif label == "skipped":
+                self.events.append(f"recuration_skipped:{name}")
+            elif label == "stale":
+                self.events.append(f"recuration_stale:{name}")
+            elif label == "done":
+                assert reconstructed is not None
+                self.content.setdefault(name, {})[val.version] = reconstructed
+                self.events.append(f"recurated:{name}:v{val.version}")
+            yield f"recurate:{label}"
+            if label in ("draining", "owner_busy"):
+                polls += 1
+                if drain_limit is not None and polls >= drain_limit:
+                    self.events.append(f"drain_timeout:{name}")
+                    gen.close()
+                    return
+                yield ("sleep", drain_sleep)
+
     def restore_program(self, host: str, name: str, rdma=None,
                         use_batch: bool = True, max_retries: int = 6,
                         retry_backoff_s: float = 1e-4, precheck: bool = True):

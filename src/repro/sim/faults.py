@@ -16,7 +16,7 @@ per script — the RDMA extent timeout/retry fault.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List
 
 import numpy as np
 

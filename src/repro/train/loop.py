@@ -14,14 +14,14 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from ..core import HierarchicalPool, Orchestrator, PoolMaster
 from ..checkpoint.ckpt import restore_checkpoint, save_checkpoint
-from ..data.pipeline import DataConfig, SyntheticLMData
+from ..data.pipeline import SyntheticLMData
 from ..models.model_zoo import Model
 from .trainstep import TrainState, init_train_state, make_train_step
 

@@ -9,7 +9,6 @@ from typing import Any, Callable, Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig
 from ..models.model_zoo import Model
 from ..models import transformer as tf_mod
 from ..sharding.partition import constrain

@@ -1,0 +1,182 @@
+"""Profiler coverage (ISSUE 4 satellites): AccessRecorder edge cases, the
+vectorized touch_rows against a scalar reference, and HeatMap properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pagestore import PAGE_SIZE, Manifest, StateImage, runs_from_pages
+from repro.core.profiler import (
+    AccessRecorder,
+    HeatMap,
+    HeatRegistry,
+    WorkloadProfile,
+)
+
+
+def make_manifest():
+    img = StateImage.build({
+        "emb": np.arange(300 * 7, dtype=np.float32).reshape(300, 7),   # rows < 1 page
+        "kv": np.arange(8 * 2048, dtype=np.float32).reshape(8, 2048),  # rows = 2 pages
+        "vec1d": np.arange(5000, dtype=np.float64),                    # 1-D array
+        "bytes1d": np.arange(256, dtype=np.uint8),                     # sub-page 1-D
+    })
+    return img.manifest
+
+
+def touch_rows_reference(manifest, name, rows):
+    """The pre-vectorization scalar loop (row_pages per row)."""
+    e = manifest.by_name()[name]
+    row_elems = int(np.prod(e.shape[1:])) if len(e.shape) > 1 else 1
+    pages = set()
+    for r in rows:
+        pages.update(e.row_pages(int(r), row_elems))
+    return pages
+
+
+@pytest.mark.parametrize("name,rows", [
+    ("emb", [0, 1, 2]),
+    ("emb", [0, 150, 299]),               # rows crossing page boundaries
+    ("kv", [0, 3, 7]),                    # multi-page rows
+    ("kv", range(8)),
+    ("vec1d", [0, 511, 512, 4999]),       # 1-D: row == element
+    ("bytes1d", [0, 255]),                # 1-D sub-page: all land on page 0
+])
+def test_touch_rows_matches_scalar_reference(name, rows):
+    manifest = make_manifest()
+    rec = AccessRecorder(manifest)
+    rec.touch_rows(name, rows)
+    assert rec.pages == touch_rows_reference(manifest, name, rows)
+
+
+def test_touch_rows_accepts_arrays_and_duplicates():
+    manifest = make_manifest()
+    a, b = AccessRecorder(manifest), AccessRecorder(manifest)
+    a.touch_rows("emb", np.asarray([5, 5, 9, 5]))
+    b.touch_rows("emb", [5, 9])
+    assert a.pages == b.pages
+
+
+def test_touch_rows_empty_is_noop():
+    rec = AccessRecorder(make_manifest())
+    rec.touch_rows("emb", [])
+    rec.touch_rows("vec1d", np.zeros(0, dtype=np.int64))
+    assert rec.pages == set()
+    assert rec.working_set().size == 0
+
+
+def test_touch_rows_1d_array_is_per_element():
+    manifest = make_manifest()
+    rec = AccessRecorder(manifest)
+    rec.touch_rows("vec1d", [0])
+    e = manifest.by_name()["vec1d"]
+    assert rec.pages == {e.first_page}
+
+
+@given(st.lists(st.integers(min_value=0, max_value=299), min_size=0, max_size=40))
+@settings(max_examples=30)
+def test_touch_rows_property_equivalence(rows):
+    manifest = make_manifest()
+    rec = AccessRecorder(manifest)
+    rec.touch_rows("emb", rows)
+    assert rec.pages == touch_rows_reference(manifest, "emb", rows)
+
+
+# -- empty working set through the stats pipeline ---------------------------
+
+def test_empty_working_set_stats():
+    assert runs_from_pages([]) == []
+    prof = WorkloadProfile("empty", 4, np.zeros(0, dtype=np.int64))
+    stats = prof.fragment_stats()
+    assert stats == {"n_runs": 0, "mean_run": 0.0, "p90_run": 0.0,
+                     "frac_runs_lt4": 0.0}
+    # schema is identical to the non-empty case (consumers index blindly)
+    full = WorkloadProfile("one", 1, np.asarray([3, 4, 9]))
+    assert set(stats) == set(full.fragment_stats())
+    rec = AccessRecorder(make_manifest())
+    assert rec.run_lengths() == []
+
+
+# -- HeatMap ----------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def monotonic(self):
+        return self.t
+
+
+def test_heatmap_record_weights_and_stats():
+    clk = FakeClock()
+    hm = HeatMap(16, half_life_s=10.0, clock=clk)
+    hm.record([1, 2, 2], kind="demand_fault")
+    hm.record([3], kind="prefetch_hit")
+    hm.record([4], kind="touch")
+    c = hm.counts()
+    assert c[1] == pytest.approx(1.0)
+    assert c[2] == pytest.approx(2.0)          # duplicates accumulate
+    assert c[3] == pytest.approx(0.6)
+    assert c[4] == pytest.approx(0.25)
+    assert hm.stats["demand_faults"] == 3
+    assert hm.stats["prefetch_hits"] == 1
+    assert hm.stats["touches"] == 1
+
+
+def test_heatmap_half_life_decay_exact():
+    clk = FakeClock()
+    hm = HeatMap(4, half_life_s=5.0, clock=clk)
+    hm.record([0], kind="demand_fault")
+    clk.t = 5.0
+    assert hm.counts()[0] == pytest.approx(0.5)
+    clk.t = 15.0
+    assert hm.counts()[0] == pytest.approx(0.125)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=31), min_size=1, max_size=20),
+       st.integers(min_value=0, max_value=1000),
+       st.integers(min_value=0, max_value=1000))
+@settings(max_examples=40)
+def test_heatmap_decay_monotone_property(pages, dt1_ms, dt2_ms):
+    """With no new records, heat never increases as time advances, and
+    observing at a later time never yields more heat than at an earlier
+    one (decay monotonicity, per page)."""
+    clk = FakeClock()
+    hm = HeatMap(32, half_life_s=0.25, clock=clk)
+    hm.record(pages, kind="demand_fault")
+    t1 = dt1_ms / 1000.0
+    t2 = t1 + dt2_ms / 1000.0
+    c0 = hm.counts(now=0.0)
+    c1 = hm.counts(now=t1)
+    c2 = hm.counts(now=t2)
+    assert (c1 <= c0 + 1e-12).all()
+    assert (c2 <= c1 + 1e-12).all()
+    assert (c2 >= 0).all()
+
+
+def test_heatmap_candidates():
+    clk = FakeClock()
+    hm = HeatMap(10, half_life_s=100.0, clock=clk)
+    hm.record([2, 3], kind="demand_fault")
+    hm.record([5], kind="touch")
+    cold = np.asarray([1, 2, 3, 4])
+    assert hm.promotion_candidates(cold, min_heat=1.0).tolist() == [2, 3]
+    hot = np.asarray([5, 6, 7])
+    # not enough restores observed yet -> no demotions
+    assert hm.demotion_candidates(hot, min_restores=2).size == 0
+    hm.note_restore()
+    hm.note_restore()
+    assert hm.demotion_candidates(hot, min_restores=2).tolist() == [6, 7]
+    # empty inputs stay empty
+    assert hm.promotion_candidates(np.zeros(0, np.int64)).size == 0
+    assert hm.demotion_candidates(np.zeros(0, np.int64)).size == 0
+
+
+def test_heat_registry_keys_and_latest():
+    reg = HeatRegistry()
+    a = reg.map_for("w", 0, 8)
+    assert reg.map_for("w", 0, 8) is a
+    b = reg.map_for("w", 3, 8)
+    assert reg.find("w", 1) is None
+    assert reg.latest("w") == (3, b)
+    assert reg.latest("nope") is None

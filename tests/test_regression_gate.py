@@ -1,0 +1,133 @@
+"""The benchmark-regression CI gate (ISSUE 4 satellite): it must pass on
+untouched baselines and demonstrably fail when a baseline key is perturbed
+beyond tolerance — without re-running any benchmark."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from benchmarks.check_regressions import (  # noqa: E402
+    BASELINES,
+    check_all,
+    compare,
+    get_path,
+    load_baseline,
+    main,
+)
+
+
+@pytest.fixture()
+def disk_results():
+    """The experiments/*.json currently on disk, for every gated bench that
+    exists (they are committed baselines in a checkout)."""
+    out = {}
+    for fname in BASELINES:
+        p = REPO / "experiments" / fname
+        if p.exists():
+            out[fname] = json.loads(p.read_text())
+    if not out:
+        pytest.skip("no experiment baselines on disk")
+    return out
+
+
+def _set_path(obj, path, value):
+    parts = path.split(".")
+    cur = obj
+    for part in parts[:-1]:
+        cur = cur[int(part)] if isinstance(cur, list) else cur[part]
+    last = parts[-1]
+    if isinstance(cur, list):
+        cur[int(last)] = value
+    else:
+        cur[last] = value
+
+
+def test_get_path_traverses_dicts_and_lists():
+    obj = {"rows": [{"a": 1.0}, {"a": 2.0}], "flat": True}
+    assert get_path(obj, "rows.1.a") == 2.0
+    assert get_path(obj, "flat") is True
+
+
+def test_gate_passes_on_identical_baselines(disk_results, tmp_path):
+    for fname, data in disk_results.items():
+        (tmp_path / fname).write_text(json.dumps(data))
+    fresh = {f: json.loads(json.dumps(d)) for f, d in disk_results.items()}
+    assert check_all(fresh, baseline_dir=tmp_path) == []
+
+
+def test_gate_passes_within_tolerance(disk_results, tmp_path):
+    fname, data = next(iter(disk_results.items()))
+    key = next(k for k in BASELINES[fname]
+               if isinstance(get_path(data, k if isinstance(k, str) else k[0]),
+                             float))
+    baseline = json.loads(json.dumps(data))
+    _set_path(baseline, key, get_path(data, key) * 1.05)   # +5% < ±10%
+    (tmp_path / fname).write_text(json.dumps(baseline))
+    assert compare(fname, json.loads((tmp_path / fname).read_text()),
+                   data, BASELINES[fname]) == []
+
+
+@pytest.mark.parametrize("factor", [1.2, 0.8])
+def test_gate_fails_on_perturbed_numeric_key(disk_results, tmp_path, factor):
+    """ISSUE 4 acceptance: a baseline key perturbed beyond ±10% fails."""
+    for fname, data in disk_results.items():
+        key = next(k for k in BASELINES[fname]
+                   if isinstance(get_path(data, k if isinstance(k, str) else k[0]),
+                                 float))
+        baseline = json.loads(json.dumps(data))
+        _set_path(baseline, key, get_path(data, key) * factor)
+        violations = compare(fname, baseline, data, BASELINES[fname])
+        assert violations, f"{fname}:{key} perturbed x{factor} must fail"
+        assert key in violations[0]
+
+
+def test_gate_fails_on_flipped_boolean(disk_results):
+    fname = next((f for f in disk_results
+                  if any(isinstance(get_path(disk_results[f],
+                                             k if isinstance(k, str) else k[0]),
+                                    bool) for k in BASELINES[f])), None)
+    if fname is None:
+        pytest.skip("no boolean keys on disk")
+    data = disk_results[fname]
+    key = next(k for k in BASELINES[fname]
+               if isinstance(get_path(data, k if isinstance(k, str) else k[0]),
+                             bool))
+    fresh = json.loads(json.dumps(data))
+    _set_path(fresh, key, not get_path(data, key))
+    violations = compare(fname, data, fresh, BASELINES[fname])
+    assert violations and key in violations[0]
+
+
+def test_gate_fails_on_missing_key(disk_results):
+    fname, data = next(iter(disk_results.items()))
+    assert compare(fname, data, {}, BASELINES[fname])
+    assert compare(fname, {}, data, BASELINES[fname])
+
+
+def test_cli_no_run_exit_codes(disk_results, tmp_path, monkeypatch):
+    """End-to-end CLI behaviour without re-running benches: exit 0 on clean
+    baselines, exit 1 after a >tolerance perturbation."""
+    for fname, data in disk_results.items():
+        (tmp_path / fname).write_text(json.dumps(data))
+    assert main(["--no-run", "--baseline-dir", str(tmp_path)]) == 0
+    fname, data = next(iter(disk_results.items()))
+    key = next(k for k in BASELINES[fname]
+               if isinstance(get_path(data, k if isinstance(k, str) else k[0]),
+                             float))
+    perturbed = json.loads(json.dumps(data))
+    _set_path(perturbed, key, get_path(data, key) * 2.0)
+    (tmp_path / fname).write_text(json.dumps(perturbed))
+    assert main(["--no-run", "--baseline-dir", str(tmp_path)]) == 1
+
+
+def test_load_baseline_from_git_or_dir(tmp_path):
+    (tmp_path / "x.json").write_text('{"a": 1}')
+    assert load_baseline("x.json", tmp_path) == {"a": 1}
+    # committed files resolve through git show
+    committed = load_baseline("breakdown.json")
+    assert "breakdown" in committed

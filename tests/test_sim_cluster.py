@@ -475,8 +475,77 @@ def scenario_lease_fallback(seed):
     return c
 
 
+def scenario_drift_recuration_feedback(seed):
+    """Working-set drift closed-loop: borrowers demand-fault cold pages and
+    record heat; the owner re-curates once the modeled benefit clears the
+    break-even; a later restore of the re-curated version must be
+    bit-identical and find the drifted pages promoted into the hot set.
+    I1–I5 are checked after every step throughout (re-curation is an owner
+    update, so borrow pinning / refcount accounting cover it unchanged)."""
+    from repro.core import HeatRegistry
+
+    c = SimCluster(n_hosts=3, seed=seed)
+    c.publish("s", 1.0, cold_pages=4)
+    registry = HeatRegistry(clock=c.clock, half_life_s=1e6)
+    c.add_program("h1", c.drift_borrower_program("h1", "s", registry,
+                                                 attempts=3, cold_reads=3))
+    c.add_program("h2", c.drift_borrower_program("h2", "s", registry,
+                                                 attempts=3, cold_reads=3))
+    c.add_program("owner", c.delayed(1e-3, c.recurate_program(
+        "s", registry, expected_restores=10000, min_restores=1)))
+    c.add_program("h3", c.delayed(4e-3, c.restore_program("h3", "s")))
+    c.run(max_steps=30000)
+    assert any(e.startswith("recurated:s:v1") for e in c.events), c.events
+    entry = c.catalog.find("s")
+    assert entry.state.load() == STATE_PUBLISHED
+    assert entry.version == 1
+    # the drift pages (first 3 cold pages) were promoted into the hot region
+    assert entry.regions.n_hot >= 3
+    # the post-recuration restore completed and verified bit-identity
+    assert any(r["name"] == "s" and r["version"] == 1 for r in c.restored)
+    return c
+
+
+def scenario_recuration_owner_crash_mid_republish(seed):
+    """Host crash mid-re-curation: the recurator dies between rebuilding
+    the data regions and republishing the catalog entry.  Borrowers fall
+    back to cold starts (never stale bytes), invariants hold throughout,
+    and a fresh publish of the same name recovers the entry."""
+    from repro.core import HeatRegistry
+
+    c = SimCluster(n_hosts=2, seed=seed)
+    regions0 = c.publish("s", 1.0)
+    registry = HeatRegistry(clock=c.clock, half_life_s=1e6)
+    hm = registry.map_for("s", 0, regions0.total_pages)
+    hm.record(np.arange(regions0.total_pages), kind="demand_fault")
+    hm.record(np.arange(regions0.total_pages), kind="demand_fault")
+    hm.note_restore()
+    hm.note_restore()
+    c.add_program("recurator", c.recurate_program("s", registry, force=True,
+                                                  expected_restores=10000))
+    c.fault_plan.kill_after("recurator", "recurate:rebuilt")
+    c.add_program("h1", c.borrower_program("h1", "s", attempts=3))
+    c.run(max_steps=30000)
+    assert "crashed:recurator" in c.events
+    entry = c.catalog.find("s")
+    assert entry is not None and entry.state.load() == STATE_TOMBSTONE
+    assert entry.regions is None, "crashed mid-republish: no regions visible"
+    # recovery: a fresh publish through the production path heals the entry
+    rr = c.publish("s", 2.0)
+    assert rr.version == 2
+    c.add_program("h2", c.borrower_program("h2", "s", attempts=2))
+    c.run(max_steps=60000)
+    entry = c.catalog.find("s")
+    assert entry.state.load() == STATE_PUBLISHED and entry.version == 2
+    assert any(e.startswith("borrower_done:h2") for e in c.events)
+    return c
+
+
 SCENARIOS = {
     "steady_borrow_release": scenario_steady_borrow_release,
+    "drift_recuration_feedback": scenario_drift_recuration_feedback,
+    "recuration_owner_crash_mid_republish":
+        scenario_recuration_owner_crash_mid_republish,
     "owner_update_vs_borrowers": scenario_owner_update_vs_borrowers,
     "doomed_borrow_interleaving": scenario_doomed_borrow_interleaving,
     "livelock_when_fix_reverted": scenario_livelock_when_fix_reverted,
@@ -506,6 +575,15 @@ def test_scenario_matrix_is_large_enough():
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
 def test_scenario(name):
     SCENARIOS[name](SEED + 17 * (sorted(SCENARIOS).index(name) + 1))
+
+
+@pytest.mark.parametrize("offset", [0, 1, 2])
+def test_drift_recuration_multi_seed(offset):
+    """ISSUE 4 acceptance: the drift + re-curation scenario (and its
+    crash-mid-republish variant) pass the I1–I5 invariant checks across
+    >= 3 distinct seeds."""
+    scenario_drift_recuration_feedback(SEED + 101 * offset + 7)
+    scenario_recuration_owner_crash_mid_republish(SEED + 101 * offset + 8)
 
 
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
