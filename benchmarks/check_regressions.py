@@ -82,6 +82,18 @@ BASELINES: Dict[str, List[KeySpec]] = {
         "criteria.recuration_happened",
         "criteria.capacity_managed",
     ],
+    "dedup_bench_quick.json": [
+        "effective_capacity_x",
+        "dedup.unique_byte_ratio",
+        "dedup.publish_modeled_s",
+        "dedup.restore_modeled_s",
+        "dedup.exec_restore_total_s",
+        "baseline.publish_modeled_s",
+        "criteria.capacity_x_ge_1_5",
+        "criteria.all_restores_bit_identical",
+        "criteria.i6_consistent",
+        "criteria.dedup_worthwhile",
+    ],
 }
 
 
@@ -153,13 +165,15 @@ def run_fresh() -> Dict[str, dict]:
     """Re-run the quick benches in-process; returns results keyed like
     BASELINES.  (Each run() also rewrites its experiments/*.json, which is
     why baselines are read from git, not disk.)"""
-    from . import adaptive_bench, breakdown, concurrency_bench, serving_bench
+    from . import (adaptive_bench, breakdown, concurrency_bench, dedup_bench,
+                   serving_bench)
 
     return {
         "breakdown.json": breakdown.run(),
         "serving_bench.json": serving_bench.run(["chameleon"]),
         "concurrency_bench_quick.json": concurrency_bench.run(quick=True),
         "adaptive_bench_quick.json": adaptive_bench.run(quick=True),
+        "dedup_bench_quick.json": dedup_bench.run(quick=True),
     }
 
 

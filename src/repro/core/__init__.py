@@ -37,9 +37,11 @@ from .snapshot import (
     SnapshotRegions,
     build_snapshot,
     classify_pages,
+    decode_dedup_offsets,
     decode_slot,
     encode_slot,
     estimate_snapshot_cxl_size,
+    exclusive_cxl_bytes,
     free_snapshot,
     plan_recuration,
     reconstruct_image,
@@ -73,6 +75,6 @@ from .profiler import (
 from .master import CXLCapacityManager, PoolMaster
 from .nodeserver import FanoutGroup, HotChunkCache, NodePageServer
 from .orchestrator import Orchestrator, RestoredInstance
-from .dedup import DedupStore, fnv1a_page, fnv1a_pages
+from .dedup import DedupStore, fnv1a_page, fnv1a_pages, pallas_hash_fn
 
 __all__ = [k for k in dir() if not k.startswith("_")]

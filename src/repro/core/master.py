@@ -27,6 +27,7 @@ from .snapshot import (
     SnapshotRegions,
     build_snapshot,
     estimate_snapshot_cxl_size,
+    exclusive_cxl_bytes,
     free_snapshot,
     plan_recuration,
     reconstruct_image,
@@ -69,9 +70,15 @@ class CXLCapacityManager:
         gauge in :class:`~repro.core.pool.CXLBudget` is synced from this,
         so accounting can never drift from the shared truth).  Each entry's
         ``regions`` is read ONCE — a concurrent update may null it between
-        a check and a re-read."""
+        a check and a re-read.
+
+        Dedup snapshots contribute only their private metadata region here;
+        their page payloads are accounted ONCE, as the content store's
+        unique bytes — publishing ten variants of one base costs the budget
+        one copy of the shared pages plus each variant's deltas."""
         regions = [e.regions for e in self.master.catalog.entries]
         total = sum(r.cxl_size for r in regions if r is not None)
+        total += self.master.pool.dedup_cxl.unique_bytes()
         self.budget.set_usage(total)
         return total
 
@@ -113,30 +120,41 @@ class CXLCapacityManager:
             if entry.refcount.load() != 0:
                 continue                      # pinned by live borrows / fan-out
             name = entry.name
-            # pin the regions while materializing them: a concurrent owner op
-            # on this name cannot free bytes we are still reading.  Released
-            # BEFORE the demoting publish — our own pin would deadlock its
-            # drain otherwise.
+            # pin the regions while READING them (exclusive-footprint scoring
+            # decodes the stored offset array, materialization reads the data
+            # pages): a concurrent owner op on this name cannot free bytes we
+            # are still reading.  Released BEFORE the demoting publish — our
+            # own pin would deadlock its drain otherwise.
             pin = self.master.catalog.borrow(name)
             if pin is None or pin.regions is not r:
                 if pin is not None:
                     pin.release()
                 continue                      # owner op raced us: skip victim
             try:
-                image = reconstruct_image(self.master.pool, r)
+                image = None
+                if exclusive_cxl_bytes(self.master.pool, r) <= 0:
+                    # every hot page is shared with another live snapshot:
+                    # demoting this victim frees ~nothing (the content store
+                    # keeps the pages for its co-owners), so the clock skips it
+                    self.budget.stats["shared_skips"] += 1
+                else:
+                    image = reconstruct_image(self.master.pool, r)
             finally:
                 pin.release()
                 # our own pin set the reference bit — clear it so a FAILED
                 # demotion does not grant the victim an unearned second
                 # chance on every later sweep
                 entry.referenced.store(0)
-            if not self._demote_publish(name, image, r.version):
+            if image is None:
+                continue
+            if not self._demote_publish(name, image, r.version, dedup=r.dedup):
                 continue                      # a borrow landed mid-drain: skip
             self.budget.stats["demotions"] += 1
             return True
         return False
 
-    def _demote_publish(self, name: str, image: StateImage, old_version: int) -> bool:
+    def _demote_publish(self, name: str, image: StateImage, old_version: int,
+                        dedup: bool = False) -> bool:
         """Drive the demoting publish with a bounded drain.  On a drain
         timeout the victim is rolled back to PUBLISHED (the update path
         tombstones before freeing; until the drain completes the old
@@ -145,7 +163,8 @@ class CXLCapacityManager:
         as a permanent TOMBSTONE."""
         gen = self.master.publish_steps(name, image, [],
                                         metadata={"demoted_from": old_version},
-                                        expect_version=old_version)
+                                        expect_version=old_version,
+                                        dedup=dedup)
         clock = self.master.clock
         deadline: Optional[float] = None
         entry: Optional[CatalogEntry] = None
@@ -177,7 +196,7 @@ class CXLCapacityManager:
 class PoolMaster:
     def __init__(self, pool: HierarchicalPool, catalog: Optional[Catalog] = None,
                  clock: Optional[Clock] = None, cxl_budget: Optional[int] = None,
-                 heat=None):
+                 heat=None, dedup: bool = False):
         self.pool = pool
         self.clock = clock or getattr(pool, "clock", None) or REAL_CLOCK
         self.catalog = catalog or Catalog(clock=self.clock)
@@ -186,6 +205,10 @@ class PoolMaster:
                          if cxl_budget is not None else None)
         # pod-level HeatRegistry (online feedback); recurate() reads it
         self.heat = heat
+        # default publish mode: content-addressed page store (per-publish
+        # ``dedup=`` overrides; updates/demotions/re-curations preserve the
+        # existing snapshot's mode so a pod can mix layouts)
+        self.dedup_default = dedup
         self._versions: Dict[str, int] = {}
         self._pending_reclaim: List[CatalogEntry] = []
         self._lock = threading.Lock()
@@ -208,6 +231,7 @@ class PoolMaster:
         gather_fn=None,
         compress_cold: bool = False,
         expect_version: Optional[int] = None,
+        dedup: Optional[bool] = None,
     ) -> Iterator[Tuple[str, object]]:
         """Generator form of :meth:`publish`, yielding at the owner protocol's
         phase boundaries so the deterministic simulator can interleave
@@ -228,6 +252,7 @@ class PoolMaster:
         * ``("rebuilt", regions)``     — new data written, not yet visible;
         * ``("done", regions)``        — terminal: snapshot is PUBLISHED.
         """
+        dedup = self.dedup_default if dedup is None else bool(dedup)
         # claim the name BEFORE assigning a version or inspecting the catalog:
         # serialized publishes then get monotonic versions and concurrent
         # first-publishes of a new name cannot both take the create path
@@ -252,7 +277,7 @@ class PoolMaster:
                     name, image, working_set,
                     version=version, metadata=metadata,
                     zero_bitmap=zero_bitmap, gather_fn=gather_fn,
-                    compress_cold=compress_cold,
+                    compress_cold=compress_cold, dedup=dedup,
                 )
                 yield ("built_new", regions)
                 self.catalog.publish_new(name, regions, version)
@@ -291,7 +316,7 @@ class PoolMaster:
                 name, image, working_set,
                 version=version, metadata=metadata,
                 zero_bitmap=zero_bitmap, gather_fn=gather_fn,
-                compress_cold=compress_cold,
+                compress_cold=compress_cold, dedup=dedup,
             )
             yield ("rebuilt", regions)
             self.catalog.republish(existing, regions, version)
@@ -322,12 +347,13 @@ class PoolMaster:
         gather_fn=None,
         compress_cold: bool = False,
         drain_timeout_s: float = 30.0,
+        dedup: Optional[bool] = None,
     ) -> SnapshotRegions:
         """Blocking driver over :meth:`publish_steps` (production path)."""
         regions = self._drive_steps(
             self.publish_steps(name, image, working_set, metadata=metadata,
                                zero_bitmap=zero_bitmap, gather_fn=gather_fn,
-                               compress_cold=compress_cold),
+                               compress_cold=compress_cold, dedup=dedup),
             name, drain_timeout_s)
         assert regions is not None
         return regions
@@ -364,7 +390,8 @@ class PoolMaster:
             need = estimate_snapshot_cxl_size(
                 image, ws, build_kw.get("zero_bitmap"),
                 metadata=build_kw.get("metadata"),
-                compress_cold=build_kw.get("compress_cold", False))
+                compress_cold=build_kw.get("compress_cold", False),
+                dedup=build_kw.get("dedup", False), pool=self.pool)
             if not self.capacity.admit(need, exclude_name=name):
                 ws = []
         try:
@@ -445,13 +472,16 @@ class PoolMaster:
         yield ("reconstructed", image)
         # expect_version: if a legitimate owner update raced in after the
         # pin was released, our reconstructed (now stale) bytes must NOT
-        # overwrite it — the republish aborts with ("stale", ...) instead
+        # overwrite it — the republish aborts with ("stale", ...) instead.
+        # dedup=regions.dedup: re-curation preserves the snapshot's layout
+        # (a content-addressed snapshot republishes content-addressed)
         yield from self.publish_steps(
             name, image, plan.new_working_set,
             metadata={"recurated_from": regions.version,
                       "promoted": int(plan.promote.size),
                       "demoted": int(plan.demote.size)},
             expect_version=regions.version,
+            dedup=regions.dedup,
         )
 
     def recurate(self, name: str, heat=None, drain_timeout_s: float = 30.0,
@@ -515,7 +545,12 @@ class PoolMaster:
         return out
 
     def evict_for(self, needed_bytes: int) -> List[str]:
-        """Delete lowest-ranked snapshots until `needed_bytes` of CXL frees."""
+        """Delete lowest-ranked snapshots until `needed_bytes` of CXL frees.
+
+        Dedup snapshots are scored by their EXCLUSIVE footprint (metadata +
+        pages no other live snapshot references): deleting a mostly-shared
+        victim reclaims only its private region, and the ranking must not
+        credit it with bytes its co-owners keep alive."""
         counters = self.collect_borrow_counters()
         ranked = sorted(counters.items(), key=lambda kv: kv[1])
         evicted: List[str] = []
@@ -526,7 +561,22 @@ class PoolMaster:
             entry = self.catalog.find(name)
             if entry is None or entry.regions is None:
                 continue
-            freed += entry.regions.cxl_size
+            r = entry.regions
+            if r.dedup:
+                # pin while decoding the stored offset array (same rule as
+                # the capacity sweep: never read regions bytes unpinned)
+                pin = self.catalog.borrow(name)
+                if pin is not None and pin.regions is r:
+                    try:
+                        freed += r.cxl_size + exclusive_cxl_bytes(self.pool, r)
+                    finally:
+                        pin.release()
+                else:
+                    if pin is not None:
+                        pin.release()
+                    freed += r.cxl_size
+            else:
+                freed += r.cxl_size
             self.delete(name)
             evicted.append(name)
         return evicted

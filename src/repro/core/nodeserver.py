@@ -55,26 +55,39 @@ class _ChunkEntry:
 class HotChunkCache:
     """Refcounted fan-out cache: one physical read, k borrowers.
 
-    Entries are keyed ``(group_key, byte_offset)``; the first requester (the
-    leader) performs the read and records the modeled seconds it was charged,
-    followers wait on the entry and replay the same charge to their own
-    ledger — they logically waited for the same transfer, but the link only
-    carried the bytes once.  Entries live while their fan-out group has at
-    least one attached session and are dropped on the group's un-borrow.
+    Entries are keyed ``(group_key, byte_offset, nbytes)`` for the private
+    snapshot layout — or ``("content", byte_offset, nbytes)`` for dedup
+    snapshots, where equal store offsets imply equal BYTES, so co-located
+    restores of *different variants* share one physical read.  The first
+    requester (the leader) performs the read and records the modeled seconds
+    it was charged; followers wait on the entry and replay the same charge to
+    their own ledger — they logically waited for the same transfer, but the
+    link only carried the bytes once.
+
+    Every entry tracks the set of fan-out groups that touched it; an entry is
+    dropped once the LAST owning group un-borrows (for per-group keys that is
+    exactly the old one-group lifetime).
     """
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._entries: Dict[Tuple[object, int], _ChunkEntry] = {}
-        self.stats = {"reads": 0, "fanout_hits": 0}
+        self._entries: Dict[Tuple[object, int, int], _ChunkEntry] = {}
+        self._owners: Dict[Tuple[object, int, int], set] = {}
+        self.stats = {"reads": 0, "fanout_hits": 0, "cross_group_hits": 0}
 
-    def get_or_read(self, key, read_fn) -> Tuple[np.ndarray, float, bool]:
-        """-> (data, modeled_s, was_leader); `read_fn() -> (data, modeled_s)`."""
+    def get_or_read(self, key, read_fn, owner=None) -> Tuple[np.ndarray, float, bool]:
+        """-> (data, modeled_s, was_leader); `read_fn() -> (data, modeled_s)`.
+        ``owner`` is the fan-out group holding the entry alive (defaults to
+        ``key[0]``, the pre-content-keying behaviour)."""
+        owner = key[0] if owner is None else owner
         with self._lock:
             entry = self._entries.get(key)
             leader = entry is None
             if leader:
                 entry = self._entries[key] = _ChunkEntry()
+            owners = self._owners.setdefault(key, set())
+            cross = not leader and owner not in owners
+            owners.add(owner)
         if leader:
             try:
                 entry.data, entry.modeled_s = read_fn()
@@ -89,13 +102,20 @@ class HotChunkCache:
             return data, t, True
         with self._lock:
             self.stats["fanout_hits"] += 1
+            if cross:
+                self.stats["cross_group_hits"] += 1
         return entry.data, entry.modeled_s, False
 
     def drop_group(self, group_key) -> int:
         with self._lock:
-            dead = [k for k in self._entries if k[0] == group_key]
+            dead = []
+            for k, owners in self._owners.items():
+                owners.discard(group_key)
+                if not owners:
+                    dead.append(k)
             for k in dead:
-                del self._entries[k]
+                del self._owners[k]
+                self._entries.pop(k, None)
             return len(dead)
 
 
@@ -257,15 +277,22 @@ class NodePageServer:
     # -- hot-chunk fan-out ----------------------------------------------------
     def hot_chunk(self, session: RestoreEngine, off: int, nbytes: int) -> np.ndarray:
         group = session._group
-        with self._lock:
-            solo = len(group.sessions) <= 1
-        if solo:
-            # nothing to fan out to — don't duplicate the hot region in the
-            # cache for the common one-restore-per-snapshot case
-            return session.reader.view.read(off, nbytes)
+        if session.reader.regions.dedup:
+            # content-keyed: equal store offsets == equal bytes under dedup,
+            # so co-located restores of DIFFERENT variants (distinct fan-out
+            # groups) share one physical read of their common base chunks
+            key = ("content", off, nbytes)
+        else:
+            with self._lock:
+                solo = len(group.sessions) <= 1
+            if solo:
+                # nothing to fan out to — don't duplicate the hot region in
+                # the cache for the common one-restore-per-snapshot case
+                return session.reader.view.read(off, nbytes)
+            key = (group.key, off, nbytes)
         data, modeled_s, leader = self.chunks.get_or_read(
-            (group.key, off, nbytes),
-            lambda: session.reader.view.read_charged(off, nbytes))
+            key, lambda: session.reader.view.read_charged(off, nbytes),
+            owner=group.key)
         if not leader:
             # borrower: the bytes crossed the link once (leader's read);
             # we waited for the same transfer, so we model the same time

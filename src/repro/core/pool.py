@@ -105,7 +105,7 @@ class CXLBudget:
         self._lock = threading.Lock()
         self._in_use = 0
         self.stats = {"admitted": 0, "degraded": 0, "demotions": 0,
-                      "sweeps": 0}
+                      "sweeps": 0, "shared_skips": 0}
 
     @property
     def in_use(self) -> int:
@@ -348,6 +348,20 @@ class HierarchicalPool:
         self.clock = clock or REAL_CLOCK
         self.cxl = MemoryTier("cxl", cxl_capacity, cxl_cost)
         self.rdma = MemoryTier("rdma", rdma_capacity, rdma_cost)
+        # content-addressed page stores (one per tier): dedup publishes
+        # route page payloads through these; the offset array then points
+        # at refcounted absolute tier offsets instead of a private region
+        from .dedup import DedupStore  # local import: dedup imports pool
+
+        self.dedup_cxl = DedupStore(self.cxl)
+        self.dedup_rdma = DedupStore(self.rdma)
+
+    def dedup_store(self, tag: int):
+        if tag == TIER_CXL:
+            return self.dedup_cxl
+        if tag == TIER_RDMA:
+            return self.dedup_rdma
+        raise ValueError(f"unknown tier tag {tag}")
 
     def tier(self, tag: int) -> MemoryTier:
         if tag == TIER_CXL:

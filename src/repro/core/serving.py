@@ -270,8 +270,8 @@ class AsyncRDMAEngine:
     def _run(self) -> None:
         while not self._stop.is_set():
             try:
-                prio, _seq, (pool_off, nbytes, buf, token, charge, ledger) = \
-                    self._sq.get(timeout=0.05)
+                prio, _seq, (pool_off, nbytes, buf, token, charge, ledger) = (
+                    self._sq.get(timeout=0.05))
             except queue.Empty:
                 continue
             buf[:nbytes] = self.tier.buf[pool_off : pool_off + nbytes]
@@ -363,24 +363,30 @@ class RestoreEngine:
                     self.instance.stats["pre_installed"] += 1
             return int(hot.size)
         chunk = chunk_pages or self.HOT_CHUNK_PAGES
-        hot = self.reader.hot_page_indices()
-        hot_off = self.reader.regions.hot_off
-        for r0 in range(0, int(hot.size), chunk):
-            r1 = min(int(hot.size), r0 + chunk)
-            if self.instance.present[hot[r0:r1]].all():
+        n_hot = 0
+        # extent walk (snapshot.iter_hot_extents): contiguous-region chunks
+        # for the private layout, adjacent-store-offset runs for dedup —
+        # either way each extent is ONE sequential CXL read
+        for pages, pool_off, nbytes in self.reader.iter_hot_extents(chunk):
+            n_hot += int(pages.size)
+            if self.instance.present[pages].all():
                 continue    # already installed (e.g. repeated pre-install)
-            # ranks r0:r1 are back-to-back in the hot region: ONE CXL read
-            nbytes = (r1 - r0) * PAGE_SIZE
             if self.server is not None:
                 # hot-chunk fan-out: co-located same-snapshot restores share
-                # one physical chunk read (one CXL read, k scatters)
-                raw = self.server.hot_chunk(self, hot_off + r0 * PAGE_SIZE, nbytes)
+                # one physical chunk read (one CXL read, k scatters); dedup
+                # chunks are content-keyed, so different VARIANTS share too
+                raw = self.server.hot_chunk(self, pool_off, nbytes)
             else:
-                raw = self.reader.view.read(hot_off + r0 * PAGE_SIZE, nbytes)
-            installed = self.instance.uffd_copy_batch(
-                hot[r0:r1], raw.reshape(r1 - r0, PAGE_SIZE))
+                raw = self.reader.view.read(pool_off, nbytes)
+            mat = raw.reshape(-1, PAGE_SIZE)
+            if pages.size > 1 and np.any(np.diff(pages) < 0):
+                # dedup extents visit pages in store-offset order: scatter
+                # wants them guest-sorted (one uffd range per guest run)
+                order = np.argsort(pages, kind="stable")
+                pages, mat = pages[order], mat[order]
+            installed = self.instance.uffd_copy_batch(pages, mat)
             self.instance.stats["pre_installed"] += installed
-        return int(hot.size)
+        return n_hot
 
     def install_zero_runs(self) -> int:
         """uffd.zeropage the zero runs (one ioctl per run); full-restore
@@ -592,8 +598,8 @@ class RestoreEngine:
                 self.prefetch_stats["doorbells"] += 1
                 pending_bytes, pending_ops = 0, 0
 
-        for es, en, rank0, pool_off, nbytes in \
-                self.reader.iter_cold_extents(max_extent_pages):
+        for es, en, rank0, pool_off, nbytes in self.reader.iter_cold_extents(
+                max_extent_pages):
             if self._stop.is_set():
                 flush_doorbell()
                 return
@@ -663,6 +669,16 @@ class RestoreEngine:
         for start, n in self.reader.zero_runs():
             self.instance.uffd_zeropage_range(int(start), int(n))
         self.pre_install_hot()
+        if self.reader.regions.dedup:
+            # dedup cold pages are not rank-compacted: walk the dual-
+            # contiguous extents (split only at store discontinuities)
+            for es, en, _rank0, pool_off, nbytes in self.reader.iter_cold_extents(
+                    max_extent_pages=1 << 30):
+                payload = self.reader.rdma.read(pool_off, nbytes)
+                self.ledger.add("rdma_read", self._rdma_arbiter.charge(nbytes))
+                self.instance.uffd_copy_batch(np.arange(es, es + en),
+                                              payload.reshape(en, PAGE_SIZE))
+            return
         for start, n in self.reader.cold_runs():
             start, n = int(start), int(n)
             rank0 = self.reader.cold_rank(start)

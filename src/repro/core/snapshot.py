@@ -66,6 +66,32 @@ def runs_of_indices(idx: np.ndarray) -> np.ndarray:
     return np.stack([idx[starts], ends - starts + 1], axis=1)
 
 
+def _offset_subruns(offsets: np.ndarray, max_run: Optional[int] = None):
+    """Yield ``(start_index, length)`` over positions of ``offsets`` such
+    that each run's byte offsets are PAGE_SIZE-adjacent (optionally capped
+    at ``max_run`` elements) — the dedup extent-splitting primitive."""
+    n = int(offsets.size)
+    if n == 0:
+        return
+    brk = np.nonzero(np.diff(offsets) != PAGE_SIZE)[0]
+    starts = np.concatenate([[0], brk + 1]).astype(np.int64)
+    ends = np.concatenate([brk + 1, [n]]).astype(np.int64)
+    for a, b in zip(starts, ends):
+        a, b = int(a), int(b)
+        if max_run is None:
+            yield a, b - a
+        else:
+            for s in range(a, b, max_run):
+                yield s, min(max_run, b - s)
+
+
+def _offset_runs(sorted_offsets: np.ndarray):
+    """Yield ``(byte_offset, n_pages)`` maximal adjacent runs of SORTED
+    absolute page offsets (dedup flush/read coalescing)."""
+    for a, k in _offset_subruns(sorted_offsets):
+        yield int(sorted_offsets[a]), k
+
+
 # --------------------------------------------------------------------------
 # Page classification (§2.3.3 semantics)
 # --------------------------------------------------------------------------
@@ -141,6 +167,13 @@ class SnapshotRegions:
     cold_compressed: bool = False
     ci_size: int = 0
     cold_raw_bytes: int = 0       # uncompressed cold payload (for ratio)
+    # content-addressed layout (core/dedup.py): page payloads live in the
+    # per-tier DedupStores and offset-array slots hold ABSOLUTE tier byte
+    # offsets (refcounted, possibly shared across snapshots).  The private
+    # CXL region then holds only machine state + offset array, and there is
+    # no private RDMA region at all (rdma_size == 0).  Mutually exclusive
+    # with cold_compressed.
+    dedup: bool = False
 
     @property
     def ms_off(self) -> int:
@@ -206,13 +239,22 @@ def build_snapshot(
     zero_bitmap: Optional[np.ndarray] = None,
     gather_fn=None,
     compress_cold: bool = False,
+    dedup: bool = False,
 ) -> SnapshotRegions:
     """Write one snapshot into the pool tiers; returns its region record.
 
     ``gather_fn(pages_matrix, page_indices) -> compact`` lets callers swap in
     the Pallas ``page_gather`` kernel; default is the numpy oracle.
     ``compress_cold`` stores the RDMA tier zstd-compressed per page.
+    ``dedup`` routes page payloads through the pool's content-addressed
+    stores instead of private data regions (offset-array slots then hold
+    refcounted absolute tier offsets); it disables ``compress_cold``.
     """
+    if dedup:
+        return _build_snapshot_dedup(pool, image, working_set, name,
+                                     version=version, metadata=metadata,
+                                     zero_bitmap=zero_bitmap,
+                                     gather_fn=gather_fn)
     compress_cold = compress_cold and _zstd is not None
     classes = classify_pages(image, working_set, zero_bitmap)
     hot, cold = classes.hot_pages, classes.cold_pages
@@ -284,9 +326,113 @@ def build_snapshot(
     return regions
 
 
+def _build_snapshot_dedup(
+    pool: HierarchicalPool,
+    image: StateImage,
+    working_set: Sequence[int],
+    name: str,
+    version: int = 0,
+    metadata: Optional[dict] = None,
+    zero_bitmap: Optional[np.ndarray] = None,
+    gather_fn=None,
+) -> SnapshotRegions:
+    """Content-addressed build: page payloads go through the per-tier
+    DedupStores (one refcount per offset-array slot); only machine state and
+    the offset array occupy a private, contiguous CXL region.  A mid-build
+    ``AllocError`` rolls every reference taken by this build back, so a
+    failed publish leaves both stores and the tiers unchanged."""
+    classes = classify_pages(image, working_set, zero_bitmap)
+    hot, cold = classes.hot_pages, classes.cold_pages
+
+    gather = gather_fn or (lambda mat, idx: mat[idx])
+    mat = image.pages_matrix()
+    hot_mat = (np.asarray(gather(mat, hot)).view(np.uint8).reshape(-1, PAGE_SIZE)
+               if hot.size else np.zeros((0, PAGE_SIZE), np.uint8))
+    cold_mat = (np.asarray(gather(mat, cold)).view(np.uint8).reshape(-1, PAGE_SIZE)
+                if cold.size else np.zeros((0, PAGE_SIZE), np.uint8))
+
+    ms = _serialize_machine_state(image.manifest, metadata or {})
+    ms_size = _align_pages(len(ms))
+    oa_size = _align_pages(image.total_pages * 8)
+    cxl_size = ms_size + oa_size
+
+    cxl_off = pool.cxl.alloc(cxl_size)
+    hot_offs = np.zeros(0, dtype=np.int64)
+    try:
+        hot_offs = pool.dedup_cxl.put_pages(hot_mat)
+        cold_offs = pool.dedup_rdma.put_pages(cold_mat)
+    except Exception:
+        if hot_offs.size:
+            pool.dedup_cxl.release_offsets(hot_offs)
+        pool.cxl.free(cxl_off, cxl_size)
+        raise
+
+    oa = np.full(image.total_pages, ZERO_SENTINEL, dtype=np.uint64)
+    if hot.size:
+        oa[hot] = (np.uint64(TIER_CXL) << TIER_SHIFT) | hot_offs.astype(np.uint64)
+    if cold.size:
+        oa[cold] = (np.uint64(TIER_RDMA) << TIER_SHIFT) | cold_offs.astype(np.uint64)
+
+    regions = SnapshotRegions(
+        name=name, version=version,
+        cxl_off=cxl_off, cxl_size=cxl_size,
+        ms_size=ms_size, oa_size=oa_size,
+        hot_bytes=int(hot.size) * PAGE_SIZE,
+        rdma_off=0, rdma_size=0,
+        cold_bytes=int(cold.size) * PAGE_SIZE,
+        total_pages=image.total_pages,
+        n_hot=int(hot.size), n_cold=int(cold.size), n_zero=classes.n_zero,
+        cold_raw_bytes=int(cold.size) * PAGE_SIZE,
+        dedup=True,
+    )
+    pool.cxl.write(regions.ms_off, np.frombuffer(ms, dtype=np.uint8))
+    pool.cxl.write(regions.oa_off, oa.view(np.uint8))
+    return regions
+
+
+def decode_dedup_offsets(pool: HierarchicalPool, regions: SnapshotRegions,
+                         tier_tag: int) -> np.ndarray:
+    """Absolute store offsets a dedup snapshot's offset array holds for one
+    tier (owner-side direct read of the stored offset array)."""
+    oa = pool.cxl.read(regions.oa_off, regions.total_pages * 8).view(np.uint64)
+    nonzero = oa != ZERO_SENTINEL
+    sel = nonzero & ((oa >> TIER_SHIFT) == np.uint64(tier_tag))
+    return (oa[sel] & OFFSET_MASK).astype(np.int64)
+
+
 def free_snapshot(pool: HierarchicalPool, regions: SnapshotRegions) -> None:
+    """Return a snapshot's storage.  For dedup snapshots this DECREMENTS the
+    per-page references (one per offset-array slot); the stores free tier
+    bytes only for pages whose last reference this was."""
+    if regions.dedup:
+        # read the offset array BEFORE freeing the metadata region that
+        # holds it — it is the authoritative list of held references
+        pool.dedup_cxl.release_offsets(
+            decode_dedup_offsets(pool, regions, TIER_CXL))
+        pool.dedup_rdma.release_offsets(
+            decode_dedup_offsets(pool, regions, TIER_RDMA))
+        pool.cxl.free(regions.cxl_off, regions.cxl_size)
+        return
     pool.cxl.free(regions.cxl_off, regions.cxl_size)
     pool.rdma.free(regions.rdma_off, regions.rdma_size)
+
+
+def exclusive_cxl_bytes(pool: HierarchicalPool, regions: SnapshotRegions) -> int:
+    """CXL bytes demoting/deleting this snapshot's hot set would actually
+    reclaim.  For a private layout that is the whole hot section; for a
+    dedup layout only pages whose store refcount equals THIS snapshot's own
+    reference count free on release — a mostly-shared snapshot reclaims
+    ~nothing, and the eviction clock (master.CXLCapacityManager) skips it."""
+    if not regions.dedup:
+        return regions.cxl_size - regions.ms_size - regions.oa_size - regions.ci_size
+    offs = decode_dedup_offsets(pool, regions, TIER_CXL)
+    if offs.size == 0:
+        return 0
+    refs = pool.dedup_cxl.refcounts()
+    uniq, counts = np.unique(offs, return_counts=True)
+    exclusive = sum(1 for off, mine in zip(uniq, counts)
+                    if refs.get(int(off), 0) == int(mine))
+    return exclusive * PAGE_SIZE
 
 
 def estimate_snapshot_cxl_size(
@@ -295,22 +441,34 @@ def estimate_snapshot_cxl_size(
     zero_bitmap: Optional[np.ndarray] = None,
     metadata: Optional[dict] = None,
     compress_cold: bool = False,
+    dedup: bool = False,
+    pool: Optional[HierarchicalPool] = None,
 ) -> int:
     """CXL bytes :func:`build_snapshot` would allocate for this publish —
     machine state + offset array + cold-length index (compressed cold
     tier) + hot data — WITHOUT building anything.  The capacity manager
     admits/degrades on this estimate before the build; it must match the
     build's own arithmetic exactly (asserted in tests).
+
+    With ``dedup`` (requires ``pool``) the hot-data term is the MARGINAL
+    size: only page contents the CXL store does not already hold count,
+    so a variant snapshot sharing a published base admits almost for free.
     """
-    compress_cold = compress_cold and _zstd is not None
+    compress_cold = compress_cold and _zstd is not None and not dedup
     classes = classify_pages(image, working_set, zero_bitmap)
     ms = _serialize_machine_state(image.manifest, metadata or {})
     ms_size = _align_pages(len(ms))
     oa_size = _align_pages(image.total_pages * 8)
+    if dedup:
+        assert pool is not None, "dedup estimate needs the pool's stores"
+        hot = classes.hot_pages
+        hot_new = (pool.dedup_cxl.probe_new_bytes(
+            image.pages_matrix()[hot]) if hot.size else 0)
+        return ms_size + oa_size + hot_new
     ci_size = (_align_pages(int(classes.cold_pages.size) * 4)
                if compress_cold and classes.cold_pages.size else 0)
-    hot_size = _align_pages(int(classes.hot_pages.size) * PAGE_SIZE) \
-        if classes.hot_pages.size else 0
+    hot_size = (_align_pages(int(classes.hot_pages.size) * PAGE_SIZE)
+                if classes.hot_pages.size else 0)
     return ms_size + oa_size + ci_size + hot_size
 
 
@@ -334,6 +492,21 @@ def reconstruct_image(pool: HierarchicalPool, regions: SnapshotRegions) -> State
     offs = (oa & OFFSET_MASK).astype(np.int64)
     hot = np.nonzero(nonzero & (tiers == TIER_CXL))[0]
     cold = np.nonzero(nonzero & (tiers == TIER_RDMA))[0]
+    if regions.dedup:
+        # content-addressed layout: slots hold absolute tier offsets (pages
+        # may be shared, non-contiguous) — coalesce adjacent store offsets
+        # so each maximal run costs one tier read (the demotion/re-curation
+        # path materializes whole snapshots through here)
+        for pages_sel, tier in ((hot, pool.cxl), (cold, pool.rdma)):
+            if not pages_sel.size:
+                continue
+            po = offs[pages_sel]
+            order = np.argsort(po, kind="stable")
+            pages_o, offs_o = pages_sel[order], po[order]
+            for a, k in _offset_subruns(offs_o):
+                raw = tier.read(int(offs_o[a]), k * PAGE_SIZE)
+                mat[pages_o[a : a + k]] = raw.reshape(k, PAGE_SIZE)
+        return image
     if hot.size:
         # hot data is rank-compacted: ranks are ordered by guest page index
         raw = pool.cxl.read(regions.hot_off, int(hot.size) * PAGE_SIZE)
@@ -451,9 +624,22 @@ class SnapshotReader:
 
     # -- protocol hook ------------------------------------------------------
     def invalidate_cxl(self) -> None:
-        """clflushopt over machine state + offset array + hot data (§3.3)."""
+        """clflushopt over machine state + offset array + hot data (§3.3).
+
+        A dedup snapshot has no contiguous hot section: the metadata region
+        is flushed first, then the (now-fresh) offset array is decoded and
+        each maximal run of ADJACENT store offsets flushed separately —
+        the per-page flush path §3.6 charges dedup for."""
         r = self.regions
-        self.view.invalidate(r.cxl_off, r.ms_size + r.oa_size + max(r.hot_bytes, 0))
+        if not r.dedup:
+            self.view.invalidate(r.cxl_off, r.ms_size + r.oa_size + max(r.hot_bytes, 0))
+            return
+        self.view.invalidate(r.cxl_off, r.ms_size + r.oa_size)
+        oa = self.offset_array()
+        sel = (oa != ZERO_SENTINEL) & ((oa >> TIER_SHIFT) == np.uint64(TIER_CXL))
+        offs = np.sort((oa[sel] & OFFSET_MASK).astype(np.int64))
+        for off, n in _offset_runs(offs):
+            self.view.invalidate(int(off), int(n) * PAGE_SIZE)
 
     # -- index + machine state ----------------------------------------------
     def machine_state(self) -> Tuple[Manifest, dict]:
@@ -480,11 +666,14 @@ class SnapshotReader:
     # -- page lookup ----------------------------------------------------------
     def lookup(self, page: int) -> Tuple[str, int]:
         """-> ("zero", 0) | ("cxl", pool_byte_offset) | ("rdma", pool_byte_offset)
-        | ("rdma_z", cold_rank) when the cold tier is compressed."""
+        | ("rdma_z", cold_rank) when the cold tier is compressed.  Dedup
+        slots already hold absolute tier offsets (no region base to add)."""
         slot = self.offset_array()[page]
         if slot == ZERO_SENTINEL:
             return "zero", 0
         tier, off = decode_slot(slot)
+        if self.regions.dedup:
+            return ("cxl" if tier == TIER_CXL else "rdma"), off
         if tier == TIER_CXL:
             return "cxl", self.regions.hot_off + off
         if self.regions.cold_compressed:
@@ -556,22 +745,79 @@ class SnapshotReader:
         cold runs (largest-first by default), each readable with ONE
         one-sided read.  This is THE extent-splitting arithmetic: the
         per-instance prefetcher, the node server's pump, and the analytic
-        restore model all consume it, so they can never drift apart."""
+        restore model all consume it, so they can never drift apart.
+
+        Dedup snapshots additionally split each guest run wherever the
+        stored tier offsets stop being adjacent (shared pages can point
+        anywhere), so every yielded extent is contiguous in BOTH the guest
+        address space and the tier — the invariant the scatter paths rely
+        on."""
         runs = self.cold_runs()
         if runs.size == 0:
             return
+        dedup = self.regions.dedup
+        oa = self.offset_array() if dedup else None
         order = (np.argsort(-runs[:, 1], kind="stable") if largest_first
                  else range(runs.shape[0]))
         for ri in order:
             start, n = int(runs[ri, 0]), int(runs[ri, 1])
             for es in range(start, start + n, max_extent_pages):
                 en = min(max_extent_pages, start + n - es)
-                rank0 = self.cold_rank(es)
-                pool_off, nbytes = self.cold_extent_span(rank0, en)
-                yield es, en, rank0, pool_off, nbytes
+                if not dedup:
+                    rank0 = self.cold_rank(es)
+                    pool_off, nbytes = self.cold_extent_span(rank0, en)
+                    yield es, en, rank0, pool_off, nbytes
+                    continue
+                offs = (oa[es : es + en] & OFFSET_MASK).astype(np.int64)
+                for a, k in _offset_subruns(offs):
+                    yield (es + a, k, int(offs[a]) // PAGE_SIZE,
+                           int(offs[a]), k * PAGE_SIZE)
+
+    def iter_hot_extents(self, chunk_pages: int = 256):
+        """Yield ``(pages, pool_off, nbytes)`` CXL extents covering the hot
+        set, each readable with ONE sequential CXL read of ``nbytes`` at
+        ``pool_off`` whose i-th page belongs to guest page ``pages[i]``.
+
+        Private layout: the hot region is rank-compacted, so this is simply
+        the region streamed in ``chunk_pages`` chunks (``pages`` ascending).
+        Dedup layout: hot pages are visited in STORE-OFFSET order and split
+        wherever offsets stop being adjacent — ``pages`` is then generally
+        unsorted; installers sort it (and permute the payload) before the
+        uffd scatter."""
+        hot = self.hot_page_indices()
+        if hot.size == 0:
+            return
+        if not self.regions.dedup:
+            hot_off = self.regions.hot_off
+            for r0 in range(0, int(hot.size), chunk_pages):
+                r1 = min(int(hot.size), r0 + chunk_pages)
+                yield (hot[r0:r1], hot_off + r0 * PAGE_SIZE,
+                       (r1 - r0) * PAGE_SIZE)
+            return
+        oa = self.offset_array()
+        offs = (oa[hot] & OFFSET_MASK).astype(np.int64)
+        order = np.argsort(offs, kind="stable")
+        hot_o, offs_o = hot[order], offs[order]
+        chunk_bytes = chunk_pages * PAGE_SIZE
+        for a, k in _offset_subruns(offs_o):
+            # split at ABSOLUTE tier-grid boundaries (not run-relative): two
+            # snapshots sharing a run of store pages then emit bit-identical
+            # (pool_off, nbytes) chunks for the overlap, which is what lets
+            # the content-keyed HotChunkCache fan one physical read out
+            # across different variants
+            s = a
+            while s < a + k:
+                off_s = int(offs_o[s])
+                to_boundary = (chunk_bytes - off_s % chunk_bytes) // PAGE_SIZE
+                n = min(a + k - s, max(1, to_boundary))
+                yield hot_o[s : s + n], off_s, n * PAGE_SIZE
+                s += n
 
     def cold_rank(self, page: int) -> int:
-        """Rank (position in the sorted cold set) of a cold page."""
+        """Rank (position in the sorted cold set) of a cold page.  For a
+        dedup snapshot there is no compacted rank space; the "rank" is the
+        absolute tier page number (offset / PAGE_SIZE), which keeps the
+        ``(rank0, n)`` extent arithmetic working unchanged."""
         _tier, off = decode_slot(self.offset_array()[page])
         return off if self.regions.cold_compressed else off // PAGE_SIZE
 
@@ -581,7 +827,11 @@ class SnapshotReader:
         -> (pool_byte_offset, nbytes).  For the compressed cold tier the
         per-rank chunks are stored back-to-back, so consecutive ranks always
         form one contiguous byte extent readable with a single one-sided read.
+        Dedup ranks are absolute tier page numbers, so no region base is
+        added.
         """
+        if self.regions.dedup:
+            return rank * PAGE_SIZE, n * PAGE_SIZE
         if not self.regions.cold_compressed:
             return self.regions.rdma_off + rank * PAGE_SIZE, n * PAGE_SIZE
         starts, lens = self.cold_index()

@@ -134,8 +134,8 @@ def _classify(spec: WorkloadSpec):
     ``t_*`` arrays preserve ``spec.touched`` order (duplicates included),
     the ``ws_*`` arrays are the deduplicated working set in sorted order."""
     zero = spec.image.zero_page_bitmap()
-    ws_idx = np.unique(np.asarray(spec.working_set, dtype=np.int64)) \
-        if len(spec.working_set) else np.zeros(0, dtype=np.int64)
+    ws_idx = (np.unique(np.asarray(spec.working_set, dtype=np.int64))
+              if len(spec.working_set) else np.zeros(0, dtype=np.int64))
     ws_mask = np.zeros(zero.size, dtype=bool)
     ws_mask[ws_idx] = True
     touched = np.asarray(spec.touched, dtype=np.int64).reshape(-1)
@@ -298,18 +298,19 @@ def modeled_concurrent_restore_s(reader, conc: int, max_extent_pages: int = 64,
     # borrow-protocol clflushopt over the snapshot's CXL sections
     n_lines = -(-(r.ms_size + r.oa_size + max(r.hot_bytes, 0)) // 64)
     t += n_lines * CLFLUSH_PER_LINE_S
-    # hot pre-install: one CXL read per chunk, one uffd.copy ioctl per
-    # guest-contiguous run within each chunk
-    hot = reader.hot_page_indices()
-    n_hot = int(hot.size)
+    # hot pre-install: one CXL read per extent (contiguous-region chunk, or
+    # adjacent-store-offset run for dedup), one uffd.copy ioctl per
+    # guest-contiguous run within each extent — the same extent walk the
+    # serving path executes (reader.iter_hot_extents)
+    n_hot, n_chunks, n_ranges = 0, 0, 0
+    for pages, _off, _nbytes in reader.iter_hot_extents(chunk):
+        n_chunks += 1
+        n_hot += int(pages.size)
+        seg = np.sort(pages)
+        n_ranges += 1 + int(np.count_nonzero(np.diff(seg) != 1))
     if n_hot:
-        n_chunks = -(-n_hot // chunk)
         t += _shared(n_chunks * CXL_LAT_S + n_hot * PAGE_SIZE / CXL_BW,
                      n_hot * PAGE_SIZE, CXL_BW, conc)
-        n_ranges = 0
-        for c0 in range(0, n_hot, chunk):
-            seg = hot[c0 : c0 + chunk]
-            n_ranges += 1 + int(np.count_nonzero(np.diff(seg) != 1))
         t += uffd_copy_batch_cost(n_hot, n_ranges)
     # zero pages: one uffd.zeropage ioctl per zero run
     zr = reader.zero_runs()
@@ -321,14 +322,90 @@ def modeled_concurrent_restore_s(reader, conc: int, max_extent_pages: int = 64,
     n_cold = int(cr[:, 1].sum()) if cr.size else 0
     if n_cold:
         n_ext, cold_bytes = 0, 0
-        for _es, _en, _rank0, _off, nbytes in \
-                reader.iter_cold_extents(max_extent_pages):
+        for _es, _en, _rank0, _off, nbytes in reader.iter_cold_extents(
+                max_extent_pages):
             cold_bytes += nbytes
             n_ext += 1
         serial = -(-n_ext // RDMA_INFLIGHT) * RDMA_LAT_S + cold_bytes / RDMA_BW
         t += _shared(serial, cold_bytes, RDMA_BW, conc)
         t += uffd_copy_batch_cost(n_cold, n_ext)
     return t
+
+
+# -- content-addressed (dedup) publish/restore economics ---------------------
+# Hashing throughput of the publish-time content hash: both the vectorized
+# FNV-1a u64 fold and the page_checksum polynomial hash are memory-bound
+# streaming passes over the page (DESIGN.md §12).
+CHECKSUM_BW = 20e9
+CHECKSUM_PER_PAGE_S = PAGE_SIZE / CHECKSUM_BW
+
+
+def dedup_publish_cost_s(n_hot: int, n_cold: int,
+                         n_hot_unique: int, n_cold_unique: int) -> float:
+    """Modeled owner-side publish cost WITH dedup: every candidate page is
+    hashed (and byte-verified on a hash hit — same streaming pass), but only
+    the UNIQUE pages cross a link into their tier."""
+    hash_s = (n_hot + n_cold) * CHECKSUM_PER_PAGE_S
+    return hash_s + _cxl_chunks(n_hot_unique) + _rdma_bulk(n_cold_unique)
+
+
+def baseline_publish_cost_s(n_hot: int, n_cold: int) -> float:
+    """Modeled owner-side publish cost WITHOUT dedup: every page is written."""
+    return _cxl_chunks(n_hot) + _rdma_bulk(n_cold)
+
+
+def dedup_restore_penalty_s(n_extra_hot_extents: int,
+                            n_extra_cold_extents: int) -> float:
+    """Per-restore cost of dedup's lost contiguity: each extra CXL extent
+    pays one more load-to-use latency, each extra RDMA extent one more
+    one-sided-read latency (bandwidth terms are unchanged — the same bytes
+    move; uffd ranges are guest-side and also unchanged)."""
+    return (max(0, n_extra_hot_extents) * CXL_LAT_S
+            + max(0, n_extra_cold_extents) * RDMA_LAT_S)
+
+
+def dedup_economics(n_hot: int, n_cold: int,
+                    n_hot_unique: int, n_cold_unique: int,
+                    n_extra_hot_extents: int = 0,
+                    n_extra_cold_extents: int = 0,
+                    expected_restores: int = 64) -> Dict[str, float]:
+    """Break-even model for content-addressed publishing of one snapshot.
+
+    Dedup is a CAPACITY play: every shared hot page keeps one page of CXL
+    free, which lets another snapshot's hot set stay resident instead of
+    degrading to RDMA demand paging.  The benefit side therefore prices each
+    saved CXL page at the demand-fault path it spares some co-resident
+    restore (trap + synchronous-feeling RDMA read + per-page uffd.copy,
+    minus the pre-install path the page rides instead) — the same arithmetic
+    :func:`recuration_benefit_s` uses for promotions.  The cost side is the
+    publish-time hashing overhead plus the per-restore fragmentation
+    penalty, both amortized over ``expected_restores``.
+    """
+    pages_saved_cxl = max(0, n_hot - n_hot_unique)
+    saved_demand = pages_saved_cxl * (FAULT_TRAP_S + RDMA_PAGE_READ_S
+                                      + UFFD_COPY_PER_PAGE_S)
+    saved_preinstall = (_cxl_chunks(pages_saved_cxl)
+                        + uffd_copy_batch_cost(pages_saved_cxl)
+                        if pages_saved_cxl else 0.0)
+    benefit_s = (saved_demand - saved_preinstall) * expected_restores
+    publish_delta_s = (dedup_publish_cost_s(n_hot, n_cold,
+                                            n_hot_unique, n_cold_unique)
+                       - baseline_publish_cost_s(n_hot, n_cold))
+    penalty_s = dedup_restore_penalty_s(n_extra_hot_extents,
+                                        n_extra_cold_extents)
+    cost_s = max(0.0, publish_delta_s) + penalty_s * expected_restores
+    return {
+        "pages_saved_cxl": float(pages_saved_cxl),
+        "bytes_saved": float((n_hot - n_hot_unique + n_cold - n_cold_unique)
+                             * PAGE_SIZE),
+        "benefit_s": benefit_s,
+        "publish_delta_s": publish_delta_s,
+        "restore_penalty_s": penalty_s,
+        "cost_s": cost_s,
+        "net_s": benefit_s - cost_s,
+        "expected_restores": float(expected_restores),
+        "worthwhile": bool(benefit_s > cost_s),
+    }
 
 
 def recuration_benefit_s(n_promote: int, n_demote: int,
@@ -350,10 +427,10 @@ def recuration_benefit_s(n_promote: int, n_demote: int,
         return 0.0
     promote_now = n_promote * (FAULT_TRAP_S + RDMA_PAGE_READ_S
                                + UFFD_COPY_PER_PAGE_S)
-    promote_after = _cxl_chunks(n_promote) + uffd_copy_batch_cost(n_promote) \
-        if n_promote else 0.0
-    demote_saved = (_cxl_chunks(n_demote) + uffd_copy_batch_cost(n_demote)) \
-        if n_demote else 0.0
+    promote_after = (_cxl_chunks(n_promote) + uffd_copy_batch_cost(n_promote)
+                     if n_promote else 0.0)
+    demote_saved = ((_cxl_chunks(n_demote) + uffd_copy_batch_cost(n_demote))
+                    if n_demote else 0.0)
     per_restore = (promote_now - promote_after) + demote_saved
     return per_restore * expected_restores
 
@@ -368,14 +445,14 @@ def recuration_cost_s(regions) -> float:
     cold_pages = regions.n_cold
     cold_payload = (regions.cold_bytes if regions.cold_compressed
                     else cold_pages * PAGE_SIZE)
-    read = _cxl_chunks(hot_pages) + \
-        _shared(-(-cold_pages // RDMA_INFLIGHT) * RDMA_LAT_S
-                + cold_payload / RDMA_BW, cold_payload, RDMA_BW, 1)
+    read = _cxl_chunks(hot_pages) + _shared(
+        -(-cold_pages // RDMA_INFLIGHT) * RDMA_LAT_S
+        + cold_payload / RDMA_BW, cold_payload, RDMA_BW, 1)
     # rewrite: every non-zero page crosses a link once more (hot→CXL write,
     # cold→RDMA write; promoted/demoted pages just swap which link)
-    write = _cxl_chunks(hot_pages) + \
-        _shared(-(-cold_pages // RDMA_INFLIGHT) * RDMA_LAT_S
-                + cold_payload / RDMA_BW, cold_payload, RDMA_BW, 1)
+    write = _cxl_chunks(hot_pages) + _shared(
+        -(-cold_pages // RDMA_INFLIGHT) * RDMA_LAT_S
+        + cold_payload / RDMA_BW, cold_payload, RDMA_BW, 1)
     return read + write + SNAPSHOT_API_S
 
 

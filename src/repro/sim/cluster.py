@@ -74,6 +74,7 @@ class SimCluster:
         beat_interval_s: float = 0.05,
         schedule: str = "random",
         step_quantum_s: float = 1e-6,
+        cxl_budget: Optional[int] = None,
     ):
         assert schedule in ("random", "round_robin")
         self.seed = seed
@@ -86,8 +87,9 @@ class SimCluster:
         self.pool = HierarchicalPool(cxl_capacity, rdma_capacity, clock=self.clock)
         self.catalog = Catalog(catalog_capacity, clock=self.clock)
         self.lease = MasterLease(lease_timeout_s, clock=self.clock)
-        # the pod's initial pool master (outside the failover group)
-        self.master = PoolMaster(self.pool, self.catalog)
+        # the pod's initial pool master (outside the failover group);
+        # cxl_budget arms the capacity manager for eviction scenarios
+        self.master = PoolMaster(self.pool, self.catalog, cxl_budget=cxl_budget)
         # failover-capable nodes, one per host (ids 1..N; 0 is NO_MASTER)
         self.nodes: Dict[int, FailoverNode] = {
             i: FailoverNode(i, self.pool, self.catalog, self.lease,
@@ -106,6 +108,10 @@ class SimCluster:
         self.midflight: Dict[int, int] = {}
         self.borrow_records: List[BorrowRecord] = []
         self.orphaned_records: List[BorrowRecord] = []
+        # dedup (I6) accounting: regions built by an in-flight publish that
+        # the catalog does not point at yet.  A crashed owner leaves its
+        # record here forever — the references it leaked are still real.
+        self.pending_regions: List[object] = []
         # canonical content per (name, version): the published StateImage
         self.content: Dict[str, Dict[int, StateImage]] = {}
         self.restored: List[dict] = []
@@ -116,11 +122,22 @@ class SimCluster:
     # snapshot helpers
     # ------------------------------------------------------------------
     def make_image(self, value: float, hot_pages: int = 2, cold_pages: int = 2,
-                   zero_pages: int = 1) -> Tuple[StateImage, np.ndarray]:
+                   zero_pages: int = 1,
+                   distinct_hot: bool = False) -> Tuple[StateImage, np.ndarray]:
         """A small image with hot / cold / zero page classes; 'hot' pages are
-        filled with ``value`` so borrowers can verify which version they see."""
+        filled with ``value`` so borrowers can verify which version they see.
+
+        ``distinct_hot`` makes every hot page's content distinct (a function
+        of ``value`` and the page rank), so two snapshots published with the
+        same value share page-for-page under dedup while each snapshot's own
+        pages stay unique — the fine-tuned-variant shape the dedup scenarios
+        need."""
+        hot = np.full(hot_pages * 1024, np.float32(value), np.float32)
+        if distinct_hot:
+            ranks = np.repeat(np.arange(hot_pages, dtype=np.float32), 1024)
+            hot = hot + ranks * np.float32(0.125)
         arrays = {
-            "hot": np.full(hot_pages * 1024, np.float32(value), np.float32),
+            "hot": hot,
             "cold": np.arange(cold_pages * 1024, dtype=np.float32) + np.float32(value),
             "zeros": np.zeros(max(1, zero_pages) * 1024, np.float32),
         }
@@ -130,11 +147,11 @@ class SimCluster:
         return img, rec.working_set()
 
     def publish(self, name: str, value: float, master: Optional[PoolMaster] = None,
-                **image_kw) -> object:
+                dedup: Optional[bool] = None, **image_kw) -> object:
         """Immediate (setup-time) publish through the production path."""
         master = master or self.master
         img, ws = self.make_image(value, **image_kw)
-        regions = master.publish(name, img, ws)
+        regions = master.publish(name, img, ws, dedup=dedup)
         self.content.setdefault(name, {})[regions.version] = img
         self.events.append(f"published:{name}:v{regions.version}")
         return regions
@@ -304,20 +321,33 @@ class SimCluster:
     def publish_program(self, name: str, value: float,
                         master: Optional[PoolMaster] = None,
                         drain_limit: Optional[int] = None,
-                        drain_sleep: float = 1e-5, **image_kw):
+                        drain_sleep: float = 1e-5,
+                        dedup: Optional[bool] = None, **image_kw):
         """Owner update through ``PoolMaster.publish_steps``, one protocol
         phase per scheduler turn.  ``drain_limit`` bounds the drain polls
         (TimeoutError analogue): on exhaustion the program records
-        ``drain_timeout:<name>`` and aborts — the livelock detector."""
+        ``drain_timeout:<name>`` and aborts — the livelock detector.
+
+        Built-but-unpublished regions are tracked in ``pending_regions`` for
+        the I6 checker: between the build and the catalog republish (or
+        forever, if the owner crashes in that window) their dedup page
+        references are real but no catalog entry points at them."""
         master = master or self.master
         img, ws = self.make_image(value, **image_kw)
         polls = 0
-        gen = master.publish_steps(name, img, ws)
+        built = None
+        gen = master.publish_steps(name, img, ws, dedup=dedup)
         for label, val in gen:
-            if label == "done":
+            if label in ("built_new", "rebuilt"):
+                built = val
+                self.pending_regions.append(val)
+            elif label == "done":
                 # record canonical content BEFORE yielding: the republish has
                 # already made this version borrowable, so a borrower
                 # scheduled next turn must find it in the content table
+                if built is not None:
+                    self.pending_regions.remove(built)
+                    built = None
                 self.content.setdefault(name, {})[val.version] = img
                 self.events.append(f"published:{name}:v{val.version}")
             yield f"publish:{label}"
@@ -460,18 +490,25 @@ class SimCluster:
             heat = heat_registry.find(name, entry.regions.version)
         polls = 0
         reconstructed = None
+        built = None
         gen = master.recurate_steps(name, heat=heat,
                                     expected_restores=expected_restores,
                                     min_restores=min_restores, force=force)
         for label, val in gen:
             if label == "reconstructed":
                 reconstructed = val
+            elif label in ("built_new", "rebuilt"):
+                built = val
+                self.pending_regions.append(val)
             elif label == "skipped":
                 self.events.append(f"recuration_skipped:{name}")
             elif label == "stale":
                 self.events.append(f"recuration_stale:{name}")
             elif label == "done":
                 assert reconstructed is not None
+                if built is not None:
+                    self.pending_regions.remove(built)
+                    built = None
                 self.content.setdefault(name, {})[val.version] = reconstructed
                 self.events.append(f"recurated:{name}:v{val.version}")
             yield f"recurate:{label}"
@@ -509,10 +546,10 @@ class SimCluster:
         session.pre_install_hot(use_batch=use_batch)
         yield "restore:hot"
         retries = 0
-        for start, n in reader.cold_runs():
-            start, n = int(start), int(n)
-            rank0 = reader.cold_rank(start)
-            pool_off, nbytes = reader.cold_extent_span(rank0, n)
+        # the extent walk handles every layout: whole guest runs for the
+        # private format, dual-contiguous sub-extents for dedup snapshots
+        for es, en, rank0, pool_off, nbytes in reader.iter_cold_extents(
+                max_extent_pages=1 << 20):
             while True:
                 try:
                     payload = rdma.read(pool_off, nbytes)
@@ -524,8 +561,8 @@ class SimCluster:
                         raise
                     yield ("sleep", retry_backoff_s * (2 ** retries))
                     yield "restore:rdma_retry"
-            inst.uffd_copy_batch(np.arange(start, start + n),
-                                 reader.split_cold_extent(rank0, n, payload))
+            inst.uffd_copy_batch(np.arange(es, es + en),
+                                 reader.split_cold_extent(rank0, en, payload))
             yield "restore:cold_run"
         canonical = self.content[name][rec.version]
         if not inst.all_present() or not np.array_equal(inst.image.buf, canonical.buf):

@@ -22,13 +22,24 @@ Invariant list (DESIGN.md §9):
       first); borrowers therefore never observe TOMBSTONE'd data bytes.
   I5  catalog sanity — PUBLISHED entries have regions; refcounts are
       non-negative; states are in the valid set.
+  I6  dedup refcount conservation — for each content store (CXL and RDMA),
+      every stored page's refcount equals the number of live offset-array
+      slots pointing at it, counted over catalog entries PLUS in-flight /
+      leaked builds the cluster tracks (``pending_regions``): a crashed
+      owner may leak references, but the store's words must never drift
+      from the sum of causes — and a page must never be freed while any
+      snapshot still points at it.
 """
 from __future__ import annotations
 
 from typing import Dict
 
+import numpy as np
+
 from ..core.coherence import STATE_FREE, STATE_PUBLISHED, STATE_TOMBSTONE
 from ..core.failover import NO_MASTER
+from ..core.pool import TIER_CXL, TIER_RDMA
+from ..core.snapshot import decode_dedup_offsets
 
 
 class InvariantViolation(AssertionError):
@@ -124,10 +135,41 @@ class InvariantChecker:
                 self._fail("I5 PUBLISHED implies regions",
                            f"entry {entry.index} ({entry.name!r}) has no regions")
 
+    # -- I6 -------------------------------------------------------------------
+    def check_dedup_refcounts(self) -> None:
+        c = self.cluster
+        pool = c.pool
+        regions = [e.regions for e in c.catalog.entries
+                   if e.regions is not None and e.regions.dedup]
+        regions += [r for r in getattr(c, "pending_regions", [])
+                    if r is not None and r.dedup]
+        for store, tag, tier in ((pool.dedup_cxl, TIER_CXL, "cxl"),
+                                 (pool.dedup_rdma, TIER_RDMA, "rdma")):
+            actual = store.refcounts()
+            if not actual and not regions:
+                continue
+            expected: Dict[int, int] = {}
+            for r in regions:
+                offs = decode_dedup_offsets(pool, r, tag)
+                uniq, counts = np.unique(offs, return_counts=True)
+                for off, k in zip(uniq, counts):
+                    expected[int(off)] = expected.get(int(off), 0) + int(k)
+            if expected != actual:
+                only_store = {o: rc for o, rc in actual.items()
+                              if expected.get(o) != rc}
+                only_cat = {o: rc for o, rc in expected.items()
+                            if actual.get(o) != rc}
+                self._fail(
+                    "I6 dedup refcount conservation",
+                    f"{tier} store refcounts drifted from live catalog "
+                    f"offsets: store-side mismatches {only_store}, "
+                    f"catalog-side mismatches {only_cat}")
+
     def check_all(self) -> None:
         self.check_refcounts()
         self.check_single_master()
         self.check_pool_conservation()
         self.check_borrow_pins()
         self.check_catalog_sanity()
+        self.check_dedup_refcounts()
         self.checks_run += 1

@@ -1,0 +1,380 @@
+"""Content-addressed dedup: store semantics, collision safety, end-to-end
+bit-exactness, capacity accounting, and cross-variant fan-out (ISSUE 5).
+
+The hash seam (``DedupStore.hash_fn``) is exercised with a deliberately
+colliding hash: the store must byte-verify every hash match before sharing,
+so a collision costs a bucket slot, never correctness.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DedupStore,
+    HierarchicalPool,
+    Instance,
+    NodePageServer,
+    PoolMaster,
+    RestoreEngine,
+    SnapshotReader,
+    StateImage,
+    build_snapshot,
+    estimate_snapshot_cxl_size,
+    exclusive_cxl_bytes,
+    fnv1a_page,
+    fnv1a_pages,
+    free_snapshot,
+    reconstruct_image,
+)
+from repro.core.pagestore import PAGE_SIZE
+from repro.core.pool import AllocError, MemoryTier, CXL_COST
+
+RNG = np.random.default_rng(7)
+
+
+def page(fill=None):
+    if fill is None:
+        return RNG.integers(0, 256, PAGE_SIZE, dtype=np.uint8).astype(np.uint8)
+    return np.full(PAGE_SIZE, fill, dtype=np.uint8)
+
+
+def small_pool(**kw):
+    kw.setdefault("cxl_capacity", 32 << 20)
+    kw.setdefault("rdma_capacity", 64 << 20)
+    return HierarchicalPool(**kw)
+
+
+def variant_image(base: np.ndarray, delta_pages, cold_pages=4, zero_pages=2,
+                  seed=0):
+    """Fine-tuned-variant image: shared base weights + per-variant deltas."""
+    rng = np.random.default_rng(seed)
+    w = base.copy()
+    for i, p in enumerate(np.atleast_1d(delta_pages)):
+        w[p * PAGE_SIZE : (p + 1) * PAGE_SIZE] = (i + 1 + seed) % 251 + 1
+    return StateImage.build({
+        "w": w,
+        "cold": rng.integers(1, 255, cold_pages * PAGE_SIZE).astype(np.uint8),
+        "z": np.zeros(zero_pages * PAGE_SIZE, np.uint8),
+    })
+
+
+# ---------------------------------------------------------------------------
+# DedupStore unit semantics
+# ---------------------------------------------------------------------------
+
+class TestDedupStore:
+    def test_put_release_refcount_and_free(self):
+        tier = MemoryTier("cxl", 1 << 20, CXL_COST)
+        store = DedupStore(tier)
+        a, b = page(1), page(2)
+        off_a1 = store.put(a)
+        off_a2 = store.put(a)
+        off_b = store.put(b)
+        assert off_a1 == off_a2 and off_b != off_a1
+        assert store.refcounts() == {off_a1: 2, off_b: 1}
+        assert tier.bytes_in_use == 2 * PAGE_SIZE
+        store.release(off_a1)
+        assert store.refcounts()[off_a1] == 1
+        assert tier.bytes_in_use == 2 * PAGE_SIZE       # not freed yet
+        store.release(off_a1)
+        store.release(off_b)
+        assert store.refcounts() == {}
+        assert tier.bytes_in_use == 0                   # freed at refcount zero
+        assert store.stats["freed"] == 2
+
+    def test_release_unknown_offset_raises(self):
+        store = DedupStore(MemoryTier("cxl", 1 << 20, CXL_COST))
+        with pytest.raises(ValueError):
+            store.release(12345)
+
+    def test_forced_hash_collision_is_byte_verified(self):
+        """Adversarial hash (everything collides): distinct contents must get
+        distinct pages, identical contents must still share."""
+        tier = MemoryTier("cxl", 1 << 20, CXL_COST)
+        store = DedupStore(tier, hash_fn=lambda m: np.zeros(m.shape[0], np.uint64))
+        a, b = page(1), page(2)
+        off_a = store.put(a)
+        off_b = store.put(b)                 # collides with a, different bytes
+        assert off_a != off_b, "collision must not alias distinct contents"
+        assert store.stats["collisions"] == 1
+        assert store.put(b) == off_b         # same bytes still dedup in-bucket
+        assert np.array_equal(tier.buf[off_a : off_a + PAGE_SIZE], a)
+        assert np.array_equal(tier.buf[off_b : off_b + PAGE_SIZE], b)
+        # releases tear the bucket down without cross-freeing
+        store.release(off_a)
+        assert store.refcounts() == {off_b: 2}
+        store.release(off_b)
+        store.release(off_b)
+        assert tier.bytes_in_use == 0
+
+    def test_put_pages_vectorized_matches_scalar(self):
+        tier = MemoryTier("cxl", 1 << 20, CXL_COST)
+        store = DedupStore(tier)
+        mat = np.stack([page(1), page(2), page(1), page()])
+        offs = store.put_pages(mat)
+        assert offs[0] == offs[2] and len(set(map(int, offs))) == 3
+        assert np.array_equal(fnv1a_pages(mat),
+                              np.array([fnv1a_page(r) for r in mat],
+                                       dtype=np.uint64))
+
+    def test_probe_new_bytes_counts_marginal_uniques(self):
+        tier = MemoryTier("cxl", 1 << 20, CXL_COST)
+        store = DedupStore(tier)
+        a, b, c = page(1), page(2), page(3)
+        store.put_pages(np.stack([a, b]))
+        # c is new; a is stored; duplicate c in one batch counts once
+        assert store.probe_new_bytes(np.stack([a, c, c])) == PAGE_SIZE
+        assert store.probe_new_bytes(np.stack([a, b])) == 0
+        assert tier.bytes_in_use == 2 * PAGE_SIZE       # probe stored nothing
+
+    def test_mid_batch_alloc_failure_rolls_back(self):
+        tier = MemoryTier("cxl", 2 * PAGE_SIZE, CXL_COST)   # room for 2 pages
+        store = DedupStore(tier)
+        mat = np.stack([page(1), page(2), page(3)])
+        with pytest.raises(AllocError):
+            store.put_pages(mat)
+        assert store.refcounts() == {}
+        assert tier.bytes_in_use == 0, "failed put must leave no residue"
+
+    def test_page_checksum_hash_fn_plugs_in(self):
+        """The kernels/page_checksum polynomial hash satisfies the HashFn
+        seam (CPU oracle path; the Pallas kernel shares the signature)."""
+        from repro.core.dedup import pallas_hash_fn
+
+        tier = MemoryTier("cxl", 1 << 20, CXL_COST)
+        store = DedupStore(tier, hash_fn=pallas_hash_fn)
+        a, b = page(1), page(2)
+        off_a = store.put(a)
+        assert store.put(a) == off_a
+        assert store.put(b) != off_a
+        assert store.dedup_ratio() > 0
+
+
+# ---------------------------------------------------------------------------
+# snapshot layout round-trips
+# ---------------------------------------------------------------------------
+
+class TestDedupSnapshot:
+    def test_build_reconstruct_free_round_trip(self):
+        pool = small_pool()
+        base = RNG.integers(1, 255, 32 * PAGE_SIZE).astype(np.uint8)
+        img = variant_image(base, [0])
+        ws = list(range(16))
+        r = build_snapshot(pool, img, ws, "s", dedup=True)
+        assert r.dedup and r.rdma_size == 0
+        rec = reconstruct_image(pool, r)
+        assert np.array_equal(rec.buf, img.buf)
+        free_snapshot(pool, r)
+        assert pool.cxl.bytes_in_use == 0 and pool.rdma.bytes_in_use == 0
+        assert pool.dedup_cxl.refcounts() == {} and pool.dedup_rdma.refcounts() == {}
+
+    def test_estimate_matches_build_marginal_bytes(self):
+        pool = small_pool()
+        base = RNG.integers(1, 255, 24 * PAGE_SIZE).astype(np.uint8)
+        img0 = variant_image(base, [0], seed=0)
+        img1 = variant_image(base, [1], seed=1)
+        ws = list(range(24))
+        est0 = estimate_snapshot_cxl_size(img0, ws, dedup=True, pool=pool)
+        before = pool.cxl.bytes_in_use
+        r0 = build_snapshot(pool, img0, ws, "v0", dedup=True)
+        assert pool.cxl.bytes_in_use - before == est0
+        # the variant's estimate is MARGINAL: one delta page + metadata
+        est1 = estimate_snapshot_cxl_size(img1, ws, dedup=True, pool=pool)
+        before = pool.cxl.bytes_in_use
+        r1 = build_snapshot(pool, img1, ws, "v1", dedup=True)
+        assert pool.cxl.bytes_in_use - before == est1
+        assert est1 == r1.ms_size + r1.oa_size + 2 * PAGE_SIZE  # 2 delta pages
+        for r in (r1, r0):
+            free_snapshot(pool, r)
+        assert pool.cxl.bytes_in_use == 0
+
+    def test_exclusive_bytes_shared_vs_private(self):
+        pool = small_pool()
+        base = RNG.integers(1, 255, 16 * PAGE_SIZE).astype(np.uint8)
+        imgs = [variant_image(base, [i], seed=i) for i in range(2)]
+        ws = list(range(16))
+        r0 = build_snapshot(pool, imgs[0], ws, "v0", dedup=True)
+        assert exclusive_cxl_bytes(pool, r0) == 16 * PAGE_SIZE  # alone: all mine
+        r1 = build_snapshot(pool, imgs[1], ws, "v1", dedup=True)
+        # each variant now exclusively owns its own delta page plus the base
+        # page the OTHER variant replaced; the remaining 14 are shared
+        assert exclusive_cxl_bytes(pool, r0) == 2 * PAGE_SIZE
+        assert exclusive_cxl_bytes(pool, r1) == 2 * PAGE_SIZE
+        free_snapshot(pool, r1)
+        assert exclusive_cxl_bytes(pool, r0) == 16 * PAGE_SIZE
+        free_snapshot(pool, r0)
+
+    def test_invalidate_flushes_noncontiguous_hot_pages(self):
+        """Dedup hot pages are scattered in the tier; the borrow-protocol
+        flush must cover every one of them, not just the metadata region."""
+        pool = small_pool()
+        base = RNG.integers(1, 255, 8 * PAGE_SIZE).astype(np.uint8)
+        img = variant_image(base, [0])
+        r = build_snapshot(pool, img, list(range(8)), "s", dedup=True)
+        view = pool.host_view("h")
+        reader = SnapshotReader(r, view, pool.rdma)
+        reader.invalidate_cxl()
+        hot = reader.hot_page_indices()
+        p = int(hot[3])
+        first = reader.read_page(p).copy()      # populates the host cache
+        kind, off = reader.lookup(p)
+        assert kind == "cxl"
+        pool.cxl.write(off, np.full(PAGE_SIZE, 0xAB, np.uint8))   # owner rewrite
+        assert np.array_equal(reader.read_page(p), first), \
+            "incoherent view must serve stale bytes before the flush"
+        reader.invalidate_cxl()
+        assert np.all(reader.read_page(p) == 0xAB), \
+            "per-page flush must reach scattered dedup pages"
+        free_snapshot(pool, r)
+
+    def test_collision_seam_end_to_end_bit_identical(self):
+        """Publishes under an always-colliding hash stay bit-exact."""
+        pool = small_pool()
+        pool.dedup_cxl.hash_fn = lambda m: np.zeros(m.shape[0], np.uint64)
+        pool.dedup_rdma.hash_fn = lambda m: np.zeros(m.shape[0], np.uint64)
+        master = PoolMaster(pool, dedup=True)
+        base = RNG.integers(1, 255, 12 * PAGE_SIZE).astype(np.uint8)
+        for i in range(2):
+            img = variant_image(base, [i], seed=i)
+            master.publish(f"v{i}", img, list(range(12)))
+            rec = reconstruct_image(pool, master.catalog.find(f"v{i}").regions)
+            assert np.array_equal(rec.buf, img.buf)
+        assert pool.dedup_cxl.stats["collisions"] > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=7), min_size=0, max_size=24),
+       st.lists(st.integers(min_value=0, max_value=30), min_size=0, max_size=10),
+       st.booleans())
+def test_dedup_round_trip_property(fills, ws_pages, use_batch):
+    """Property (ISSUE 5 satellite): arbitrary page sets — duplicate-heavy
+    fills, arbitrary working sets, batched or per-page serving — round-trip
+    bit-exactly through a dedup publish + restore, and freeing the snapshot
+    returns the pool to its starting state."""
+    pool = small_pool()
+    n_pages = max(1, len(fills))
+    buf = np.zeros(n_pages * PAGE_SIZE, np.uint8)
+    for i, f in enumerate(fills):
+        buf[i * PAGE_SIZE : (i + 1) * PAGE_SIZE] = f    # 0 ⇒ a zero page
+    img = StateImage.build({"a": buf})
+    ws = [p for p in set(ws_pages) if p < n_pages]
+    r = build_snapshot(pool, img, ws, "prop", dedup=True)
+    view = pool.host_view("h")
+    reader = SnapshotReader(r, view, pool.rdma)
+    reader.invalidate_cxl()
+    inst = Instance(StateImage.empty_like(img.manifest))
+    eng = RestoreEngine(reader, inst, rdma_engine=None)
+    eng.install_all_sync(use_batch=use_batch)
+    assert inst.all_present()
+    assert np.array_equal(inst.image.buf, img.buf)
+    free_snapshot(pool, r)
+    assert pool.cxl.bytes_in_use == 0 and pool.rdma.bytes_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# ownership protocol + capacity integration
+# ---------------------------------------------------------------------------
+
+class TestDedupMaster:
+    def test_variants_share_and_drain_on_delete(self):
+        pool = small_pool()
+        master = PoolMaster(pool, dedup=True)
+        base = RNG.integers(1, 255, 20 * PAGE_SIZE).astype(np.uint8)
+        imgs = [variant_image(base, [i], seed=i) for i in range(3)]
+        for i, img in enumerate(imgs):
+            master.publish(f"v{i}", img, list(range(20)))
+        store = pool.dedup_cxl
+        assert store.unique_pages() == 20 + 3        # base + one delta each
+        assert store.logical_pages() == 60
+        # update keeps sharing: v0 republishes with v1's content
+        master.publish("v0", imgs[1], list(range(20)))
+        assert store.unique_pages() == 20 + 2, "v0's old delta page must free"
+        for i in range(3):
+            master.delete(f"v{i}")
+        master.gc()
+        assert store.refcounts() == {}
+        assert pool.cxl.bytes_in_use == 0 and pool.rdma.bytes_in_use == 0
+
+    def test_capacity_accounts_unique_bytes(self):
+        """A budget that could hold ~2 private snapshots holds a whole
+        variant fleet once the budget gauge counts unique bytes."""
+        pool = small_pool()
+        base = RNG.integers(1, 255, 32 * PAGE_SIZE).astype(np.uint8)
+        imgs = [variant_image(base, [i], seed=i) for i in range(6)]
+        ws = list(range(32))
+        # budget: base copy + fleet deltas + metadata, far below 6 full copies
+        budget = (32 + 6 * 3) * PAGE_SIZE
+        master = PoolMaster(pool, cxl_budget=budget, dedup=True)
+        for i, img in enumerate(imgs):
+            master.publish(f"v{i}", img, ws)
+        rep = master.capacity.report()
+        assert rep["demotions"] == 0 and rep["degraded"] == 0
+        for i in range(6):
+            assert master.catalog.find(f"v{i}").regions.n_hot == 32
+        assert rep["in_use"] == sum(
+            e.regions.cxl_size for e in master.catalog.entries
+            if e.regions is not None) + pool.dedup_cxl.unique_bytes()
+
+    def test_clock_skips_fully_shared_victims(self):
+        """Demoting a snapshot whose every hot page is shared reclaims
+        nothing — the clock must skip it and degrade the newcomer instead."""
+        pool = small_pool()
+        base = RNG.integers(1, 255, 16 * PAGE_SIZE).astype(np.uint8)
+        img = variant_image(base, [], seed=0)
+        twin = variant_image(base, [], seed=0)
+        ws = list(range(16))
+        master = PoolMaster(pool, cxl_budget=22 * PAGE_SIZE, dedup=True)
+        master.publish("a", img, ws)
+        master.publish("b", twin, ws)            # bit-identical: fully shared
+        big = variant_image(
+            RNG.integers(1, 255, 16 * PAGE_SIZE).astype(np.uint8), [], seed=3)
+        master.publish("big", big, ws)
+        rep = master.capacity.report()
+        assert rep["shared_skips"] >= 1, "clock must notice zero-exclusive victims"
+        assert rep["demotions"] == 0
+        assert rep["degraded"] >= 1
+        for name in ("a", "b"):
+            assert master.catalog.find(name).regions.n_hot == 16, \
+                "useless demotion of a fully-shared snapshot"
+        # correctness didn't degrade: everything restores bit-exactly
+        for name, src in (("a", img), ("b", twin), ("big", big)):
+            rec = reconstruct_image(pool, master.catalog.find(name).regions)
+            assert np.array_equal(rec.buf, src.buf)
+
+
+# ---------------------------------------------------------------------------
+# cross-variant hot-chunk fan-out (NodePageServer)
+# ---------------------------------------------------------------------------
+
+class TestCrossVariantFanout:
+    def test_different_variants_share_physical_hot_reads(self):
+        pool = small_pool()
+        master = PoolMaster(pool, dedup=True)
+        base = RNG.integers(1, 255, 24 * PAGE_SIZE).astype(np.uint8)
+        imgs = {f"v{i}": variant_image(base, [i], seed=i) for i in range(2)}
+        for name, img in imgs.items():
+            master.publish(name, img, list(range(24)))
+        server = NodePageServer("h", pool)
+        try:
+            sessions = []
+            for name, img in imgs.items():
+                borrow = master.catalog.borrow(name)
+                reader = SnapshotReader(borrow.regions, pool.host_view("h"),
+                                        pool.rdma)
+                reader.invalidate_cxl()
+                inst = Instance(StateImage.empty_like(img.manifest))
+                s = server.attach(name, borrow.version, reader, inst)
+                s.pre_install_hot(chunk_pages=8)
+                sessions.append((name, img, borrow, s))
+            # the base chunks were physically read once, shared across the
+            # two DIFFERENT (name, version) fan-out groups
+            assert server.chunks.stats["cross_group_hits"] > 0
+            for name, img, borrow, s in sessions:
+                s.install_all_sync()
+                assert np.array_equal(s.instance.image.buf, imgs[name].buf)
+                s.stop()
+                borrow.release()
+            assert server.chunks.drop_group(("v0", 0)) == 0  # already dropped
+        finally:
+            server.close()

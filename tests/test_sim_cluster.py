@@ -17,7 +17,7 @@ import random
 import numpy as np
 import pytest
 
-from repro.core import STATE_FREE, STATE_PUBLISHED, STATE_TOMBSTONE
+from repro.core import STATE_FREE, STATE_PUBLISHED, STATE_TOMBSTONE, SnapshotReader
 from repro.core.coherence import LeaseFallback
 from repro.sim import FlakyTier, SimCluster, SimTimeout
 
@@ -541,8 +541,109 @@ def scenario_recuration_owner_crash_mid_republish(seed):
     return c
 
 
+def scenario_dedup_owner_crash_mid_republish(seed):
+    """ISSUE 5: owner crash mid-republish of a DEDUP snapshot whose pages
+    are shared with a live sibling.  'base' and 'var' are bit-identical
+    publishes, so every stored page carries refcount 2.  The owner rebuilds
+    'var' with new content and dies between the build and the catalog
+    republish: the rebuilt pages leak (their references stay counted — I6
+    is checked after every step), the shared pages survive via 'base', and
+    a borrower of 'base' keeps reading correct bytes throughout.  A fresh
+    publish then heals the entry."""
+    c = SimCluster(n_hosts=2, seed=seed)
+    c.publish("base", 1.0, dedup=True, distinct_hot=True,
+              hot_pages=4, cold_pages=4)
+    c.publish("var", 1.0, dedup=True, distinct_hot=True,
+              hot_pages=4, cold_pages=4)
+    store = c.pool.dedup_cxl
+    assert store.logical_pages() == 2 * store.unique_pages(), \
+        "setup: every hot page should be shared exactly twice"
+    c.fault_plan.kill_after("owner", "publish:rebuilt")
+    c.add_program("owner", c.publish_program("var", 2.0, dedup=True,
+                                             distinct_hot=True,
+                                             hot_pages=4, cold_pages=4))
+    c.add_program("h1", c.borrower_program("h1", "base", attempts=3))
+    c.run(max_steps=30000)
+    assert "crashed:owner" in c.events
+    assert "borrower_done:h1:3/3" in c.events, \
+        "borrows of the sharing sibling must keep succeeding"
+    entry = c.catalog.find("var")
+    assert entry is not None and entry.state.load() == STATE_TOMBSTONE
+    assert entry.regions is None, "crashed mid-republish: no regions visible"
+    # the rebuilt-but-never-published regions leaked — still tracked
+    assert len(c.pending_regions) == 1 and c.pending_regions[0].dedup
+    # the shared pages survived var's free: base still resolves bit-exactly
+    c.add_program("h2", c.restore_program("h2", "base"))
+    c.run(max_steps=60000)
+    assert any(r["name"] == "base" for r in c.restored)
+    # recovery: a fresh publish of the crashed name through the production
+    # path (version numbering continues past the crashed update's claim)
+    rr = c.publish("var", 3.0, dedup=True, distinct_hot=True)
+    assert rr.version == 2 and rr.dedup
+    c.add_program("h3", c.borrower_program("h3", "var", attempts=2))
+    c.run(max_steps=90000)
+    assert any(e.startswith("borrower_done:h3") for e in c.events)
+    return c
+
+
+def scenario_dedup_eviction_shared_with_live_borrower(seed):
+    """ISSUE 5: the capacity clock demotes a dedup snapshot that SHARES
+    pages with a snapshot a live borrower holds.  'shared1' (6 hot pages)
+    and 'shared2' (4 hot pages) share a 4-page prefix; a borrower pins
+    'shared2' while an over-budget publish sweeps the clock.  The sweep
+    must demote 'shared1' (it has exclusive bytes), must NOT touch the
+    borrowed 'shared2' (refcount pin), and the shared prefix must survive
+    the demotion — the borrower and a later restore read exact bytes, I6
+    holding at every step."""
+    c = SimCluster(n_hosts=2, seed=seed, cxl_budget=14 * 4096)
+    c.publish("shared1", 1.0, dedup=True, distinct_hot=True,
+              hot_pages=6, cold_pages=2)
+    c.publish("shared2", 1.0, dedup=True, distinct_hot=True,
+              hot_pages=4, cold_pages=2)
+    assert c.pool.dedup_cxl.unique_pages() == 6, "prefix must be shared"
+
+    def holder(host):
+        rec = yield from c.borrow_program_steps(host, "shared2")
+        assert rec is not None
+        yield ("sleep", 0.02)           # hold across the capacity sweep
+        view = c.pool.host_view(host)
+        reader = SnapshotReader(rec.borrow.regions, view, c.pool.rdma)
+        reader.invalidate_cxl()
+        canonical = c.content["shared2"][rec.version].pages_matrix()
+        for p in reader.hot_page_indices():
+            assert np.array_equal(reader.read_page(int(p)), canonical[int(p)]), \
+                f"[seed={seed}] borrower read wrong bytes post-demotion"
+            yield "holder:read"
+        c.release(rec)
+        yield "holder:released"
+
+    c.add_program("h1", holder("h1"))
+    c.add_program("publisher", c.delayed(0.005, c.publish_program(
+        "big", 5.0, dedup=True, distinct_hot=True, hot_pages=8, cold_pages=2)))
+    c.run(max_steps=60000)
+    stats = c.master.capacity.budget.report()
+    assert stats["demotions"] >= 1, f"clock never demoted: {stats}"
+    assert "published:big:v0" in c.events
+    # the borrowed sibling was never evicted and still restores bit-exactly
+    entry = c.catalog.find("shared2")
+    assert entry.state.load() == STATE_PUBLISHED
+    assert entry.regions.n_hot == 4, "borrowed snapshot must keep its hot set"
+    c.add_program("h2", c.restore_program("h2", "shared2"))
+    c.run(max_steps=90000)
+    assert any(r["name"] == "shared2" for r in c.restored)
+    # shared1 was demoted all-cold, its exclusive pages left the CXL store;
+    # the shared prefix is still resident for shared2
+    s1 = c.catalog.find("shared1")
+    assert s1.regions.n_hot == 0, "victim should have been demoted to all-cold"
+    assert c.pool.dedup_cxl.unique_pages() == 4
+    return c
+
+
 SCENARIOS = {
     "steady_borrow_release": scenario_steady_borrow_release,
+    "dedup_owner_crash_mid_republish": scenario_dedup_owner_crash_mid_republish,
+    "dedup_eviction_shared_with_live_borrower":
+        scenario_dedup_eviction_shared_with_live_borrower,
     "drift_recuration_feedback": scenario_drift_recuration_feedback,
     "recuration_owner_crash_mid_republish":
         scenario_recuration_owner_crash_mid_republish,
@@ -584,6 +685,16 @@ def test_drift_recuration_multi_seed(offset):
     >= 3 distinct seeds."""
     scenario_drift_recuration_feedback(SEED + 101 * offset + 7)
     scenario_recuration_owner_crash_mid_republish(SEED + 101 * offset + 8)
+
+
+@pytest.mark.parametrize("offset", [0, 1, 2])
+def test_dedup_scenarios_multi_seed(offset):
+    """ISSUE 5 acceptance: the dedup crash-mid-republish and shared-page
+    eviction scenarios pass the I1–I6 invariant checks (I6 = refcount
+    conservation, checked after every sim step) across >= 3 distinct
+    seeds."""
+    scenario_dedup_owner_crash_mid_republish(SEED + 131 * offset + 11)
+    scenario_dedup_eviction_shared_with_live_borrower(SEED + 131 * offset + 12)
 
 
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
