@@ -94,6 +94,21 @@ BASELINES: Dict[str, List[KeySpec]] = {
         "criteria.i6_consistent",
         "criteria.dedup_worthwhile",
     ],
+    # fused data plane (DESIGN.md §13): the modeled keys are roofline byte-
+    # math at a canonical workload — deterministic, so drift means the kernel
+    # sequence's traffic actually changed; wall-clock keys are never gated
+    "kernel_bench.json": [
+        "modeled.publish.piecemeal_s",
+        "modeled.publish.fused_s",
+        "modeled.publish.speedup",
+        "modeled.restore.piecemeal_s",
+        "modeled.restore.fused_s",
+        "modeled.restore.speedup",
+        "criteria.bit_identical",
+        "criteria.calibration_in_sync",
+        "criteria.publish_speedup_ge_2",
+        "criteria.restore_speedup_ge_2",
+    ],
 }
 
 
@@ -166,7 +181,7 @@ def run_fresh() -> Dict[str, dict]:
     BASELINES.  (Each run() also rewrites its experiments/*.json, which is
     why baselines are read from git, not disk.)"""
     from . import (adaptive_bench, breakdown, concurrency_bench, dedup_bench,
-                   serving_bench)
+                   kernel_bench, serving_bench)
 
     return {
         "breakdown.json": breakdown.run(),
@@ -174,6 +189,7 @@ def run_fresh() -> Dict[str, dict]:
         "concurrency_bench_quick.json": concurrency_bench.run(quick=True),
         "adaptive_bench_quick.json": adaptive_bench.run(quick=True),
         "dedup_bench_quick.json": dedup_bench.run(quick=True),
+        "kernel_bench.json": kernel_bench.run(quick=True),
     }
 
 

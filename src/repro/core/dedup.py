@@ -78,6 +78,13 @@ def pallas_hash_fn(pages_matrix: np.ndarray) -> np.ndarray:
     return np.asarray(page_checksum(pages_matrix))
 
 
+# Marker consumed by the fused publish path (core/snapshot.py): the fused
+# sweep's checksum column IS this hash, so a store hashing with it can be
+# handed the precomputed values (put_pages(..., hashes=...)) and skip its
+# own streaming pass over the batch.
+pallas_hash_fn.is_poly32 = True
+
+
 class DedupStore:
     """Content-addressed, refcounted page store inside one tier.
 
@@ -119,19 +126,30 @@ class DedupStore:
         return off
 
     # -- write side -----------------------------------------------------------
-    def put_pages(self, pages_matrix: np.ndarray) -> np.ndarray:
+    def put_pages(self, pages_matrix: np.ndarray,
+                  hashes: Optional[np.ndarray] = None) -> np.ndarray:
         """Store (or reference) every row; returns int64 tier byte offsets.
 
         Hashing is vectorized over the whole batch; per-row work is dict
         lookups plus a byte-compare only on hash match.  On a mid-batch
         tier ``AllocError`` the rows already referenced by THIS call are
         released again, so a failed put leaves the store unchanged.
+
+        ``hashes`` MUST be this store's own ``hash_fn`` outputs for exactly
+        these rows (the fused publish sweep precomputes them in the same
+        pass that compacts the pages); passing foreign hashes would split
+        identical content across buckets and silently disable sharing.
         """
         mat = np.ascontiguousarray(pages_matrix).view(np.uint8)
         mat = mat.reshape(-1, PAGE_SIZE)
         if mat.shape[0] == 0:
             return np.zeros(0, dtype=np.int64)
-        hashes = np.asarray(self.hash_fn(mat))
+        if hashes is None:
+            hashes = np.asarray(self.hash_fn(mat))
+        else:
+            hashes = np.asarray(hashes)
+            assert hashes.shape[0] == mat.shape[0], \
+                f"precomputed hashes: {hashes.shape[0]} != {mat.shape[0]} rows"
         offs = np.empty(mat.shape[0], dtype=np.int64)
         with self._lock:
             done = 0

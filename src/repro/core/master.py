@@ -196,8 +196,12 @@ class CXLCapacityManager:
 class PoolMaster:
     def __init__(self, pool: HierarchicalPool, catalog: Optional[Catalog] = None,
                  clock: Optional[Clock] = None, cxl_budget: Optional[int] = None,
-                 heat=None, dedup: bool = False):
+                 heat=None, dedup: bool = False, publish_fn=None):
         self.pool = pool
+        # default fused publish sweep (kernels/snapshot_fuse): used by every
+        # publish this master drives — including re-curation rebuilds and
+        # capacity demotions — unless the call site overrides it
+        self.publish_fn = publish_fn
         self.clock = clock or getattr(pool, "clock", None) or REAL_CLOCK
         self.catalog = catalog or Catalog(clock=self.clock)
         # per-pod CXL capacity manager (None ⇒ unmanaged, paper behaviour)
@@ -232,6 +236,7 @@ class PoolMaster:
         compress_cold: bool = False,
         expect_version: Optional[int] = None,
         dedup: Optional[bool] = None,
+        publish_fn=None,
     ) -> Iterator[Tuple[str, object]]:
         """Generator form of :meth:`publish`, yielding at the owner protocol's
         phase boundaries so the deterministic simulator can interleave
@@ -253,6 +258,7 @@ class PoolMaster:
         * ``("done", regions)``        — terminal: snapshot is PUBLISHED.
         """
         dedup = self.dedup_default if dedup is None else bool(dedup)
+        publish_fn = self.publish_fn if publish_fn is None else publish_fn
         # claim the name BEFORE assigning a version or inspecting the catalog:
         # serialized publishes then get monotonic versions and concurrent
         # first-publishes of a new name cannot both take the create path
@@ -278,6 +284,7 @@ class PoolMaster:
                     version=version, metadata=metadata,
                     zero_bitmap=zero_bitmap, gather_fn=gather_fn,
                     compress_cold=compress_cold, dedup=dedup,
+                    publish_fn=publish_fn,
                 )
                 yield ("built_new", regions)
                 self.catalog.publish_new(name, regions, version)
@@ -317,6 +324,7 @@ class PoolMaster:
                 version=version, metadata=metadata,
                 zero_bitmap=zero_bitmap, gather_fn=gather_fn,
                 compress_cold=compress_cold, dedup=dedup,
+                publish_fn=publish_fn,
             )
             yield ("rebuilt", regions)
             self.catalog.republish(existing, regions, version)

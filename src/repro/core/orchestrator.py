@@ -9,6 +9,11 @@ borrow CAS fails (§3.3).
 Restores are served through the host-wide :class:`NodePageServer` by
 default — one shared RDMA engine / completion worker / prefetch pump per
 host, with hot-chunk fan-out across same-snapshot restores (DESIGN.md §10).
+``scatter_fn`` accepts any ``ScatterFn`` — the numpy oracle, the Pallas
+``page_scatter`` op, or the fused gather→checksum→scatter kernel
+(``kernels/snapshot_fuse.FusedScatter``, DESIGN.md §13); the fused form is
+additionally bound per restore to the snapshot's publish-time checksum
+table, so pre-install and fan-out installs verify content as they land.
 ``use_node_server=False`` keeps the legacy per-instance engine path (one
 private engine + completion thread per restore) for A/B comparison; that
 path registers each restore as its own stream on the host's link arbiters
@@ -147,12 +152,22 @@ class Orchestrator:
                 arbiter = tier.arbiter_for(self.host)
                 arbiter.register(key)
                 engine.link_keys.append((arbiter, key))
-        if pre_install:
-            engine.pre_install_hot()
-        engine.start_completion_handler()
-        do_prefetch = self.prefetch_cold if prefetch_cold is None else prefetch_cold
-        if do_prefetch:
-            engine.start_prefetcher(self.max_extent_pages)
+        try:
+            if pre_install:
+                engine.pre_install_hot()
+            engine.start_completion_handler()
+            do_prefetch = (self.prefetch_cold if prefetch_cold is None
+                           else prefetch_cold)
+            if do_prefetch:
+                engine.start_prefetcher(self.max_extent_pages)
+        except BaseException:
+            # failed restore (e.g. a fused-scatter checksum mismatch during
+            # pre-install) must not leak the engine session or the borrow
+            engine.stop()
+            if engine.rdma_engine is not None:
+                engine.rdma_engine.close()
+            borrow.release()
+            raise
         with self._lock:
             self.stats["warm_restores"] += 1
         return RestoredInstance(name, instance, engine, borrow, ledger)

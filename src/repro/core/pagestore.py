@@ -10,11 +10,42 @@ on page indices of this address space.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Mapping, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 PAGE_SIZE = 4096  # bytes — matches the paper's 4 KiB guest pages
+
+# zero_scan(pages_matrix uint8[N, PAGE_SIZE]) -> bool[N] (True = all-zero).
+# Pluggable backend for the publish-path zero scan: the numpy oracle by
+# default; ``set_zero_scan_backend`` swaps in kernels/zero_detect (Pallas on
+# TPU, interpret elsewhere) — parity-asserted in tests/test_fused_kernels.py.
+ZeroScanFn = Callable[[np.ndarray], np.ndarray]
+
+_zero_scan_backend: Optional[ZeroScanFn] = None
+
+
+def numpy_zero_scan(pages_matrix: np.ndarray) -> np.ndarray:
+    """CPU oracle: vectorized any() over each page row."""
+    return ~pages_matrix.any(axis=1)
+
+
+def set_zero_scan_backend(fn: Optional[ZeroScanFn]) -> Optional[ZeroScanFn]:
+    """Install a process-wide zero-scan backend (None restores the numpy
+    oracle); returns the previous backend so callers can restore it."""
+    global _zero_scan_backend
+    prev = _zero_scan_backend
+    _zero_scan_backend = fn
+    return prev
+
+
+def pallas_zero_scan(pages_matrix: np.ndarray) -> np.ndarray:
+    """kernels/zero_detect adapted to the ``ZeroScanFn`` signature (same
+    output as the oracle, asserted equal in tests)."""
+    from ..kernels.zero_detect.ops import zero_detect
+
+    u32 = pages_matrix.view(np.uint32).reshape(pages_matrix.shape[0], -1)
+    return np.asarray(zero_detect(u32, use_pallas=True, interpret=None)) != 0
 
 
 def num_pages(nbytes: int) -> int:
@@ -139,13 +170,18 @@ class StateImage:
         assert data.nbytes == PAGE_SIZE
         self.buf[idx * PAGE_SIZE : (idx + 1) * PAGE_SIZE] = data.view(np.uint8).reshape(-1)
 
-    def zero_page_bitmap(self) -> np.ndarray:
+    def zero_page_bitmap(self, backend: Optional[ZeroScanFn] = None) -> np.ndarray:
         """bool[total_pages]; True where the page content is all zero.
 
-        CPU oracle path; the TPU path is kernels/zero_detect (same output,
-        asserted equal in tests).
+        ``backend`` (or the process-wide one installed via
+        ``set_zero_scan_backend``) swaps the numpy oracle for
+        kernels/zero_detect — same output, asserted equal in tests.
         """
-        return ~self.pages_matrix().any(axis=1)
+        fn = backend or _zero_scan_backend or numpy_zero_scan
+        out = np.asarray(fn(self.pages_matrix()), dtype=bool)
+        assert out.shape == (self.total_pages,), \
+            f"zero-scan backend returned shape {out.shape}"
+        return out
 
 
 def runs_from_pages(pages: Sequence[int]) -> List[Tuple[int, int]]:

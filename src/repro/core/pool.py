@@ -341,6 +341,7 @@ class HierarchicalPool:
         cxl_cost: CostModel = CXL_COST,
         rdma_cost: CostModel = RDMA_COST,
         clock: Optional[Clock] = None,
+        dedup_hash_fn=None,
     ):
         # The pool is the one object every component of a pod shares, so it
         # carries the pod's time source: PoolMaster / FailoverNode / serving
@@ -350,11 +351,14 @@ class HierarchicalPool:
         self.rdma = MemoryTier("rdma", rdma_capacity, rdma_cost)
         # content-addressed page stores (one per tier): dedup publishes
         # route page payloads through these; the offset array then points
-        # at refcounted absolute tier offsets instead of a private region
+        # at refcounted absolute tier offsets instead of a private region.
+        # ``dedup_hash_fn`` is the stores' hash seam — pass
+        # ``dedup.pallas_hash_fn`` and the fused publish sweep's checksum
+        # column doubles as the stores' hash input (no separate hash pass).
         from .dedup import DedupStore  # local import: dedup imports pool
 
-        self.dedup_cxl = DedupStore(self.cxl)
-        self.dedup_rdma = DedupStore(self.rdma)
+        self.dedup_cxl = DedupStore(self.cxl, hash_fn=dedup_hash_fn)
+        self.dedup_rdma = DedupStore(self.rdma, hash_fn=dedup_hash_fn)
 
     def dedup_store(self, tag: int):
         if tag == TIER_CXL:

@@ -49,7 +49,10 @@ from .snapshot import SnapshotReader
 
 # scatter_fn(dest_matrix, compact, indices) -> dest_matrix; the numpy oracle
 # is a vectorized fancy-index store, the Pallas `page_scatter` op plugs in
-# behind the same signature (kernels/page_scatter).
+# behind the same signature (kernels/page_scatter), and so does the fused
+# gather→checksum→scatter kernel (kernels/snapshot_fuse.FusedScatter —
+# RestoreEngine binds it to the snapshot's publish-time checksum table so
+# every installed batch is verified inside the installing kernel call).
 ScatterFn = Callable[[np.ndarray, np.ndarray, np.ndarray], np.ndarray]
 
 
@@ -308,6 +311,16 @@ class RestoreEngine:
         self.reader = reader
         self.instance = instance
         if scatter_fn is not None:
+            # fused restore (kernels/snapshot_fuse): bind the snapshot's
+            # publish-time checksum table (when the publish recorded one) so
+            # the scatter that installs each batch also verifies it —
+            # covers pre_install_hot, install_all_sync, demand/prefetch
+            # installs AND the NodePageServer hot-chunk fan-out path, all of
+            # which land in Instance.uffd_copy_batch
+            table = (reader.page_checksums()
+                     if hasattr(scatter_fn, "bind_checksums") else None)
+            if table is not None:
+                scatter_fn = scatter_fn.bind_checksums(table)
             self.instance.scatter_fn = scatter_fn
         if clock is not None:
             # route the engine's clock to the instance too: page waits
@@ -352,6 +365,11 @@ class RestoreEngine:
         address space with one vectorized `uffd_copy_batch`, which charges
         one uffd.copy ioctl per guest-contiguous run.  ``use_batch=False``
         keeps the strictly page-at-a-time path for modeled-time comparison.
+
+        With a fused scatter_fn (kernels/snapshot_fuse) each chunk install
+        is one gather→checksum→scatter kernel whose input stream pipelines
+        against the previous chunk's scatter (double-buffered grid), and is
+        verified against publish-time checksums when the reader carries them.
         """
         if not use_batch:
             hot = self.reader.hot_page_indices()

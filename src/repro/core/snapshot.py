@@ -115,6 +115,13 @@ class PageClasses:
         }
 
 
+def _ws_bool(image: StateImage, working_set: Sequence[int]) -> np.ndarray:
+    ws = np.zeros(image.total_pages, dtype=bool)
+    if len(working_set):
+        ws[np.asarray(sorted(set(working_set)), dtype=np.int64)] = True
+    return ws
+
+
 def classify_pages(
     image: StateImage,
     working_set: Sequence[int],
@@ -127,9 +134,7 @@ def classify_pages(
     """
     if zero_bitmap is None:
         zero_bitmap = image.zero_page_bitmap()
-    ws = np.zeros(image.total_pages, dtype=bool)
-    if len(working_set):
-        ws[np.asarray(sorted(set(working_set)), dtype=np.int64)] = True
+    ws = _ws_bool(image, working_set)
     nonzero = ~zero_bitmap
     hot = np.nonzero(nonzero & ws)[0].astype(np.int64)
     cold = np.nonzero(nonzero & ~ws)[0].astype(np.int64)
@@ -229,6 +234,22 @@ def _compress_cold(cold_pages: np.ndarray):
     return b"".join(chunks), lengths
 
 
+def _run_publish_fn(publish_fn, image: StateImage, working_set: Sequence[int]):
+    """One fused sweep (kernels/snapshot_fuse) in place of the piecemeal
+    zero-scan → hash → gather×2 pipeline: returns ``(classes, hot_mat u8,
+    cold_mat u8, checksums uint32[total_pages])``.  The compacted matrices
+    come out of the sweep in ascending page order — exactly ``mat[hot]`` /
+    ``mat[cold]`` — so downstream layout logic is unchanged."""
+    ws = _ws_bool(image, working_set)
+    res = publish_fn(image.pages_matrix(), ws)
+    zero_bitmap = np.asarray(res.zero_bitmap, dtype=bool)
+    nonzero = ~zero_bitmap
+    hot = np.nonzero(nonzero & ws)[0].astype(np.int64)
+    cold = np.nonzero(nonzero & ~ws)[0].astype(np.int64)
+    classes = PageClasses(zero_bitmap, hot, cold)
+    return classes, res.hot, res.cold, np.asarray(res.checksums, np.uint32)
+
+
 def build_snapshot(
     pool: HierarchicalPool,
     image: StateImage,
@@ -240,11 +261,19 @@ def build_snapshot(
     gather_fn=None,
     compress_cold: bool = False,
     dedup: bool = False,
+    publish_fn=None,
 ) -> SnapshotRegions:
     """Write one snapshot into the pool tiers; returns its region record.
 
     ``gather_fn(pages_matrix, page_indices) -> compact`` lets callers swap in
     the Pallas ``page_gather`` kernel; default is the numpy oracle.
+    ``publish_fn(pages_matrix, ws_bool) -> FusedPublishResult`` goes further:
+    the fused single-sweep kernel (``kernels/snapshot_fuse``) replaces the
+    zero scan, the dedup hash AND both gathers in one pass; its per-page
+    checksum column is recorded on the returned regions (in-memory
+    ``page_checksums`` attribute, guest-page-indexed) so restores can verify
+    installed pages against publish-time content.  When set it supersedes
+    ``zero_bitmap``/``gather_fn``.
     ``compress_cold`` stores the RDMA tier zstd-compressed per page.
     ``dedup`` routes page payloads through the pool's content-addressed
     stores instead of private data regions (offset-array slots then hold
@@ -254,15 +283,27 @@ def build_snapshot(
         return _build_snapshot_dedup(pool, image, working_set, name,
                                      version=version, metadata=metadata,
                                      zero_bitmap=zero_bitmap,
-                                     gather_fn=gather_fn)
+                                     gather_fn=gather_fn,
+                                     publish_fn=publish_fn)
     compress_cold = compress_cold and _zstd is not None
-    classes = classify_pages(image, working_set, zero_bitmap)
-    hot, cold = classes.hot_pages, classes.cold_pages
-
-    gather = gather_fn or (lambda mat, idx: mat[idx])
-    mat = image.pages_matrix()
-    hot_data = gather(mat, hot).reshape(-1).view(np.uint8) if hot.size else np.zeros(0, np.uint8)
-    cold_mat = np.asarray(gather(mat, cold)) if cold.size else np.zeros((0, PAGE_SIZE), np.uint8)
+    checksums = None
+    if publish_fn is not None:
+        classes, hot_mat, cold_mat, checksums = _run_publish_fn(
+            publish_fn, image, working_set)
+        hot, cold = classes.hot_pages, classes.cold_pages
+        hot_data = (hot_mat.reshape(-1).view(np.uint8)
+                    if hot.size else np.zeros(0, np.uint8))
+        cold_mat = (cold_mat if cold.size
+                    else np.zeros((0, PAGE_SIZE), np.uint8))
+    else:
+        classes = classify_pages(image, working_set, zero_bitmap)
+        hot, cold = classes.hot_pages, classes.cold_pages
+        gather = gather_fn or (lambda mat, idx: mat[idx])
+        mat = image.pages_matrix()
+        hot_data = (gather(mat, hot).reshape(-1).view(np.uint8)
+                    if hot.size else np.zeros(0, np.uint8))
+        cold_mat = (np.asarray(gather(mat, cold))
+                    if cold.size else np.zeros((0, PAGE_SIZE), np.uint8))
     cold_raw_bytes = cold_mat.size
 
     ci = np.zeros(0, dtype=np.uint32)
@@ -323,6 +364,11 @@ def build_snapshot(
         pool.cxl.write(regions.hot_off, hot_data)
     if cold_data.nbytes:
         pool.rdma.write(rdma_off, cold_data)
+    if checksums is not None:
+        # advisory in-memory integrity record (NOT serialized — to_dict /
+        # from_dict round-trips drop it): restores holding the same regions
+        # object verify installed pages against publish-time content
+        regions.page_checksums = checksums
     return regions
 
 
@@ -335,32 +381,52 @@ def _build_snapshot_dedup(
     metadata: Optional[dict] = None,
     zero_bitmap: Optional[np.ndarray] = None,
     gather_fn=None,
+    publish_fn=None,
 ) -> SnapshotRegions:
     """Content-addressed build: page payloads go through the per-tier
     DedupStores (one refcount per offset-array slot); only machine state and
     the offset array occupy a private, contiguous CXL region.  A mid-build
     ``AllocError`` rolls every reference taken by this build back, so a
-    failed publish leaves both stores and the tiers unchanged."""
-    classes = classify_pages(image, working_set, zero_bitmap)
-    hot, cold = classes.hot_pages, classes.cold_pages
+    failed publish leaves both stores and the tiers unchanged.
 
-    gather = gather_fn or (lambda mat, idx: mat[idx])
-    mat = image.pages_matrix()
-    hot_mat = (np.asarray(gather(mat, hot)).view(np.uint8).reshape(-1, PAGE_SIZE)
-               if hot.size else np.zeros((0, PAGE_SIZE), np.uint8))
-    cold_mat = (np.asarray(gather(mat, cold)).view(np.uint8).reshape(-1, PAGE_SIZE)
-                if cold.size else np.zeros((0, PAGE_SIZE), np.uint8))
+    With ``publish_fn`` the fused sweep's checksum column feeds the stores
+    through the ``hash_fn`` seam: when a store's hash_fn is the polynomial
+    checksum (``is_poly32``), ``put_pages`` receives the precomputed hashes
+    and skips its own hashing pass entirely."""
+    checksums = None
+    if publish_fn is not None:
+        classes, hot_mat, cold_mat, checksums = _run_publish_fn(
+            publish_fn, image, working_set)
+        hot, cold = classes.hot_pages, classes.cold_pages
+    else:
+        classes = classify_pages(image, working_set, zero_bitmap)
+        hot, cold = classes.hot_pages, classes.cold_pages
+        gather = gather_fn or (lambda mat, idx: mat[idx])
+        mat = image.pages_matrix()
+        hot_mat = (np.asarray(gather(mat, hot)).view(np.uint8).reshape(-1, PAGE_SIZE)
+                   if hot.size else np.zeros((0, PAGE_SIZE), np.uint8))
+        cold_mat = (np.asarray(gather(mat, cold)).view(np.uint8).reshape(-1, PAGE_SIZE)
+                    if cold.size else np.zeros((0, PAGE_SIZE), np.uint8))
 
     ms = _serialize_machine_state(image.manifest, metadata or {})
     ms_size = _align_pages(len(ms))
     oa_size = _align_pages(image.total_pages * 8)
     cxl_size = ms_size + oa_size
 
+    def _hashes_for(store, idx):
+        """Fused checksums reused as the store's hash input — only when the
+        store itself hashes with the same 32-bit polynomial checksum."""
+        if checksums is None or not getattr(store.hash_fn, "is_poly32", False):
+            return None
+        return checksums[idx]
+
     cxl_off = pool.cxl.alloc(cxl_size)
     hot_offs = np.zeros(0, dtype=np.int64)
     try:
-        hot_offs = pool.dedup_cxl.put_pages(hot_mat)
-        cold_offs = pool.dedup_rdma.put_pages(cold_mat)
+        hot_offs = pool.dedup_cxl.put_pages(
+            hot_mat, hashes=_hashes_for(pool.dedup_cxl, hot))
+        cold_offs = pool.dedup_rdma.put_pages(
+            cold_mat, hashes=_hashes_for(pool.dedup_rdma, cold))
     except Exception:
         if hot_offs.size:
             pool.dedup_cxl.release_offsets(hot_offs)
@@ -387,6 +453,8 @@ def _build_snapshot_dedup(
     )
     pool.cxl.write(regions.ms_off, np.frombuffer(ms, dtype=np.uint8))
     pool.cxl.write(regions.oa_off, oa.view(np.uint8))
+    if checksums is not None:
+        regions.page_checksums = checksums
     return regions
 
 
@@ -621,6 +689,14 @@ class SnapshotReader:
         self._hot_runs: Optional[np.ndarray] = None
         self._cold_runs: Optional[np.ndarray] = None
         self._zero_runs: Optional[np.ndarray] = None
+
+    def page_checksums(self) -> Optional[np.ndarray]:
+        """Publish-time per-page checksum table (guest-page-indexed uint32)
+        when the snapshot was built through the fused publish sweep; None
+        otherwise.  Advisory and in-memory only — a rehydrated regions
+        record (from_dict) has no table and restores skip verification."""
+        cs = getattr(self.regions, "page_checksums", None)
+        return None if cs is None else np.asarray(cs, dtype=np.uint32)
 
     # -- protocol hook ------------------------------------------------------
     def invalidate_cxl(self) -> None:

@@ -7,6 +7,11 @@ bandwidth-bound walks over sharded state — DESIGN.md §7):
   - page_scatter   : bulk pre-install into the instance image (§3.4)
   - page_checksum  : per-page polynomial hash for dedup (§3.6)
 
+Fused data plane (DESIGN.md §13) — the piecemeal sweeps above, one pass each:
+  - fused_publish  : zero bitmap + checksum/dedup hash + hot/cold compaction
+  - fused_restore  : gather-from-chunk → checksum-verify → scatter (FusedScatter
+                     adapts it to the serving layer's ScatterFn seam)
+
 Model hot-spot:
   - flash_attention: blocked online-softmax GQA attention
 
@@ -20,5 +25,16 @@ from .page_gather.ops import page_gather
 from .page_scatter.ops import page_scatter
 from .page_checksum.ops import page_checksum
 from .flash_attention.ops import flash_attention
+from .snapshot_fuse.ops import (
+    FusedPublishResult,
+    FusedScatter,
+    fused_publish,
+    fused_restore,
+    make_fused_publish_fn,
+)
 
-__all__ = ["zero_detect", "page_gather", "page_scatter", "page_checksum", "flash_attention"]
+__all__ = [
+    "zero_detect", "page_gather", "page_scatter", "page_checksum",
+    "flash_attention", "fused_publish", "fused_restore", "FusedScatter",
+    "FusedPublishResult", "make_fused_publish_fn",
+]

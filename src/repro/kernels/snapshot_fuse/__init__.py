@@ -1,0 +1,15 @@
+from .ops import (
+    FusedPublishResult,
+    FusedScatter,
+    fused_publish,
+    fused_restore,
+    make_fused_publish_fn,
+)
+
+__all__ = [
+    "FusedPublishResult",
+    "FusedScatter",
+    "fused_publish",
+    "fused_restore",
+    "make_fused_publish_fn",
+]

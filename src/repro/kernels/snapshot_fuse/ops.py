@@ -1,0 +1,199 @@
+"""Dispatch wrappers for the fused snapshot data plane.
+
+``fused_publish``   — one sweep: zero bitmap + poly checksum/dedup hash +
+                      hot/cold compaction.  Plugs into ``build_snapshot``
+                      via the ``publish_fn`` seam (``make_fused_publish_fn``).
+``fused_restore``   — one kernel: gather-from-chunk → checksum-verify →
+                      scatter-into-guest-frame.
+``FusedScatter``    — ``fused_restore`` adapted to the serving layer's
+                      ``ScatterFn`` signature ``(dest, compact, indices) ->
+                      dest``; optionally bound to a snapshot's publish-time
+                      checksum table, in which case every installed page is
+                      verified in the same kernel invocation that installs it.
+
+CPU fallback is the numpy oracle (in-place, zero-copy for the serving path);
+``use_pallas=True`` with ``interpret=True`` runs the real kernels off-TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..page_checksum.ref import poly_weights
+from .kernel import fused_publish_pallas, fused_restore_pallas
+from .ref import fused_publish_ref, fused_restore_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+class ChecksumMismatchError(RuntimeError):
+    """A restored page's checksum disagreed with the publish-time record."""
+
+    def __init__(self, pages: np.ndarray):
+        self.pages = np.asarray(pages)
+        super().__init__(
+            f"checksum mismatch on {self.pages.size} restored page(s): "
+            f"{self.pages[:8].tolist()}{'...' if self.pages.size > 8 else ''}")
+
+
+@dataclasses.dataclass
+class FusedPublishResult:
+    """One publish sweep's outputs, guest-page order throughout."""
+
+    zero_bitmap: np.ndarray   # bool[N]
+    checksums: np.ndarray     # uint32[N] poly hash (== pallas_hash_fn output)
+    hot: np.ndarray           # uint8[n_hot, page_bytes], ascending page order
+    cold: np.ndarray          # uint8[n_cold, page_bytes], ascending page order
+
+
+def _as_u32(pages_bytes: np.ndarray) -> np.ndarray:
+    arr = np.ascontiguousarray(pages_bytes)
+    if arr.dtype != np.uint8:
+        arr = arr.view(np.uint8)
+    lanes = arr.shape[1] // 4 if arr.ndim == 2 else 0
+    return arr.view(np.uint32).reshape(arr.shape[0], lanes)
+
+
+def fused_publish(pages_bytes: np.ndarray, ws_mask: np.ndarray, *,
+                  block_pages: int = 256, use_pallas: Optional[bool] = None,
+                  interpret: Optional[bool] = None) -> FusedPublishResult:
+    """pages_bytes: (N, page_bytes) uint8; ws_mask: bool[N] working set."""
+    u32 = _as_u32(pages_bytes)
+    n, e = u32.shape
+    page_bytes = e * 4
+    ws = np.asarray(ws_mask, dtype=bool)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if n == 0 or not use_pallas:
+        zero, csum, hot, cold = fused_publish_ref(u32, ws)
+        return FusedPublishResult(zero, csum,
+                                  hot.view(np.uint8), cold.view(np.uint8))
+    if interpret is None:
+        interpret = not _on_tpu()
+    pad = (-n) % block_pages
+    u32_p, ws_p = u32, ws
+    if pad:
+        # zero filler: padded rows read as zero pages, so they are excluded
+        # from both compactions; the bitmap/checksum tails are sliced off
+        u32_p = np.concatenate([u32, np.zeros((pad, e), np.uint32)], axis=0)
+        ws_p = np.concatenate([ws, np.zeros(pad, bool)])
+    zero_i32, csum, hot, cold, counts = fused_publish_pallas(
+        jnp.asarray(u32_p), jnp.asarray(ws_p.astype(np.int32)),
+        poly_weights(e), block_pages=block_pages, interpret=interpret)
+    counts = np.asarray(counts)
+    n_hot, n_cold = int(counts[0]), int(counts[1])
+    result = FusedPublishResult(
+        np.asarray(zero_i32[:n]) != 0,
+        np.asarray(csum[:n]),
+        np.asarray(hot[:n_hot]).view(np.uint8).reshape(n_hot, page_bytes),
+        np.asarray(cold[:n_cold]).view(np.uint8).reshape(n_cold, page_bytes),
+    )
+    nz = ~result.zero_bitmap
+    assert n_hot == int(np.count_nonzero(nz & ws)), "hot count drifted"
+    assert n_cold == int(np.count_nonzero(nz & ~ws)), "cold count drifted"
+    return result
+
+
+# build_snapshot's publish_fn seam: (pages_matrix uint8[N, PAGE_SIZE],
+# ws bool[N]) -> FusedPublishResult
+PublishFn = Callable[[np.ndarray, np.ndarray], FusedPublishResult]
+
+
+def make_fused_publish_fn(*, block_pages: int = 256,
+                          use_pallas: Optional[bool] = None,
+                          interpret: Optional[bool] = None) -> PublishFn:
+    def publish_fn(pages_matrix: np.ndarray, ws: np.ndarray) -> FusedPublishResult:
+        return fused_publish(pages_matrix, ws, block_pages=block_pages,
+                             use_pallas=use_pallas, interpret=interpret)
+
+    return publish_fn
+
+
+def fused_restore(dest: np.ndarray, compact: np.ndarray, indices: np.ndarray,
+                  *, src_indices: Optional[np.ndarray] = None,
+                  expected_csums: Optional[np.ndarray] = None,
+                  use_pallas: Optional[bool] = None,
+                  interpret: Optional[bool] = None):
+    """Install ``compact[src_indices[i]]`` at ``dest[indices[i]]`` and return
+    ``(dest', csums uint32[M])``; raises :class:`ChecksumMismatchError` when
+    ``expected_csums`` (aligned with ``indices``) disagree.  The CPU path
+    updates ``dest`` in place and returns the same object."""
+    indices = np.asarray(indices, dtype=np.int32)
+    m = indices.shape[0]
+    if src_indices is None:
+        src_indices = np.arange(m, dtype=np.int32)
+    else:
+        src_indices = np.asarray(src_indices, dtype=np.int32)
+    if m == 0:
+        return dest, np.zeros(0, np.uint32)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        dest_u32 = _as_u32(dest) if isinstance(dest, np.ndarray) else _as_u32(np.asarray(dest))
+        out_u32, csums = fused_restore_ref(dest_u32, _as_u32(compact),
+                                           src_indices, indices)
+        out = dest if isinstance(dest, np.ndarray) else out_u32.view(np.uint8)
+    else:
+        if interpret is None:
+            interpret = not _on_tpu()
+        e = _as_u32(compact).shape[1]
+        out_u32, csums = fused_restore_pallas(
+            jnp.asarray(_as_u32(np.asarray(dest))), jnp.asarray(_as_u32(compact)),
+            jnp.asarray(src_indices), jnp.asarray(indices),
+            poly_weights(e), interpret=interpret)
+        out = np.asarray(out_u32).view(np.uint8).reshape(np.asarray(dest).shape)
+        csums = np.asarray(csums)
+    if expected_csums is not None:
+        bad = np.asarray(csums) != np.asarray(expected_csums, dtype=np.uint32)
+        if bad.any():
+            raise ChecksumMismatchError(indices[bad])
+    return out, np.asarray(csums)
+
+
+class FusedScatter:
+    """``ScatterFn``-shaped adapter over :func:`fused_restore`.
+
+    Drop-in for the serving layer's scatter seam (``Instance``,
+    ``RestoreEngine``, ``NodePageServer.attach``, ``Orchestrator``): the
+    call signature stays ``(dest, compact, indices) -> dest``.  When bound
+    to a snapshot's guest-indexed publish-time checksum table
+    (:meth:`bind_checksums` — ``RestoreEngine.__init__`` does this when the
+    reader's regions carry one), every batch is verified against
+    ``table[indices]`` inside the same fused invocation that installs it.
+    Bound copies share the template's ``stats`` dict so fan-out totals stay
+    observable in one place.
+    """
+
+    def __init__(self, *, use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 expected: Optional[np.ndarray] = None,
+                 stats: Optional[dict] = None):
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.expected = None if expected is None else np.asarray(expected, np.uint32)
+        self.stats = stats if stats is not None else {
+            "batches": 0, "pages": 0, "pages_verified": 0}
+
+    def bind_checksums(self, table: np.ndarray) -> "FusedScatter":
+        return FusedScatter(use_pallas=self.use_pallas, interpret=self.interpret,
+                            expected=table, stats=self.stats)
+
+    def __call__(self, dest: np.ndarray, compact: np.ndarray,
+                 indices: np.ndarray) -> np.ndarray:
+        idx = np.asarray(indices)
+        exp = self.expected[idx] if self.expected is not None else None
+        out, _csums = fused_restore(dest, compact, idx, expected_csums=exp,
+                                    use_pallas=self.use_pallas,
+                                    interpret=self.interpret)
+        self.stats["batches"] += 1
+        self.stats["pages"] += int(idx.size)
+        if exp is not None:
+            self.stats["pages_verified"] += int(idx.size)
+        return out

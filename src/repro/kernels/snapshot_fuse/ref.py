@@ -1,0 +1,47 @@
+"""Numpy oracles for the fused snapshot data plane.
+
+These are the A/B references the fused kernels must match bit-for-bit: the
+publish oracle is literally the piecemeal pipeline (zero scan → poly
+checksum → two fancy-index gathers), the restore oracle the piecemeal
+gather → checksum → scatter.  The checksum is the same polynomial rolling
+hash as ``kernels/page_checksum`` (shared weights), so a fused publish's
+checksum column doubles as the dedup hash behind ``DedupStore``'s
+``hash_fn`` seam.
+"""
+
+import numpy as np
+
+from ..page_checksum.ref import poly_weights
+
+
+def checksum_u32_ref(pages_u32: np.ndarray, weights: np.ndarray) -> np.ndarray:
+    """uint32[N] polynomial checksum over u32 lanes (numpy, wrap-around)."""
+    with np.errstate(over="ignore"):
+        acc = np.zeros(pages_u32.shape[0], dtype=np.uint32)
+        w = np.asarray(weights, dtype=np.uint32)
+        for j in range(pages_u32.shape[1]):
+            acc += pages_u32[:, j] * w[j]
+    return acc
+
+
+def fused_publish_ref(pages_u32: np.ndarray, ws_mask: np.ndarray):
+    """The piecemeal sequence, as one function: returns
+    ``(zero_bitmap bool[N], csum uint32[N], hot (H, E), cold (C, E))``
+    with hot/cold compacted in ascending page order."""
+    pages_u32 = np.asarray(pages_u32)
+    nz = pages_u32.any(axis=1)
+    csum = checksum_u32_ref(pages_u32, np.asarray(poly_weights(pages_u32.shape[1])))
+    ws = np.asarray(ws_mask, dtype=bool)
+    hot_idx = np.nonzero(nz & ws)[0]
+    cold_idx = np.nonzero(nz & ~ws)[0]
+    return ~nz, csum, pages_u32[hot_idx], pages_u32[cold_idx]
+
+
+def fused_restore_ref(dest_u32: np.ndarray, chunk_u32: np.ndarray,
+                      src_idx: np.ndarray, dst_idx: np.ndarray):
+    """In-place gather → checksum → scatter; returns ``(dest, csum[M])``."""
+    dest_u32 = np.asarray(dest_u32)
+    rows = np.asarray(chunk_u32)[np.asarray(src_idx, dtype=np.int64)]
+    csum = checksum_u32_ref(rows, np.asarray(poly_weights(rows.shape[1])))
+    dest_u32[np.asarray(dst_idx, dtype=np.int64)] = rows
+    return dest_u32, csum

@@ -122,6 +122,37 @@ class RooflineTerms:
         }
 
 
+def movement_roofline(name: str, bytes_read: float, bytes_written: float,
+                      flops: float = 0.0, bw: float = HBM_BW) -> dict:
+    """Roofline terms for a data-movement kernel (the snapshot data plane).
+
+    The snapshot sweeps (zero-detect, checksum, gather/scatter, and their
+    fused forms — DESIGN.md §13) do O(1) integer math per byte streamed, so
+    on the modeled TPU they sit on the memory roof: bound time is total
+    HBM traffic / ``bw``.  ``benchmarks/kernel_bench.py`` feeds each op's
+    *actual* per-invocation traffic (counted from its real input/output
+    shapes, so an accidental extra pass shows up here and in the CI gate)
+    through this helper to get deterministic modeled times and the derived
+    per-page constants committed to ``experiments/kernel_calibration.json``.
+    """
+    total = float(bytes_read) + float(bytes_written)
+    memory_s = total / bw
+    compute_s = float(flops) / PEAK_FLOPS
+    bound_s = max(memory_s, compute_s)
+    return {
+        "name": name,
+        "bytes_read": float(bytes_read),
+        "bytes_written": float(bytes_written),
+        "bytes_total": total,
+        "flops": float(flops),
+        "memory_s": memory_s,
+        "compute_s": compute_s,
+        "bound_s": bound_s,
+        "bound_GBps": (total / bound_s / 1e9) if bound_s else 0.0,
+        "dominant": "compute" if compute_s > memory_s else "memory",
+    }
+
+
 def analyze(compiled, chips: int, model_flops: float = 0.0,
             hlo_text: Optional[str] = None) -> RooflineTerms:
     """Terms come from the trip-count-aware HLO analyzer (hlo_analyzer.py):

@@ -24,6 +24,8 @@ an optional ``scale`` that linearly extrapolates page counts to the paper's
 from __future__ import annotations
 
 import dataclasses
+import json
+from pathlib import Path
 from typing import Dict, Optional
 
 import numpy as np
@@ -333,11 +335,39 @@ def modeled_concurrent_restore_s(reader, conc: int, max_extent_pages: int = 64,
 
 
 # -- content-addressed (dedup) publish/restore economics ---------------------
-# Hashing throughput of the publish-time content hash: both the vectorized
-# FNV-1a u64 fold and the page_checksum polynomial hash are memory-bound
-# streaming passes over the page (DESIGN.md §12).
-CHECKSUM_BW = 20e9
+# Hashing throughput of the publish-time content hash.  Hand-set at 20 GB/s
+# through PR 5; since the fused publish sweep (kernels/snapshot_fuse,
+# DESIGN.md §13) computes the hash in-register while the page streams through
+# VMEM, the per-page hash cost is one streaming pass at the sweep's roofline
+# bandwidth.  The value is sourced from the committed calibration artifact
+# written by ``benchmarks/kernel_bench.py --write-calibration`` — a file read
+# at import, never re-measured, so modeled numbers stay deterministic per
+# commit; the hand-set defaults below apply only when the artifact is absent.
+_CALIBRATION_PATH = (Path(__file__).resolve().parents[3]
+                     / "experiments" / "kernel_calibration.json")
+_CALIBRATION_DEFAULTS = {
+    "checksum_bw_Bps": 20e9,              # pre-calibration hand-set value
+    "publish_sweep_page_s": 2 * PAGE_SIZE / 20e9,
+    "preinstall_page_s": 2 * PAGE_SIZE / 20e9,
+}
+
+
+def _load_calibration() -> Dict[str, float]:
+    try:
+        cal = json.loads(_CALIBRATION_PATH.read_text())
+        consts = cal.get("constants", {})
+    except (OSError, ValueError):
+        consts = {}
+    return {k: float(consts.get(k, v)) for k, v in _CALIBRATION_DEFAULTS.items()}
+
+
+CALIBRATION = _load_calibration()
+CHECKSUM_BW = CALIBRATION["checksum_bw_Bps"]
 CHECKSUM_PER_PAGE_S = PAGE_SIZE / CHECKSUM_BW
+# fused data-plane per-page sweep times ("and friends"): publish = one-pass
+# zero-scan + checksum + compaction; pre-install = gather + verify + scatter
+PUBLISH_SWEEP_PAGE_S = CALIBRATION["publish_sweep_page_s"]
+PREINSTALL_PAGE_S = CALIBRATION["preinstall_page_s"]
 
 
 def dedup_publish_cost_s(n_hot: int, n_cold: int,

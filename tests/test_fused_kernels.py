@@ -1,0 +1,274 @@
+"""Fused snapshot data plane (kernels/snapshot_fuse, DESIGN.md §13).
+
+Interpret-mode bit-identity of the fused publish sweep and the fused
+gather→verify→scatter restore against both the piecemeal Pallas ops and the
+numpy oracles — odd page counts, tail chunks, all-zero and all-hot layouts,
+the dedup ``hash_fn`` seam, the pluggable zero-scan backend, and the
+publish→restore checksum-verification loop end-to-end.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import HierarchicalPool
+from repro.core.coherence import Catalog
+from repro.core.dedup import pallas_hash_fn
+from repro.core.master import PoolMaster
+from repro.core.orchestrator import Orchestrator
+from repro.core.pagestore import (
+    PAGE_SIZE,
+    StateImage,
+    numpy_zero_scan,
+    pallas_zero_scan,
+    set_zero_scan_backend,
+)
+from repro.core.snapshot import SnapshotReader, build_snapshot
+from repro.kernels import (
+    FusedScatter,
+    fused_publish,
+    fused_restore,
+    make_fused_publish_fn,
+    page_checksum,
+    page_gather,
+    page_scatter,
+    zero_detect,
+)
+from repro.kernels.snapshot_fuse.ops import ChecksumMismatchError
+
+INTERP = {"use_pallas": True, "interpret": True}
+
+
+def _pages(n, seed=0, zero_every=3):
+    rng = np.random.default_rng(seed)
+    pages = rng.integers(0, 256, size=(n, PAGE_SIZE), dtype=np.uint8)
+    if zero_every:
+        pages[::zero_every] = 0
+    ws = np.zeros(n, dtype=bool)
+    if n:
+        ws[rng.choice(n, size=max(1, n // 2), replace=False)] = True
+    return pages, ws
+
+
+class TestFusedPublish:
+    @pytest.mark.parametrize("n", [1, 7, 8, 37, 64])
+    def test_interpret_matches_oracle(self, n):
+        """Odd counts and block tails (block_pages=8) vs the numpy ref."""
+        pages, ws = _pages(n, seed=n)
+        got = fused_publish(pages, ws, block_pages=8, **INTERP)
+        want = fused_publish(pages, ws, use_pallas=False)
+        np.testing.assert_array_equal(got.zero_bitmap, want.zero_bitmap)
+        np.testing.assert_array_equal(got.checksums, want.checksums)
+        np.testing.assert_array_equal(got.hot, want.hot)
+        np.testing.assert_array_equal(got.cold, want.cold)
+
+    def test_matches_piecemeal_ops(self):
+        """The fused sweep ≡ zero_detect + page_checksum + 2× page_gather +
+        dedup hash, run as separate interpret-mode kernels."""
+        pages, ws = _pages(37, seed=2)
+        u32 = pages.view(np.uint32).reshape(37, -1)
+        fp = fused_publish(pages, ws, block_pages=8, **INTERP)
+        zb = np.asarray(zero_detect(u32, block_pages=8, **INTERP)) != 0
+        csum = np.asarray(page_checksum(pages, block_pages=8, **INTERP))
+        hot_idx = np.flatnonzero(~zb & ws).astype(np.int32)
+        cold_idx = np.flatnonzero(~zb & ~ws).astype(np.int32)
+        hot = np.asarray(page_gather(u32, hot_idx, **INTERP))
+        cold = np.asarray(page_gather(u32, cold_idx, **INTERP))
+        np.testing.assert_array_equal(fp.zero_bitmap, zb)
+        np.testing.assert_array_equal(fp.checksums, csum)
+        np.testing.assert_array_equal(
+            fp.hot.view(np.uint32).reshape(hot.shape), hot)
+        np.testing.assert_array_equal(
+            fp.cold.view(np.uint32).reshape(cold.shape), cold)
+
+    def test_all_zero_layout(self):
+        pages = np.zeros((16, PAGE_SIZE), np.uint8)
+        ws = np.ones(16, bool)
+        fp = fused_publish(pages, ws, block_pages=8, **INTERP)
+        assert fp.zero_bitmap.all()
+        assert fp.hot.shape[0] == 0 and fp.cold.shape[0] == 0
+
+    def test_all_hot_layout(self):
+        pages, _ = _pages(24, seed=3, zero_every=0)
+        ws = np.ones(24, bool)
+        fp = fused_publish(pages, ws, block_pages=8, **INTERP)
+        assert not fp.zero_bitmap.any() and fp.cold.shape[0] == 0
+        np.testing.assert_array_equal(fp.hot, pages)
+
+    def test_empty(self):
+        fp = fused_publish(np.zeros((0, PAGE_SIZE), np.uint8),
+                           np.zeros(0, bool), **INTERP)
+        assert fp.zero_bitmap.shape == (0,) and fp.hot.shape[0] == 0
+
+    def test_dedup_hash_seam(self):
+        """The fused checksum column IS the dedup hash: bit-equal to
+        ``pallas_hash_fn`` (the store hash marked ``is_poly32``), so
+        ``put_pages(..., hashes=checksums[idx])`` lands in the same buckets
+        the store would compute itself."""
+        pages, ws = _pages(21, seed=4)
+        fp = fused_publish(pages, ws, block_pages=8, **INTERP)
+        assert getattr(pallas_hash_fn, "is_poly32", False)
+        np.testing.assert_array_equal(fp.checksums,
+                                      np.asarray(pallas_hash_fn(pages)))
+
+
+class TestFusedRestore:
+    @pytest.mark.parametrize("n,m", [(16, 4), (37, 21), (64, 64)])
+    def test_interpret_matches_piecemeal(self, n, m):
+        """gather → checksum → scatter as three interpret-mode kernels vs
+        the one fused kernel, including tail chunks and permuted sources."""
+        rng = np.random.default_rng(n * m)
+        chunk = rng.integers(0, 256, size=(m, PAGE_SIZE), dtype=np.uint8)
+        chunk_u32 = chunk.view(np.uint32).reshape(m, -1)
+        dst = np.sort(rng.choice(n, size=m, replace=False)).astype(np.int32)
+        src = rng.permutation(m).astype(np.int32)
+        dest = np.zeros((n, PAGE_SIZE), np.uint8)
+
+        g = np.asarray(page_gather(chunk_u32, src, **INTERP))
+        cs = np.asarray(page_checksum(g, block_pages=8, **INTERP))
+        want = np.asarray(page_scatter(
+            np.zeros((n, PAGE_SIZE // 4), np.uint32), g, dst, **INTERP))
+
+        out, csums = fused_restore(dest, chunk, dst, src_indices=src, **INTERP)
+        np.testing.assert_array_equal(
+            np.asarray(out).reshape(n, PAGE_SIZE).view(np.uint32), want)
+        np.testing.assert_array_equal(csums, cs)
+
+    def test_cpu_path_in_place(self):
+        chunk, _ = _pages(6, seed=5, zero_every=0)
+        dest = np.zeros((12, PAGE_SIZE), np.uint8)
+        idx = np.array([1, 3, 5, 7, 9, 11], np.int32)
+        out, _ = fused_restore(dest, chunk, idx, use_pallas=False)
+        assert out is dest
+        np.testing.assert_array_equal(dest[idx], chunk)
+        assert not dest[::2].any()
+
+    def test_checksum_verify_pass_and_fail(self):
+        chunk, _ = _pages(5, seed=6, zero_every=0)
+        exp = np.asarray(pallas_hash_fn(chunk))
+        dest = np.zeros((8, PAGE_SIZE), np.uint8)
+        idx = np.arange(5, dtype=np.int32)
+        fused_restore(dest, chunk, idx, expected_csums=exp, use_pallas=False)
+
+        bad = exp.copy()
+        bad[2] ^= 1
+        with pytest.raises(ChecksumMismatchError) as ei:
+            fused_restore(dest, chunk, idx, expected_csums=bad,
+                          use_pallas=False)
+        assert ei.value.pages.tolist() == [2]
+
+
+class TestFusedScatterSeam:
+    def test_scatterfn_signature_unbound(self):
+        """Drop-in for the serving seam: (dest, compact, indices) -> dest,
+        numerically the plain scatter when no checksum table is bound."""
+        chunk, _ = _pages(4, seed=7, zero_every=0)
+        dest = np.zeros((10, PAGE_SIZE), np.uint8)
+        idx = np.array([0, 2, 5, 9], np.int32)
+        sf = FusedScatter(use_pallas=False)
+        out = sf(dest, chunk, idx)
+        np.testing.assert_array_equal(out[idx], chunk)
+        assert sf.stats == {"batches": 1, "pages": 4, "pages_verified": 0}
+
+    def test_bound_copy_shares_stats_and_verifies(self):
+        chunk, _ = _pages(4, seed=8, zero_every=0)
+        table = np.zeros(10, np.uint32)
+        idx = np.array([1, 4, 6, 8], np.int32)
+        table[idx] = np.asarray(pallas_hash_fn(chunk))
+        template = FusedScatter(use_pallas=False)
+        bound = template.bind_checksums(table)
+        bound(np.zeros((10, PAGE_SIZE), np.uint8), chunk, idx)
+        assert template.stats["pages_verified"] == 4  # shared dict
+
+        table[4] ^= 1
+        with pytest.raises(ChecksumMismatchError):
+            template.bind_checksums(table)(
+                np.zeros((10, PAGE_SIZE), np.uint8), chunk, idx)
+
+
+def _image(seed=11):
+    rng = np.random.default_rng(seed)
+    return StateImage.build({
+        "w": rng.standard_normal((48, 1024)).astype(np.float32),
+        "b": np.zeros((4, 1024), np.float32),
+    })
+
+
+class TestEndToEnd:
+    @pytest.mark.parametrize("dedup", [False, True])
+    def test_publish_restore_bit_identical_and_verified(self, dedup):
+        """Fused publish (master-wide publish_fn) → node-server restore with
+        the fused verified scatter: bytes identical, every page checked."""
+        img = _image()
+        ws = list(range(0, img.total_pages, 3))
+        pool = HierarchicalPool(
+            cxl_capacity=64 << 20, rdma_capacity=128 << 20,
+            dedup_hash_fn=pallas_hash_fn if dedup else None)
+        catalog = Catalog()
+        master = PoolMaster(pool, catalog, dedup=dedup,
+                            publish_fn=make_fused_publish_fn(use_pallas=False))
+        regions = master.publish("model", img, ws)
+        assert getattr(regions, "page_checksums", None) is not None
+        if dedup:
+            assert pool.dedup_cxl.stats["unique"] > 0
+        orch = Orchestrator("hostA", pool, catalog,
+                            scatter_fn=FusedScatter(use_pallas=False))
+        ri = orch.restore("model", pre_install=True)
+        assert ri is not None
+        ri.engine.install_all_sync()
+        assert ri.instance.all_present()
+        np.testing.assert_array_equal(ri.instance.image.buf, img.buf)
+        assert ri.instance.scatter_fn.stats["pages_verified"] > 0
+        ri.shutdown()
+        orch.close()
+
+    @pytest.mark.parametrize("dedup", [False, True])
+    def test_publish_fn_layout_identical_to_piecemeal(self, dedup):
+        """The fused publish produces byte-identical snapshots (regions AND
+        tier contents) to the default path — so rebuilds/re-curations that
+        ride the master's publish_fn can't drift the layout."""
+        img = _image(seed=12)
+        ws = list(range(0, img.total_pages, 4))
+        snaps = []
+        for publish_fn in (None, make_fused_publish_fn(use_pallas=False)):
+            pool = HierarchicalPool(
+                cxl_capacity=64 << 20, rdma_capacity=128 << 20,
+                dedup_hash_fn=pallas_hash_fn if dedup else None)
+            regions = build_snapshot(pool, img, ws, "m", dedup=dedup,
+                                     publish_fn=publish_fn)
+            snaps.append((pool, regions))
+        (pool_a, ra), (pool_b, rb) = snaps
+        assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+        np.testing.assert_array_equal(pool_a.cxl.buf, pool_b.cxl.buf)
+        np.testing.assert_array_equal(pool_a.rdma.buf, pool_b.rdma.buf)
+        assert SnapshotReader(rb, pool_b.host_view("h", None),
+                              pool_b.rdma).page_checksums() is not None
+
+    def test_corruption_detected_on_restore(self):
+        img = _image(seed=13)
+        ws = list(range(0, img.total_pages, 3))
+        pool = HierarchicalPool(cxl_capacity=64 << 20, rdma_capacity=128 << 20)
+        catalog = Catalog()
+        master = PoolMaster(pool, catalog,
+                            publish_fn=make_fused_publish_fn(use_pallas=False))
+        regions = master.publish("m2", img, ws)
+        pool.cxl.buf[regions.hot_off + 100] ^= 0xFF
+        orch = Orchestrator("hostB", pool, catalog,
+                            scatter_fn=FusedScatter(use_pallas=False))
+        with pytest.raises(ChecksumMismatchError):
+            orch.restore("m2", pre_install=True)
+        orch.close()
+
+
+class TestZeroScanBackend:
+    def test_parity_and_install(self):
+        img = _image(seed=14)
+        want = numpy_zero_scan(img.pages_matrix())
+        np.testing.assert_array_equal(
+            img.zero_page_bitmap(backend=pallas_zero_scan), want)
+        prev = set_zero_scan_backend(pallas_zero_scan)
+        try:
+            np.testing.assert_array_equal(img.zero_page_bitmap(), want)
+        finally:
+            set_zero_scan_backend(prev)
+        np.testing.assert_array_equal(img.zero_page_bitmap(), want)

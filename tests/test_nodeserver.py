@@ -13,6 +13,7 @@ modeled time (core/pool.LinkArbiter):
   demand-read buffers;
 * vectorized `strategies._classify` equivalence with the scalar reference.
 """
+import dataclasses
 import threading
 
 import numpy as np
@@ -256,6 +257,13 @@ class TestCrossInstanceFairness:
         light = make_image(seed=6, hot_pages=16, cold_pages=64, zero_pages=32)
         pool, master, names = make_stack([heavy, light],
                                          names=["heavy", "light"])
+        # shallow QP depth (own CostModel copy — RDMA_COST is shared): the
+        # pump can only burst 4 posts before blocking on completions, so the
+        # light enqueue always lands while the heavy walk is still queued
+        # (at the default depth of 64 the whole heavy walk could post in one
+        # burst, making the interleaving assertions a scheduling race); the
+        # assertions below read post ordering, never modeled time
+        pool.rdma.cost = dataclasses.replace(pool.rdma.cost, max_inflight=4)
         # quantum = one 8-page extent: strict round-robin alternation
         server = NodePageServer("h0", pool, drr_quantum=8 * PAGE_SIZE)
         orch = Orchestrator("h0", pool, master.catalog, node_server=server,
