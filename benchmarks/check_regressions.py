@@ -94,6 +94,26 @@ BASELINES: Dict[str, List[KeySpec]] = {
         "criteria.i6_consistent",
         "criteria.dedup_worthwhile",
     ],
+    # fleet serving (DESIGN.md §14): cold-start tails and hit fractions are
+    # discrete-event results on modeled restore costs under a fixed seed —
+    # bit-reproducible, so drift means placement/economics actually changed
+    "fleet_bench_quick.json": [
+        "pod.mean_shared_base_frac",
+        "pod.probe_marginal_bytes_total",
+        "policies.locality.p50_cold_start_s",
+        "policies.locality.p99_cold_start_s",
+        "policies.locality.throughput_rps",
+        "policies.locality.warm_frac",
+        "policies.locality.join_frac",
+        "policies.random.p99_cold_start_s",
+        "policies.round_robin.p99_cold_start_s",
+        "locality_vs_random_p99_x",
+        "criteria.locality_vs_random_p99_ge_1_3x",
+        "criteria.bit_deterministic",
+        "criteria.restores_bit_identical",
+        "criteria.profile_matches_restore_model",
+        "criteria.all_completed",
+    ],
     # fused data plane (DESIGN.md §13): the modeled keys are roofline byte-
     # math at a canonical workload — deterministic, so drift means the kernel
     # sequence's traffic actually changed; wall-clock keys are never gated
@@ -181,7 +201,7 @@ def run_fresh() -> Dict[str, dict]:
     BASELINES.  (Each run() also rewrites its experiments/*.json, which is
     why baselines are read from git, not disk.)"""
     from . import (adaptive_bench, breakdown, concurrency_bench, dedup_bench,
-                   kernel_bench, serving_bench)
+                   fleet_bench, kernel_bench, serving_bench)
 
     return {
         "breakdown.json": breakdown.run(),
@@ -190,6 +210,7 @@ def run_fresh() -> Dict[str, dict]:
         "adaptive_bench_quick.json": adaptive_bench.run(quick=True),
         "dedup_bench_quick.json": dedup_bench.run(quick=True),
         "kernel_bench.json": kernel_bench.run(quick=True),
+        "fleet_bench_quick.json": fleet_bench.run(quick=True),
     }
 
 

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 
 class Clock:
@@ -46,8 +46,11 @@ class Clock:
         raise NotImplementedError
 
     def cv_wait_for(self, cv: threading.Condition, predicate: Callable[[], bool],
-                    timeout_s: float) -> bool:
-        """``Condition.wait_for`` analogue; caller must hold ``cv``."""
+                    timeout_s: Optional[float]) -> bool:
+        """``Condition.wait_for`` analogue; caller must hold ``cv``.
+        ``timeout_s=None`` waits indefinitely (until a notify satisfies the
+        predicate) — condition-driven loops use it so an idle thread parks
+        with ZERO periodic wakeups instead of spin-polling a timeout."""
         raise NotImplementedError
 
 
@@ -70,7 +73,7 @@ class RealClock(Clock):
         return event.wait(timeout_s)
 
     def cv_wait_for(self, cv: threading.Condition, predicate: Callable[[], bool],
-                    timeout_s: float) -> bool:
+                    timeout_s: Optional[float]) -> bool:
         return cv.wait_for(predicate, timeout=timeout_s)
 
 

@@ -87,24 +87,42 @@ class CXLCapacityManager:
         caller must degrade the publish to RDMA."""
         with self._lock:
             budget = self.budget.budget_bytes
-            if self.usage() + needed_bytes <= budget:
+            usage = self.usage()
+            if usage + needed_bytes <= budget:
                 self.budget.stats["admitted"] += 1
                 return True
             self.budget.stats["sweeps"] += 1
-            # keep demoting clock victims until we fit or run out of victims
-            while self.usage() + needed_bytes > budget:
-                if not self._demote_one(exclude_name):
+            # Incremental sweep: ``usage()`` is a full O(catalog) region sum
+            # plus a dedup-store scan, so recomputing it per demotion made
+            # the sweep O(victims x catalog).  Each victim instead reports
+            # the bytes its demotion actually freed (old-minus-new private
+            # region + store-unique delta) and the running gauge is
+            # decremented — one recompute at entry, one at exit.
+            while usage + needed_bytes > budget:
+                freed = self._demote_one(exclude_name)
+                if freed is None:
                     break
-            if self.usage() + needed_bytes <= budget:
+                usage -= freed
+            # conservation check: the incremental estimate must agree with
+            # the authoritative recompute (which also re-syncs the gauge) —
+            # a drift here means a victim mis-reported its freed bytes
+            actual = self.usage()
+            assert usage == actual, (
+                f"capacity sweep conservation: incremental usage {usage} "
+                f"!= recomputed {actual}")
+            if actual + needed_bytes <= budget:
                 self.budget.stats["admitted"] += 1
                 return True
             self.budget.stats["degraded"] += 1
             return False
 
-    def _demote_one(self, exclude_name: str) -> bool:
+    def _demote_one(self, exclude_name: str) -> Optional[int]:
         """One clock sweep: demote the first unreferenced, unborrowed
         published snapshot with a non-empty hot region.  Two full rounds so
-        every referenced bit can be cleared once before we give up."""
+        every referenced bit can be cleared once before we give up.
+        Returns the CXL bytes the demotion freed (for the caller's
+        incremental usage accounting), or None when no victim demoted —
+        including the empty-catalog and everything-excluded cases."""
         entries = self.master.catalog.entries
         n = len(entries)
         for _ in range(2 * n):
@@ -147,11 +165,22 @@ class CXLCapacityManager:
                 entry.referenced.store(0)
             if image is None:
                 continue
+            # measure what this demotion frees WITHOUT a full recompute: the
+            # victim's private CXL region shrinks (hot data moves to RDMA)
+            # and, for dedup victims, the store releases this snapshot's
+            # exclusive pages (shared pages stay for their co-owners)
+            old_cxl = r.cxl_size
+            unique_before = self.master.pool.dedup_cxl.unique_bytes()
             if not self._demote_publish(name, image, r.version, dedup=r.dedup):
                 continue                      # a borrow landed mid-drain: skip
             self.budget.stats["demotions"] += 1
-            return True
-        return False
+            new_entry = self.master.catalog.find(name)
+            new_cxl = (new_entry.regions.cxl_size
+                       if new_entry is not None and new_entry.regions is not None
+                       else 0)
+            store_freed = unique_before - self.master.pool.dedup_cxl.unique_bytes()
+            return (old_cxl - new_cxl) + store_freed
+        return None
 
     def _demote_publish(self, name: str, image: StateImage, old_version: int,
                         dedup: bool = False) -> bool:

@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-import time
 from typing import Any, Dict, Optional
 
 from ..configs.base import ModelConfig
@@ -31,7 +30,10 @@ class Skeleton:
     caches: Any                 # pre-allocated decode state
     batch: int
     max_len: int
-    created_at: float = dataclasses.field(default_factory=time.perf_counter)
+    # stamped from the owning SkeletonPool's injected Clock (monotonic
+    # seconds), NOT a wall-clock default factory: skeleton-age accounting
+    # must be deterministic under the simulator's VirtualClock
+    created_at: float = 0.0
 
 
 class SkeletonPool:
@@ -49,6 +51,9 @@ class SkeletonPool:
         _decode_jit(self.model)     # warm the compile cache once
         self._q: "queue.Queue[Skeleton]" = queue.Queue()
         self.stats = {"claimed": 0, "created_on_demand": 0, "replenished": 0}
+        # signaled by claim()/close(); the replenish thread blocks here while
+        # the pool is full instead of polling the stop event at 100 Hz
+        self._cond = threading.Condition()
         for _ in range(target_size):
             self._q.put(self._make())
         self._bg = background
@@ -59,28 +64,43 @@ class SkeletonPool:
 
     def _make(self) -> Skeleton:
         caches = self.model.init_caches(None, self.batch, self.max_len)
-        return Skeleton(self.cfg, self.model, caches, self.batch, self.max_len)
+        return Skeleton(self.cfg, self.model, caches, self.batch, self.max_len,
+                        created_at=self.clock.monotonic())
+
+    def _need_work(self) -> bool:
+        return self._stop.is_set() or self._q.qsize() < self.target_size
 
     def _replenish_loop(self):
-        while not self._stop.is_set():
-            if self._q.qsize() < self.target_size:
-                self._q.put(self._make())
-                self.stats["replenished"] += 1
-            else:
-                # waiting on the stop event (not a bare sleep) lets close()
-                # join the thread promptly instead of leaking it
-                self.clock.wait_event(self._stop, 0.01)
+        while True:
+            with self._cond:
+                # block until a claim drains the queue or close() asks us to
+                # exit — no periodic wakeups while the pool is full.  claim()
+                # and close() notify under the same condition, so the check-
+                # then-wait here cannot lose a wakeup.
+                while not self._need_work():
+                    self.clock.cv_wait_for(self._cond, self._need_work, None)
+                if self._stop.is_set():
+                    return
+            # build OUTSIDE the condition: a skeleton build can take seconds
+            # and must not block claim()/close() from signaling
+            self._q.put(self._make())
+            self.stats["replenished"] += 1
 
     def claim(self) -> Skeleton:
         self.stats["claimed"] += 1
         try:
-            return self._q.get_nowait()
+            sk = self._q.get_nowait()
         except queue.Empty:
             self.stats["created_on_demand"] += 1
             return self._make()
+        with self._cond:
+            self._cond.notify()
+        return sk
 
     def close(self, timeout_s: float = 10.0):
         self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
         if self._bg:
             # generous bound: the loop only re-checks _stop between _make()
             # calls, and a skeleton build can take seconds on a loaded box

@@ -438,6 +438,46 @@ def dedup_economics(n_hot: int, n_cold: int,
     }
 
 
+# -- keep-warm vs re-restore economics (fleet serving layer) ------------------
+# Reactivating a kept-warm instance moves no pages: it is a scheduler wake +
+# cgroup unfreeze, modeled as a fixed resume cost.
+WARM_RESUME_S = 0.5e-3
+# Holding an instance warm pins its resident bytes on the host.  The
+# opportunity cost is what the pod could do with those bytes instead: keep
+# another snapshot's hot page resident and spare its next restore the
+# demand-fault path (trap + synchronous-feeling RDMA read + per-page
+# uffd.copy), amortized over a typical inter-restore interval of the
+# displaced snapshot.  Same price base as recuration_benefit_s.
+KEEPWARM_DISPLACE_INTERVAL_S = 1.0
+KEEPWARM_BYTE_S_COST = ((FAULT_TRAP_S + RDMA_PAGE_READ_S + UFFD_COPY_PER_PAGE_S)
+                        / (PAGE_SIZE * KEEPWARM_DISPLACE_INTERVAL_S))
+
+
+def keepwarm_economics(restore_s: float, expected_gap_s: float,
+                       resident_bytes: int) -> Dict[str, float]:
+    """Break-even model for holding a just-finished instance warm until its
+    function's next expected arrival (``expected_gap_s`` away) instead of
+    releasing it and paying a cold restore then.
+
+    Benefit: the next invocation skips the restore (pays ``WARM_RESUME_S``).
+    Cost: ``resident_bytes`` pinned for the gap, priced at the memory's
+    opportunity cost (:data:`KEEPWARM_BYTE_S_COST`).  The fleet driver keeps
+    an instance warm exactly when this verdict says so, and holds it for at
+    most the expected gap — an instance whose function went quiet is
+    reclaimed at expiry, Azure-Functions keep-alive style.
+    """
+    benefit_s = max(0.0, restore_s - WARM_RESUME_S)
+    hold_cost_s = expected_gap_s * resident_bytes * KEEPWARM_BYTE_S_COST
+    rate = resident_bytes * KEEPWARM_BYTE_S_COST
+    return {
+        "benefit_s": benefit_s,
+        "hold_cost_s": hold_cost_s,
+        "net_s": benefit_s - hold_cost_s,
+        "break_even_gap_s": benefit_s / rate if rate > 0 else float("inf"),
+        "worthwhile": bool(benefit_s > hold_cost_s),
+    }
+
+
 def recuration_benefit_s(n_promote: int, n_demote: int,
                          expected_restores: int = 64) -> float:
     """Modeled seconds saved over ``expected_restores`` future restores if

@@ -12,7 +12,7 @@ into deterministic discrete-event state.
 from __future__ import annotations
 
 import threading
-from typing import Callable
+from typing import Callable, Optional
 
 from ..core.clock import Clock
 
@@ -61,8 +61,14 @@ class VirtualClock(Clock):
         return event.is_set()
 
     def cv_wait_for(self, cv: threading.Condition, predicate: Callable[[], bool],
-                    timeout_s: float) -> bool:
+                    timeout_s: Optional[float]) -> bool:
         if predicate():
             return True
+        if timeout_s is None:
+            # an indefinite wait cannot be satisfied in the single-threaded
+            # sim (no other runner can notify during it): re-check once
+            # without advancing — condition-driven background loops must use
+            # background=False / explicit driving under a VirtualClock
+            return predicate()
         self.advance(max(0.0, timeout_s))
         return predicate()

@@ -1,0 +1,109 @@
+"""SkeletonPool clock injection and condition-driven replenish (ISSUE 7
+satellites): ``Skeleton.created_at`` must come from the pool's injected
+Clock (deterministic under VirtualClock), and a full pool's replenish
+thread must park on a condition instead of polling the stop event."""
+import threading
+import time
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.clock import RealClock
+from repro.serve.coldstart import SkeletonPool
+from repro.sim.clock import VirtualClock
+
+TINY = get_config("qwen2.5-14b").reduced(
+    n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128, vocab=128,
+    d_head=32)
+
+
+class CountingClock(RealClock):
+    """RealClock that counts blocking-primitive calls: a busy-polling loop
+    shows dozens of waits per second, a parked one shows ~1 total."""
+
+    def __init__(self):
+        self.wait_calls = 0
+
+    def cv_wait_for(self, cv, predicate, timeout_s):
+        self.wait_calls += 1
+        return super().cv_wait_for(cv, predicate, timeout_s)
+
+    def wait_event(self, event, timeout_s):
+        self.wait_calls += 1
+        return super().wait_event(event, timeout_s)
+
+
+def test_created_at_uses_injected_clock():
+    """Regression: created_at used a time.perf_counter default factory,
+    bypassing the injected Clock entirely — under a VirtualClock the stamp
+    must be simulated seconds, exactly."""
+    clk = VirtualClock(start=100.0)
+    sp = SkeletonPool(TINY, batch=1, max_len=32, target_size=1,
+                      background=False, clock=clk)
+    sk = sp.claim()                      # pre-filled at construction
+    assert sk.created_at == 100.0
+    clk.advance(5.0)
+    sk2 = sp.claim()                     # queue empty -> built on demand
+    assert sk2.created_at == 105.0
+    assert sp.stats["created_on_demand"] == 1
+    sp.close()
+
+
+def test_full_pool_does_not_spin():
+    """Regression: the replenish loop polled the stop event at 100 Hz while
+    the pool was full.  With the condition-based loop, a full pool performs
+    at most one (parking) wait over a 0.25 s window and never replenishes."""
+    clk = CountingClock()
+    sp = SkeletonPool(TINY, batch=1, max_len=32, target_size=1,
+                      background=True, clock=clk)
+    try:
+        # let the thread reach its parked state, then watch it stay parked
+        deadline = time.monotonic() + 2.0
+        while clk.wait_calls < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        calls_before = clk.wait_calls
+        time.sleep(0.25)                 # 100 Hz polling would add ~25 calls
+        assert clk.wait_calls - calls_before <= 1
+        assert clk.wait_calls <= 2
+        assert sp.stats["replenished"] == 0
+    finally:
+        sp.close()
+
+
+def test_claim_wakes_replenisher():
+    """A claim that drains the pool must notify the parked loop, which then
+    rebuilds exactly the claimed skeleton."""
+    clk = CountingClock()
+    sp = SkeletonPool(TINY, batch=1, max_len=32, target_size=1,
+                      background=True, clock=clk)
+    try:
+        sp.claim()
+        deadline = time.monotonic() + 10.0
+        while sp.stats["replenished"] < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert sp.stats["replenished"] == 1
+        assert sp._q.qsize() == 1
+    finally:
+        sp.close()
+    assert not sp._t.is_alive(), "close() must stop the replenish thread"
+
+
+def test_close_stops_parked_thread_promptly():
+    sp = SkeletonPool(TINY, batch=1, max_len=32, target_size=1,
+                      background=True)
+    t0 = time.monotonic()
+    sp.close()
+    assert time.monotonic() - t0 < 5.0
+    assert not sp._t.is_alive()
+
+
+def test_virtual_clock_indefinite_wait_does_not_advance():
+    """cv_wait_for(None) under VirtualClock returns the predicate without
+    moving time: single-threaded sims cannot be notified mid-wait, so an
+    indefinite park must not silently jump the clock."""
+    clk = VirtualClock(start=7.0)
+    cv = threading.Condition()
+    with cv:
+        assert clk.cv_wait_for(cv, lambda: True, None) is True
+        assert clk.cv_wait_for(cv, lambda: False, None) is False
+    assert clk.monotonic() == 7.0

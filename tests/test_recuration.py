@@ -382,3 +382,105 @@ def test_capacity_second_chance_prefers_lru():
                if e.regions is not None}
     assert by_name["s0"].n_hot > 0, "recently-restored snapshot kept hot"
     assert by_name["s1"].n_hot == 0, "LRU victim demoted"
+
+
+# -- incremental capacity sweep (ISSUE 7 satellite) ---------------------------
+
+def test_admit_empty_catalog_returns_false_cleanly():
+    """With nothing published there is nothing to demote: an over-budget
+    admit must degrade (False) without tripping the clock hand or the
+    conservation assert on a zero-length catalog."""
+    pool, master = make_pod(cxl_budget=1 << 20)
+    cap = master.capacity
+    assert cap.admit(512) is True                    # fits, no sweep
+    assert cap.admit((1 << 20) + 1) is False         # over budget, no victims
+    assert cap.budget.stats["degraded"] == 1
+    assert cap.budget.stats["sweeps"] == 1
+    assert cap.usage() == 0
+
+
+def test_admit_everything_excluded_returns_false():
+    """The publisher's own name is excluded from the sweep: when it is the
+    only candidate, the sweep must find no victim and degrade, leaving the
+    excluded snapshot's hot region untouched."""
+    img, ws = make_image(0)
+    pool, master = make_pod(cxl_budget=None)
+    regions = master.publish("only", img, ws)
+    master.capacity = __import__("repro.core.master", fromlist=["x"]) \
+        .CXLCapacityManager(master, budget_bytes=regions.cxl_size)
+    cap = master.capacity
+    assert cap.admit(regions.cxl_size, exclude_name="only") is False
+    assert cap.budget.stats["degraded"] == 1
+    entry = master.catalog.find("only")
+    assert entry.regions.n_hot > 0, "excluded entry must not be demoted"
+
+
+def test_admit_recomputes_usage_at_most_twice(monkeypatch):
+    """Regression: the demotion loop recomputed the O(catalog) usage() on
+    every iteration.  A sweep that demotes several victims must call
+    usage() exactly twice — once at entry, once for the conservation
+    recompute at exit — with every intermediate step incremental."""
+    pool, probe_master = make_pod()
+    img0, ws0 = make_image(0)
+    probe = probe_master.publish("probe", img0, ws0)
+    pool2 = HierarchicalPool(cxl_capacity=128 << 20, rdma_capacity=512 << 20)
+    master = PoolMaster(pool2, cxl_budget=int(4.5 * probe.cxl_size))
+    for i in range(4):
+        img, ws = make_image(i)
+        master.publish(f"s{i}", img, ws)
+    cap = master.capacity
+    calls = {"n": 0}
+    orig = cap.usage
+    def counting_usage():
+        calls["n"] += 1
+        return orig()
+    monkeypatch.setattr(cap, "usage", counting_usage)
+    # needs ~2 hot regions' worth of space -> multiple demotions in one admit
+    assert cap.admit(int(1.5 * probe.cxl_size)) is True
+    assert cap.budget.stats["demotions"] >= 2
+    assert calls["n"] == 2, (
+        f"usage() called {calls['n']}x during a multi-victim sweep; "
+        "the sweep must be incremental (entry + conservation recompute)")
+
+
+def test_admit_incremental_sweep_conserves_usage():
+    """The incremental gauge must land exactly on the authoritative
+    recompute after demotions (the in-admit assert), and the budget gauge
+    must be synced to it."""
+    pool, probe_master = make_pod()
+    img0, ws0 = make_image(0)
+    probe = probe_master.publish("probe", img0, ws0)
+    pool2 = HierarchicalPool(cxl_capacity=128 << 20, rdma_capacity=512 << 20)
+    master = PoolMaster(pool2, cxl_budget=int(3.5 * probe.cxl_size))
+    for i in range(3):
+        img, ws = make_image(i)
+        master.publish(f"s{i}", img, ws)
+    cap = master.capacity
+    assert cap.admit(probe.cxl_size) is True         # forces >= 1 demotion
+    assert cap.budget.stats["demotions"] >= 1
+    u = cap.usage()
+    assert cap.budget.in_use == u                    # gauge synced
+    assert u + probe.cxl_size <= cap.budget.budget_bytes
+
+
+def test_admit_incremental_sweep_with_dedup_store():
+    """Dedup victims free store-unique bytes (not private-region bytes);
+    the incremental accounting must capture that delta too or the
+    conservation assert fires."""
+    pool = HierarchicalPool(cxl_capacity=128 << 20, rdma_capacity=512 << 20)
+    master = PoolMaster(pool, dedup=True)
+    sizes = []
+    for i in range(3):
+        img, ws = make_image(i)
+        master.publish(f"d{i}", img, ws)
+        sizes.append(estimate_snapshot_cxl_size(img, ws, dedup=True, pool=pool))
+    from repro.core.master import CXLCapacityManager
+    usage_now = sum(e.regions.cxl_size for e in master.catalog.entries
+                    if e.regions is not None) + pool.dedup_cxl.unique_bytes()
+    master.capacity = CXLCapacityManager(master, budget_bytes=usage_now)
+    cap = master.capacity
+    # anything extra forces a sweep over dedup-layout victims; the assert
+    # inside admit() is the real check here
+    cap.admit(64 * PAGE_SIZE)
+    assert cap.budget.stats["sweeps"] == 1
+    assert cap.usage() <= usage_now
