@@ -129,6 +129,29 @@ BASELINES: Dict[str, List[KeySpec]] = {
         "criteria.publish_speedup_ge_2",
         "criteria.restore_speedup_ge_2",
     ],
+    # fault tolerance (DESIGN.md §15): all sweeps run under VirtualClock
+    # with seeded fault schedules, so every modeled key is bit-reproducible;
+    # the overhead key holds the armed fault seam to exactly-zero cost
+    "fault_bench_quick.json": [
+        "sweeps.none.p50_modeled_ms",
+        # exact-zero baseline: any nonzero fresh value is an infinite
+        # relative drift, so the armed seam staying free is gated twice
+        # (here numerically, below as a boolean criterion)
+        "fault_free_overhead_pct",
+        "sweeps.rdma_timeouts.p50_modeled_ms",
+        "sweeps.rdma_timeouts.total_retries",
+        "sweeps.cxl_poison.p50_modeled_ms",
+        "sweeps.cxl_poison.total_repairs",
+        "sweeps.brownout.p50_modeled_ms",
+        "degraded_model.degraded_ms",
+        "criteria.fault_free_overhead_zero",
+        "criteria.all_bit_identical",
+        "criteria.retries_recovered",
+        "criteria.repairs_happened",
+        "criteria.brownout_degrades_not_fails",
+        "criteria.degraded_costs_more",
+        "criteria.degraded_model_within_15pct",
+    ],
 }
 
 
@@ -201,7 +224,7 @@ def run_fresh() -> Dict[str, dict]:
     BASELINES.  (Each run() also rewrites its experiments/*.json, which is
     why baselines are read from git, not disk.)"""
     from . import (adaptive_bench, breakdown, concurrency_bench, dedup_bench,
-                   fleet_bench, kernel_bench, serving_bench)
+                   fault_bench, fleet_bench, kernel_bench, serving_bench)
 
     return {
         "breakdown.json": breakdown.run(),
@@ -211,6 +234,7 @@ def run_fresh() -> Dict[str, dict]:
         "dedup_bench_quick.json": dedup_bench.run(quick=True),
         "kernel_bench.json": kernel_bench.run(quick=True),
         "fleet_bench_quick.json": fleet_bench.run(quick=True),
+        "fault_bench_quick.json": fault_bench.run(quick=True),
     }
 
 

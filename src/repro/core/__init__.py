@@ -13,8 +13,18 @@ The paper's contribution as a composable library:
   cross-instance DRR prefetch + doorbell batching, hot-chunk fan-out (§3.5)
 - :mod:`orchestrator` — node agent: borrow → flush → pre-install → resume
 - :mod:`dedup`      — content-hash snapshot deduplication (§3.6)
+- :mod:`faults`     — deterministic fault injection, retry policy, tier
+  health circuit breakers (DESIGN.md §15)
 """
 from .clock import Clock, RealClock, REAL_CLOCK
+from .faults import (
+    DEFAULT_RETRY_POLICY,
+    FaultInjector,
+    RetryPolicy,
+    TierFaultError,
+    TierHealth,
+    call_with_retries,
+)
 from .pagestore import PAGE_SIZE, ArrayExtent, Manifest, StateImage, runs_from_pages
 from .pool import (
     CXL_COST,

@@ -95,15 +95,18 @@ class DedupStore:
 
     def __init__(self, tier: MemoryTier, hash_fn: Optional[HashFn] = None):
         self.tier = tier
+        tier.dedup_store = self   # checksum repair resolves store from tier
         self.hash_fn = hash_fn or fnv1a_pages
         # hash -> [offset, ...]: collisions coexist in one bucket, each
         # offset holding distinct bytes (verified before every share)
         self._buckets: Dict[int, List[int]] = {}
         self._refs: Dict[int, int] = {}          # offset -> refcount
         self._hash_of: Dict[int, int] = {}       # offset -> hash (for release)
+        self._quarantined: set = set()           # offsets barred from sharing
         self._lock = threading.RLock()
         self.stats = {"unique": 0, "dedup_hits": 0, "collisions": 0,
-                      "released": 0, "freed": 0}
+                      "released": 0, "freed": 0, "quarantined": 0,
+                      "rematerialized": 0}
 
     # -- internal (lock held) -------------------------------------------------
     def _match(self, h: int, page_row: np.ndarray) -> Optional[int]:
@@ -208,10 +211,12 @@ class DedupStore:
             return
         h = self._hash_of.pop(offset)
         del self._refs[offset]
-        bucket = self._buckets[h]
-        bucket.remove(offset)
+        bucket = self._buckets.get(h, [])
+        if offset in bucket:          # a quarantined offset left its bucket
+            bucket.remove(offset)
         if not bucket:
-            del self._buckets[h]
+            self._buckets.pop(h, None)
+        self._quarantined.discard(offset)
         self.tier.free(offset, PAGE_SIZE)
         self.stats["freed"] += 1
 
@@ -237,6 +242,52 @@ class DedupStore:
             off = self._match(h, mat[0])
             if off is not None:
                 self._release_locked(off)
+
+    # -- checksum repair (DESIGN.md §15) --------------------------------------
+    def quarantine(self, offset: int) -> bool:
+        """Bar a suspect offset from NEW sharing: its hash-bucket entry is
+        removed so no future publish matches it, while existing references
+        stay (I6 refcount conservation is untouched — live offset arrays
+        still point here and release normally).  Returns False for offsets
+        the store does not own or that are already quarantined."""
+        offset = int(offset)
+        with self._lock:
+            h = self._hash_of.get(offset)
+            if h is None or offset in self._quarantined:
+                return False
+            self._quarantined.add(offset)
+            bucket = self._buckets.get(h, [])
+            if offset in bucket:
+                bucket.remove(offset)
+            if not bucket:
+                self._buckets.pop(h, None)
+            self.stats["quarantined"] += 1
+            return True
+
+    def rematerialize(self, offset: int, page_row: np.ndarray) -> None:
+        """Scrub a quarantined offset with verified-clean bytes (the owner's
+        ``reconstruct_image``-style re-read) and restore its bucket entry so
+        the content is shareable again.  The bytes MUST hash to the offset's
+        recorded hash — re-materializing different content would corrupt
+        every snapshot referencing it."""
+        offset = int(offset)
+        mat = np.ascontiguousarray(page_row).view(np.uint8).reshape(1, PAGE_SIZE)
+        h = int(np.asarray(self.hash_fn(mat))[0])
+        with self._lock:
+            if offset not in self._quarantined:
+                raise ValueError(f"offset {offset} is not quarantined")
+            if h != self._hash_of[offset]:
+                raise ValueError(
+                    f"rematerialize hash mismatch at offset {offset}: "
+                    f"{h:#x} != recorded {self._hash_of[offset]:#x}")
+            self.tier.write(offset, mat[0])
+            self._quarantined.discard(offset)
+            self._buckets.setdefault(h, []).append(offset)
+            self.stats["rematerialized"] += 1
+
+    def quarantined_offsets(self) -> List[int]:
+        with self._lock:
+            return sorted(self._quarantined)
 
     # -- introspection --------------------------------------------------------
     def refcounts(self) -> Dict[int, int]:

@@ -385,12 +385,14 @@ class PoolMaster:
         compress_cold: bool = False,
         drain_timeout_s: float = 30.0,
         dedup: Optional[bool] = None,
+        publish_fn=None,
     ) -> SnapshotRegions:
         """Blocking driver over :meth:`publish_steps` (production path)."""
         regions = self._drive_steps(
             self.publish_steps(name, image, working_set, metadata=metadata,
                                zero_bitmap=zero_bitmap, gather_fn=gather_fn,
-                               compress_cold=compress_cold, dedup=dedup),
+                               compress_cold=compress_cold, dedup=dedup,
+                               publish_fn=publish_fn),
             name, drain_timeout_s)
         assert regions is not None
         return regions

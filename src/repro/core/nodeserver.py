@@ -37,6 +37,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .faults import call_with_retries
 from .pagestore import PAGE_SIZE
 from .pool import HierarchicalPool, TimeLedger
 from .serving import AsyncRDMAEngine, BufferPool, Instance, RestoreEngine, ScatterFn
@@ -288,10 +289,23 @@ class NodePageServer:
             if solo:
                 # nothing to fan out to — don't duplicate the hot region in
                 # the cache for the common one-restore-per-snapshot case
-                return session.reader.view.read(off, nbytes)
+                return call_with_retries(
+                    lambda: session.reader.view.read(off, nbytes),
+                    policy=session.retry, rng=session._retry_rng,
+                    ledger=session.ledger, clock=session.clock,
+                    trace=session.retry_trace)
             key = (group.key, off, nbytes)
+        # fan-out-aware retry (§15): only the LEADER's physical read can
+        # fault, and its bounded retries happen here — once — so a failed
+        # shared chunk read is re-issued once for the whole group, not k
+        # times by k borrowers
         data, modeled_s, leader = self.chunks.get_or_read(
-            key, lambda: session.reader.view.read_charged(off, nbytes),
+            key,
+            lambda: call_with_retries(
+                lambda: session.reader.view.read_charged(off, nbytes),
+                policy=session.retry, rng=session._retry_rng,
+                ledger=session.ledger, clock=session.clock,
+                trace=session.retry_trace),
             owner=group.key)
         if not leader:
             # borrower: the bytes crossed the link once (leader's read);
@@ -463,11 +477,19 @@ class NodePageServer:
                     mat = reader.split_cold_extent(rank0, en, buf)
                     pages = np.arange(es, es + en)
                     for s in sessions:
-                        k = s.instance.uffd_copy_batch(pages, mat)
-                        s.prefetch_stats["pages_installed"] += k
-                        with s._inflight_lock:
-                            for p in range(es, es + en):
-                                s._inflight.pop(p, None)
+                        try:
+                            k = s._install_verified(pages, mat)
+                            s.prefetch_stats["pages_installed"] += k
+                        except RuntimeError as e:
+                            # pump context: record per session so one
+                            # exhausted repair cannot sink its neighbours
+                            if not s._is_fault(e):
+                                raise
+                            s.repair_error = e
+                        finally:
+                            with s._inflight_lock:
+                                for p in range(es, es + en):
+                                    s._inflight.pop(p, None)
                     if len(sessions) > 1:
                         self.stats["fanout_installs"] += len(sessions) - 1
             finally:
@@ -480,9 +502,16 @@ class NodePageServer:
             if session is not None:
                 data = (session.reader.decompress_page(buf[:nbytes], raw)
                         if kind == "rdma_z" else buf[:PAGE_SIZE])
-                session.instance.uffd_copy(int(page), data)
-                with session._inflight_lock:
-                    session._inflight.pop(int(page), None)
+                try:
+                    session._install_verified(
+                        np.array([int(page)], dtype=np.int64), data)
+                except RuntimeError as e:
+                    if not session._is_fault(e):
+                        raise
+                    session.repair_error = e
+                finally:
+                    with session._inflight_lock:
+                        session._inflight.pop(int(page), None)
         finally:
             self.buffers.release(buf)
 

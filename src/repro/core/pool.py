@@ -202,6 +202,15 @@ class MemoryTier:
         self._free: List[Tuple[int, int]] = [(0, capacity)]  # (offset, size), sorted
         self.bytes_in_use = 0
         self._arbiters: Dict[str, LinkArbiter] = {}
+        # fault-tolerance seam (DESIGN.md §15): both default to inert.
+        # ``fault_injector`` is the deterministic fault schedule (None = the
+        # fault-free path, one attribute check of overhead); ``health`` is
+        # the per-tier circuit breaker serving consults before host-link
+        # reads; ``dedup_store`` back-points at this tier's content store
+        # so checksum repair can quarantine a corrupt shared offset.
+        self.fault_injector = None
+        self.health = None
+        self.dedup_store = None
 
     def arbiter_for(self, host: str = "") -> LinkArbiter:
         """The contention arbiter for `host`'s link to this tier (per-host
@@ -262,10 +271,18 @@ class MemoryTier:
     # -- raw access (owner-side; bypasses host caches) ---------------------
     def write(self, offset: int, data: np.ndarray) -> None:
         raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+        if self.fault_injector is not None:
+            self.fault_injector.check_write(self.name, offset, raw.nbytes)
         self.buf[offset : offset + raw.nbytes] = raw
 
     def read(self, offset: int, nbytes: int) -> np.ndarray:
-        return self.buf[offset : offset + nbytes].copy()
+        fi = self.fault_injector
+        if fi is not None:
+            fi.check_read(self.name, offset, nbytes)
+        data = self.buf[offset : offset + nbytes].copy()
+        if fi is not None:
+            fi.filter_read(self.name, offset, nbytes, data)
+        return data
 
 
 class HostView:
@@ -289,6 +306,11 @@ class HostView:
         """Like :meth:`read`, also returning the modeled seconds charged for
         this read — the fan-out cache replays that charge to borrowers that
         reuse the bytes without re-reading the link."""
+        fi = self.tier.fault_injector
+        if fi is not None:
+            # the host CXL.mem link: brownout windows apply here (owner-side
+            # pool-fabric reads via MemoryTier.read are NOT browned out)
+            fi.check_read(self.tier.name, offset, nbytes, host_link=True)
         out = np.empty(nbytes, dtype=np.uint8)
         first = offset // CACHELINE
         last = (offset + nbytes - 1) // CACHELINE
@@ -306,6 +328,10 @@ class HostView:
             out[pos : pos + hi - lo] = cached[lo - line * CACHELINE : hi - line * CACHELINE]
             pos += hi - lo
         self.stats["bytes_read"] += nbytes
+        if fi is not None:
+            # poison the returned copy only — the line cache and the pool
+            # bytes stay clean, so a budgeted re-read repairs the page
+            fi.filter_read(self.tier.name, offset, nbytes, out)
         t = self.arbiter.charge(nbytes)
         self.ledger.add("cxl_read", t)
         return out, t
@@ -347,6 +373,7 @@ class HierarchicalPool:
         # carries the pod's time source: PoolMaster / FailoverNode / serving
         # default their clock from here (repro.sim injects a VirtualClock).
         self.clock = clock or REAL_CLOCK
+        self.fault_injector = None
         self.cxl = MemoryTier("cxl", cxl_capacity, cxl_cost)
         self.rdma = MemoryTier("rdma", rdma_capacity, rdma_cost)
         # content-addressed page stores (one per tier): dedup publishes
@@ -359,6 +386,19 @@ class HierarchicalPool:
 
         self.dedup_cxl = DedupStore(self.cxl, hash_fn=dedup_hash_fn)
         self.dedup_rdma = DedupStore(self.rdma, hash_fn=dedup_hash_fn)
+        # per-tier circuit breakers (DESIGN.md §15); inert until a failure
+        from .faults import TierHealth
+
+        self.health = {"cxl": TierHealth("cxl", self.clock),
+                       "rdma": TierHealth("rdma", self.clock)}
+        self.cxl.health = self.health["cxl"]
+        self.rdma.health = self.health["rdma"]
+
+    def attach_fault_injector(self, injector) -> None:
+        """Arm the deterministic fault seam on both tiers (None to disarm)."""
+        self.fault_injector = injector
+        self.cxl.fault_injector = injector
+        self.rdma.fault_injector = injector
 
     def dedup_store(self, tag: int):
         if tag == TIER_CXL:

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import itertools
 import queue
+import random
 import threading
 import time
 import weakref
@@ -34,6 +35,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .clock import Clock, REAL_CLOCK
+from .faults import (
+    DEFAULT_RETRY_POLICY,
+    RetryPolicy,
+    TierFaultError,
+    call_with_retries,
+)
 from .pagestore import PAGE_SIZE, StateImage, runs_from_pages
 from .pool import (
     MMAP_PER_PAGE_S,
@@ -201,11 +208,16 @@ class AsyncRDMAEngine:
     """
 
     def __init__(self, tier: MemoryTier, ledger: TimeLedger, poll_budget: int = 1024,
-                 host: str = "", start: bool = True):
+                 host: str = "", start: bool = True,
+                 retry_policy: Optional[RetryPolicy] = None):
         self.tier = tier
         self.ledger = ledger
         self.poll_budget = poll_budget
         self.arbiter = tier.arbiter_for(host)
+        self.retry = retry_policy or DEFAULT_RETRY_POLICY
+        # fixed engine seed: the injector's schedule decides WHICH ops fault,
+        # so the backoff sequence is reproducible run-to-run regardless
+        self._retry_rng = random.Random(0xA9E1)
         self._sq: "queue.PriorityQueue" = queue.PriorityQueue()
         self._seq = itertools.count()
         self._cq: "queue.Queue" = queue.Queue()
@@ -214,7 +226,8 @@ class AsyncRDMAEngine:
         self._pending_ops = 0            # submitted, completion not yet queued
         self._worker: Optional[threading.Thread] = None
         self.stats = {"reads": 0, "busy_polls": 0, "event_waits": 0,
-                      "urgent_reads": 0, "bytes_read": 0}
+                      "urgent_reads": 0, "bytes_read": 0,
+                      "injected_faults": 0, "retries": 0, "retry_exhausted": 0}
         if start:
             self.start()
 
@@ -270,6 +283,45 @@ class AsyncRDMAEngine:
         except queue.Empty:
             return None
 
+    def _execute_read(self, prio: int, pool_off: int, nbytes: int,
+                      buf: np.ndarray, ledger: Optional[TimeLedger]) -> None:
+        """One wire attempt plus bounded in-place retries (DESIGN.md §15).
+
+        Retrying here is fan-out-aware by construction: a NodePageServer
+        group-extent buffer serves every session in the group, so one retry
+        covers the whole group instead of k per-session re-issues.  Every
+        failed attempt is charged through the arbiter (the timed-out read
+        occupied the wire) plus a seeded backoff; demand reads (prio 0) use
+        the escalated backoff scale.  The injector's schedules are finite,
+        so an exhausted budget escalates to a final blocking read — the
+        ledger carries the full cost of every attempt either way."""
+        led = ledger or self.ledger
+        fi = getattr(self.tier, "fault_injector", None)
+        attempt = 0
+        while True:
+            try:
+                if fi is not None:
+                    fi.check_read(self.tier.name, pool_off, nbytes,
+                                  host_link=True)
+                buf[:nbytes] = self.tier.buf[pool_off : pool_off + nbytes]
+                if fi is not None:
+                    fi.filter_read(self.tier.name, pool_off, nbytes,
+                                   buf[:nbytes])
+                    fi.check_completion(self.tier.name)
+                return
+            except TierFaultError:
+                self.stats["injected_faults"] += 1
+                led.add("rdma_retry", self.arbiter.charge(nbytes))
+                if attempt >= self.retry.max_retries:
+                    self.stats["retry_exhausted"] += 1
+                    buf[:nbytes] = self.tier.buf[pool_off : pool_off + nbytes]
+                    return
+                self.stats["retries"] += 1
+                led.add("retry_backoff",
+                        self.retry.backoff_s(attempt, self._retry_rng,
+                                             urgent=(prio == 0)))
+                attempt += 1
+
     def _run(self) -> None:
         while not self._stop.is_set():
             try:
@@ -277,7 +329,7 @@ class AsyncRDMAEngine:
                     self._sq.get(timeout=0.05))
             except queue.Empty:
                 continue
-            buf[:nbytes] = self.tier.buf[pool_off : pool_off + nbytes]
+            self._execute_read(prio, pool_off, nbytes, buf, ledger)
             self.stats["reads"] += 1
             self.stats["bytes_read"] += nbytes
             if prio == 0:
@@ -307,6 +359,8 @@ class RestoreEngine:
         scatter_fn: Optional[ScatterFn] = None,
         clock: Optional[Clock] = None,
         server=None,
+        retry_policy: Optional[RetryPolicy] = None,
+        retry_seed: int = 0,
     ):
         self.reader = reader
         self.instance = instance
@@ -349,6 +403,18 @@ class RestoreEngine:
         self._stop = threading.Event()
         self.prefetch_stats = {"extents_posted": 0, "pages_installed": 0,
                                "doorbells": 0, "extents_skipped": 0}
+        # fault handling (DESIGN.md §15): bounded retries with seeded
+        # backoff, budgeted checksum repair, and breaker-driven degradation
+        self.retry = retry_policy or DEFAULT_RETRY_POLICY
+        self._retry_rng = random.Random(0x9E37 ^ int(retry_seed))
+        self.retry_trace: List[float] = []
+        self.repair_budget = 3
+        self.repair_stats = {"checksum_mismatches": 0, "checksum_repairs": 0,
+                             "quarantined": 0, "rematerialized": 0,
+                             "repair_failures": 0,
+                             "degraded_preinstalls": 0, "degraded_faults": 0}
+        self.degraded_cxl = False
+        self.repair_error: Optional[Exception] = None
 
     # -- phase 1: hot-set pre-installation (§3.4) ------------------------------
     HOT_CHUNK_PAGES = 256   # 1 MiB sequential CXL reads over the compact region
@@ -376,35 +442,186 @@ class RestoreEngine:
             for page in hot:
                 kind, off = self.reader.lookup(int(page))
                 assert kind == "cxl"
-                src = self.reader.view.read(off, PAGE_SIZE)
+                src = self.reader.cxl_read(off, PAGE_SIZE)
                 if self.instance.uffd_copy(int(page), src):
                     self.instance.stats["pre_installed"] += 1
             return int(hot.size)
+        ht = self.reader.cxl_health()
+        if ht is not None and not ht.allow():
+            # CXL host link browned out (§15): skip the bulk pre-install
+            # entirely — hot pages demand-fault through the degraded
+            # RDMA-only path (drain_degraded_hot), matching the modeled
+            # all-cold restore shape instead of failing the restore
+            self.degraded_cxl = True
+            self.repair_stats["degraded_preinstalls"] += 1
+            return 0
         chunk = chunk_pages or self.HOT_CHUNK_PAGES
         n_hot = 0
         # extent walk (snapshot.iter_hot_extents): contiguous-region chunks
         # for the private layout, adjacent-store-offset runs for dedup —
         # either way each extent is ONE sequential CXL read
         for pages, pool_off, nbytes in self.reader.iter_hot_extents(chunk):
-            n_hot += int(pages.size)
             if self.instance.present[pages].all():
+                n_hot += int(pages.size)
                 continue    # already installed (e.g. repeated pre-install)
-            if self.server is not None:
-                # hot-chunk fan-out: co-located same-snapshot restores share
-                # one physical chunk read (one CXL read, k scatters); dedup
-                # chunks are content-keyed, so different VARIANTS share too
-                raw = self.server.hot_chunk(self, pool_off, nbytes)
-            else:
-                raw = self.reader.view.read(pool_off, nbytes)
+            try:
+                if self.server is not None:
+                    # hot-chunk fan-out: co-located same-snapshot restores
+                    # share one physical chunk read (one CXL read, k
+                    # scatters); dedup chunks are content-keyed, so
+                    # different VARIANTS share too
+                    raw = self.server.hot_chunk(self, pool_off, nbytes)
+                else:
+                    raw = call_with_retries(
+                        lambda o=pool_off, n=nbytes: self.reader.view.read(o, n),
+                        policy=self.retry, rng=self._retry_rng,
+                        ledger=self.ledger, clock=self.clock,
+                        trace=self.retry_trace)
+            except TierFaultError as e:
+                if ht is None:
+                    raise
+                ht.record_failure(hard=(e.kind == "brownout"))
+                if not ht.allow():
+                    # breaker tripped mid-walk: remaining hot pages take
+                    # the degraded demand path instead of failing
+                    self.degraded_cxl = True
+                    self.repair_stats["degraded_preinstalls"] += 1
+                    return n_hot
+                raise
+            if ht is not None:
+                ht.record_success()
+            n_hot += int(pages.size)
             mat = raw.reshape(-1, PAGE_SIZE)
             if pages.size > 1 and np.any(np.diff(pages) < 0):
                 # dedup extents visit pages in store-offset order: scatter
                 # wants them guest-sorted (one uffd range per guest run)
                 order = np.argsort(pages, kind="stable")
                 pages, mat = pages[order], mat[order]
-            installed = self.instance.uffd_copy_batch(pages, mat)
+            installed = self._install_verified(pages, mat)
             self.instance.stats["pre_installed"] += installed
         return n_hot
+
+    def drain_degraded_hot(self) -> int:
+        """Demand-install the hot pages a degraded pre-install skipped (the
+        RDMA-only all-cold path); no-op when the restore was not degraded."""
+        if not self.degraded_cxl:
+            return 0
+        n = 0
+        for page in self.reader.hot_page_indices():
+            if not self.instance.present[page]:
+                self.handle_fault(int(page))
+                n += 1
+        return n
+
+    # -- checksum repair (DESIGN.md §15) -----------------------------------
+    @staticmethod
+    def _is_fault(err: BaseException) -> bool:
+        """A recoverable serving fault: injected tier fault or a checksum
+        mismatch (any error carrying a structured ``bad_pages`` array)."""
+        return (isinstance(err, TierFaultError)
+                or getattr(err, "bad_pages", None) is not None)
+
+    def _install_verified(self, pages: np.ndarray, mat: np.ndarray) -> int:
+        """Install a batch; on checksum mismatch, repair instead of abort.
+
+        The bound scatter kernel raises with the guest indices of the bad
+        pages; the good subset re-installs immediately and each bad page is
+        re-read from its home tier under :attr:`repair_budget`.  Only an
+        exhausted budget surfaces the error."""
+        pages = np.asarray(pages, dtype=np.int64).reshape(-1)
+        try:
+            return self.instance.uffd_copy_batch(pages, mat)
+        except RuntimeError as err:
+            bad = getattr(err, "bad_pages", None)
+            if bad is None:
+                raise
+            return self._repair_batch(pages, mat, bad)
+
+    def _repair_batch(self, pages: np.ndarray, mat: np.ndarray,
+                      bad_pages) -> int:
+        mat = np.ascontiguousarray(mat).view(np.uint8).reshape(
+            pages.size, PAGE_SIZE)
+        bad = {int(p) for p in np.atleast_1d(np.asarray(bad_pages))}
+        self.repair_stats["checksum_mismatches"] += len(bad)
+        good = np.array([i for i, p in enumerate(pages) if int(p) not in bad],
+                        dtype=np.int64)
+        n = 0
+        if good.size:
+            n += self.instance.uffd_copy_batch(pages[good], mat[good])
+        for p in sorted(bad):
+            n += self._repair_page(int(p))
+        return n
+
+    def _reread_home(self, page: int, kind: str, off: int) -> np.ndarray:
+        """Budgeted re-read from the page's home tier, charged like a fresh
+        demand read (repair is not free).  The CXL re-read goes through the
+        owner-path tier read, bypassing the host line cache (which may hold
+        the poisoned line)."""
+        if kind == "cxl":
+            row = self.reader.view.tier.read(off, PAGE_SIZE)
+            self.ledger.add("cxl_read",
+                            self.reader.view.arbiter.charge(PAGE_SIZE))
+            return row
+        if kind == "rdma_z":
+            pool_off, nbytes, raw = self.reader.cold_extent(off)
+            payload = self.reader.rdma.read(pool_off, nbytes)
+            self.ledger.add("rdma_read", self._rdma_arbiter.charge(nbytes))
+            return self.reader.decompress_page(payload, raw)
+        row = self.reader.rdma.read(off, PAGE_SIZE)
+        self.ledger.add("rdma_read", self._rdma_arbiter.charge(PAGE_SIZE))
+        return row
+
+    def _repair_page(self, page: int) -> int:
+        """Re-read one checksum-bad page from its home tier until it
+        verifies, quarantining a persistently-bad shared dedup offset so no
+        new snapshot rides it, then re-materializing it once a clean copy is
+        in hand (the single-page analogue of ``reconstruct_image``)."""
+        kind, off = self.reader.lookup(page)
+        store = None
+        if self.reader.regions.dedup and kind in ("cxl", "rdma"):
+            tier = self.reader.view.tier if kind == "cxl" else self.reader.rdma
+            store = getattr(tier, "dedup_store", None)
+        quarantined = False
+        last_err: Optional[Exception] = None
+        for _attempt in range(self.repair_budget):
+            try:
+                row = self._reread_home(page, kind, off)
+            except TierFaultError as e:
+                last_err = e
+                continue
+            try:
+                n = self.instance.uffd_copy_batch(
+                    np.array([page], dtype=np.int64), row)
+            except RuntimeError as err:
+                if getattr(err, "bad_pages", None) is None:
+                    raise
+                last_err = err
+                if store is not None and not quarantined:
+                    # the shared store offset itself is corrupt: bar it from
+                    # new sharing before anyone else rides it (refcounts are
+                    # untouched, so invariant I6 holds)
+                    quarantined = store.quarantine(off)
+                    if quarantined:
+                        self.repair_stats["quarantined"] += 1
+                continue
+            self.repair_stats["checksum_repairs"] += 1
+            if quarantined:
+                # this re-read verified clean: scrub the store offset and
+                # put it back into circulation
+                store.rematerialize(off, row)
+                self.repair_stats["rematerialized"] += 1
+            return n
+        self.repair_stats["repair_failures"] += 1
+        self.repair_error = last_err
+        raise last_err  # exhausted repair budget: surface the error
+
+    def _degraded_cxl_fault(self, page: int, off: int) -> None:
+        """Serve a hot-page demand fault while the CXL breaker is open: the
+        bytes come over the RDMA fabric (charged at the RDMA demand shape by
+        ``SnapshotReader.degraded_cxl_read``) instead of failing."""
+        data = self.reader.degraded_cxl_read(off, PAGE_SIZE)
+        self.repair_stats["degraded_faults"] += 1
+        self._install_verified(np.array([page], dtype=np.int64), data)
 
     def install_zero_runs(self) -> int:
         """uffd.zeropage the zero runs (one ioctl per run); full-restore
@@ -486,8 +703,27 @@ class RestoreEngine:
             self.instance.stats["fault_cxl"] += 1
             if self.heat is not None:
                 self.heat.record([page], kind="touch")
-            src = self.reader.view.read(off, PAGE_SIZE)
-            self.instance.uffd_copy(page, src)
+            ht = self.reader.cxl_health()
+            if ht is not None and not ht.allow():
+                self._degraded_cxl_fault(page, off)
+                return
+            try:
+                src = call_with_retries(
+                    lambda: self.reader.view.read(off, PAGE_SIZE),
+                    policy=self.retry, rng=self._retry_rng,
+                    ledger=self.ledger, clock=self.clock, urgent=True,
+                    trace=self.retry_trace)
+            except TierFaultError as e:
+                if ht is None:
+                    raise
+                # a blocked guest vCPU cannot wait out the link: record the
+                # failure and serve the page over RDMA right now
+                ht.record_failure(hard=(e.kind == "brownout"))
+                self._degraded_cxl_fault(page, off)
+                return
+            if ht is not None:
+                ht.record_success()
+            self._install_verified(np.array([page], dtype=np.int64), src)
             return
         # cold page → async RDMA read (optionally zstd per-page)
         self.instance.stats["fault_rdma"] += 1
@@ -498,10 +734,16 @@ class RestoreEngine:
         if self.rdma_engine is None and self.server is None:
             if self.heat is not None:
                 self.heat.record([page], kind="demand_fault")
-            payload = self.reader.rdma.read(pool_off, nbytes)
+            payload = call_with_retries(
+                lambda: self.reader.rdma.read(pool_off, nbytes),
+                policy=self.retry, rng=self._retry_rng,
+                ledger=self.ledger, clock=self.clock, urgent=True,
+                trace=self.retry_trace)
             self.ledger.add("rdma_read", self._rdma_arbiter.charge(nbytes))
-            self.instance.uffd_copy(page, self.reader.decompress_page(payload, raw)
-                                    if kind == "rdma_z" else payload)
+            self._install_verified(
+                np.array([page], dtype=np.int64),
+                self.reader.decompress_page(payload, raw)
+                if kind == "rdma_z" else payload)
             return
         with self._inflight_lock:
             covered = bool(self._inflight.get(page))
@@ -562,22 +804,37 @@ class RestoreEngine:
     def _install_completion(self, buf: np.ndarray, token) -> None:
         if token[0] == "extent":
             _tag, start, n, rank0 = token
-            mat = self.reader.split_cold_extent(rank0, n, buf)
-            k = self.instance.uffd_copy_batch(np.arange(start, start + n), mat)
-            self.prefetch_stats["pages_installed"] += k
-            with self._inflight_lock:
-                for p in range(start, start + n):
-                    self._inflight.pop(p, None)
-            if self._prefetch_sem is not None:
-                self._prefetch_sem.release()
+            try:
+                mat = self.reader.split_cold_extent(rank0, n, buf)
+                k = self._install_verified(np.arange(start, start + n), mat)
+                self.prefetch_stats["pages_installed"] += k
+            except RuntimeError as e:
+                # completion-thread context: an exhausted repair budget
+                # cannot raise into the guest — record it (waiters observe
+                # the absent page via ``repair_error``)
+                if not self._is_fault(e):
+                    raise
+                self.repair_error = e
+            finally:
+                with self._inflight_lock:
+                    for p in range(start, start + n):
+                        self._inflight.pop(p, None)
+                if self._prefetch_sem is not None:
+                    self._prefetch_sem.release()
             return
         _tag, page, nbytes, raw, kind = token
-        data = (self.reader.decompress_page(buf[:nbytes], raw)
-                if kind == "rdma_z" else buf[:PAGE_SIZE])
-        self.instance.uffd_copy(int(page), data)
-        self.buffers.release(buf)
-        with self._inflight_lock:
-            self._inflight.pop(int(page), None)
+        try:
+            data = (self.reader.decompress_page(buf[:nbytes], raw)
+                    if kind == "rdma_z" else buf[:PAGE_SIZE])
+            self._install_verified(np.array([int(page)], dtype=np.int64), data)
+        except RuntimeError as e:
+            if not self._is_fault(e):
+                raise
+            self.repair_error = e
+        finally:
+            self.buffers.release(buf)
+            with self._inflight_lock:
+                self._inflight.pop(int(page), None)
 
     def _completion_loop(self) -> None:
         eng = self.rdma_engine
@@ -677,7 +934,7 @@ class RestoreEngine:
                     if kind == "zero":
                         self.instance.uffd_zeropage(page)
                     elif kind == "cxl":
-                        self.instance.uffd_copy(page, self.reader.view.read(off, PAGE_SIZE))
+                        self.instance.uffd_copy(page, self.reader.cxl_read(off, PAGE_SIZE))
                     else:
                         nbytes = (self.reader.cold_extent(off)[1]
                                   if kind == "rdma_z" else PAGE_SIZE)
@@ -687,24 +944,33 @@ class RestoreEngine:
         for start, n in self.reader.zero_runs():
             self.instance.uffd_zeropage_range(int(start), int(n))
         self.pre_install_hot()
+        self.drain_degraded_hot()
         if self.reader.regions.dedup:
             # dedup cold pages are not rank-compacted: walk the dual-
             # contiguous extents (split only at store discontinuities)
             for es, en, _rank0, pool_off, nbytes in self.reader.iter_cold_extents(
                     max_extent_pages=1 << 30):
-                payload = self.reader.rdma.read(pool_off, nbytes)
+                payload = call_with_retries(
+                    lambda o=pool_off, b=nbytes: self.reader.rdma.read(o, b),
+                    policy=self.retry, rng=self._retry_rng,
+                    ledger=self.ledger, clock=self.clock,
+                    trace=self.retry_trace)
                 self.ledger.add("rdma_read", self._rdma_arbiter.charge(nbytes))
-                self.instance.uffd_copy_batch(np.arange(es, es + en),
-                                              payload.reshape(en, PAGE_SIZE))
+                self._install_verified(np.arange(es, es + en),
+                                       payload.reshape(en, PAGE_SIZE))
             return
         for start, n in self.reader.cold_runs():
             start, n = int(start), int(n)
             rank0 = self.reader.cold_rank(start)
             pool_off, nbytes = self.reader.cold_extent_span(rank0, n)
-            payload = self.reader.rdma.read(pool_off, nbytes)
+            payload = call_with_retries(
+                lambda o=pool_off, b=nbytes: self.reader.rdma.read(o, b),
+                policy=self.retry, rng=self._retry_rng,
+                ledger=self.ledger, clock=self.clock,
+                trace=self.retry_trace)
             self.ledger.add("rdma_read", self._rdma_arbiter.charge(nbytes))
-            self.instance.uffd_copy_batch(np.arange(start, start + n),
-                                          self.reader.split_cold_extent(rank0, n, payload))
+            self._install_verified(np.arange(start, start + n),
+                                   self.reader.split_cold_extent(rank0, n, payload))
 
 
 # The restore engine IS the paper's per-instance "restore session"; the

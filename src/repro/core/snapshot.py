@@ -30,6 +30,7 @@ try:
 except Exception:  # pragma: no cover
     _zstd = None
 
+from .faults import TierFaultError
 from .pagestore import PAGE_SIZE, Manifest, StateImage, num_pages
 from .pool import TIER_CXL, TIER_RDMA, HierarchicalPool, HostView, MemoryTier
 
@@ -698,6 +699,45 @@ class SnapshotReader:
         cs = getattr(self.regions, "page_checksums", None)
         return None if cs is None else np.asarray(cs, dtype=np.uint32)
 
+    # -- resilient CXL access (DESIGN.md §15) --------------------------------
+    def cxl_health(self):
+        """The CXL tier's circuit breaker (None for a bare MemoryTier)."""
+        return getattr(self.view.tier, "health", None)
+
+    def degraded_cxl_read(self, off: int, nbytes: int) -> np.ndarray:
+        """Serve CXL-resident bytes while the host's CXL link is browned
+        out: the pool ships the same bytes over the RDMA transport (a
+        one-sided read of the MHD region), so the restore completes
+        bit-identically at the all-cold cost instead of failing.  The
+        HostView line cache is bypassed — nothing crossed the CXL link."""
+        data = self.view.tier.buf[off : off + nbytes].copy()
+        arb = self.rdma.arbiter_for(self.view.host)
+        self.view.ledger.add("rdma_read", arb.charge(nbytes))
+        self.view.stats["degraded_reads"] = (
+            self.view.stats.get("degraded_reads", 0) + 1)
+        return data
+
+    def cxl_read(self, off: int, nbytes: int) -> np.ndarray:
+        """A HostView read that survives link faults: transient faults are
+        surfaced to the caller's retry policy, but once the breaker is OPEN
+        (brownout, or repeated failures) the read degrades to
+        :meth:`degraded_cxl_read` instead of failing the restore."""
+        ht = self.cxl_health()
+        if ht is not None and not ht.allow():
+            return self.degraded_cxl_read(off, nbytes)
+        try:
+            data = self.view.read(off, nbytes)
+        except TierFaultError as e:
+            if ht is None:
+                raise
+            ht.record_failure(hard=(e.kind == "brownout"))
+            if not ht.allow():
+                return self.degraded_cxl_read(off, nbytes)
+            raise
+        if ht is not None:
+            ht.record_success()
+        return data
+
     # -- protocol hook ------------------------------------------------------
     def invalidate_cxl(self) -> None:
         """clflushopt over machine state + offset array + hot data (§3.3).
@@ -720,20 +760,20 @@ class SnapshotReader:
     # -- index + machine state ----------------------------------------------
     def machine_state(self) -> Tuple[Manifest, dict]:
         if self._manifest is None:
-            raw = self.view.read(self.regions.ms_off, self.regions.ms_size)
+            raw = self.cxl_read(self.regions.ms_off, self.regions.ms_size)
             self._manifest, self._metadata = _deserialize_machine_state(raw)
         return self._manifest, self._metadata
 
     def offset_array(self) -> np.ndarray:
         if self._oa is None:
-            raw = self.view.read(self.regions.oa_off, self.regions.total_pages * 8)
+            raw = self.cxl_read(self.regions.oa_off, self.regions.total_pages * 8)
             self._oa = raw.view(np.uint64)
         return self._oa
 
     def cold_index(self):
         """(starts, lengths) for the compressed cold tier (cached)."""
         if self._ci is None:
-            raw = self.view.read(self.regions.ci_off, self.regions.n_cold * 4)
+            raw = self.cxl_read(self.regions.ci_off, self.regions.n_cold * 4)
             self._ci = raw.view(np.uint32)
             lens = (self._ci & np.uint32(0x7FFF_FFFF)).astype(np.int64)
             self._ci_starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
@@ -774,7 +814,7 @@ class SnapshotReader:
         if kind == "zero":
             return np.zeros(PAGE_SIZE, np.uint8)
         if kind == "cxl":
-            return self.view.read(off, PAGE_SIZE)
+            return self.cxl_read(off, PAGE_SIZE)
         if kind == "rdma_z":
             pool_off, n, raw = self.cold_extent(off)
             return self.decompress_page(self.rdma.read(pool_off, n), raw)

@@ -27,6 +27,8 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from ..core.pagestore import PAGE_SIZE
+from ..serve.strategies import _rdma_pages_faulted
 from .arrivals import FunctionType
 from .model import RestoreProfile
 
@@ -41,6 +43,10 @@ class HostState:
     slots: int = 64
     busy: int = 0                                    # occupied compute slots
     alive: bool = True
+    # host CXL-link health, fed from the serving tier's circuit breaker
+    # (``core.faults.TierHealth``): while False, restores placed here run
+    # the degraded RDMA-only path, so the scheduler de-scores the host
+    cxl_healthy: bool = True
     # snapshot name -> finish time of the in-flight fan-out group's shared
     # reads; while present, same-name restores join at install-only cost
     active_restores: Dict[str, float] = dataclasses.field(
@@ -66,6 +72,11 @@ class HostState:
             self.resident_groups.pop(group, None)
         else:
             self.resident_groups[group] = n
+
+    def note_health(self, cxl_health) -> None:
+        """Feed a ``core.faults.TierHealth`` breaker (or None) into the
+        placement state; call whenever the host's breaker changes state."""
+        self.cxl_healthy = cxl_health is None or not cxl_health.degraded
 
     def overlap_frac(self, fn: FunctionType, profile: RestoreProfile) -> float:
         """Fraction of the hot read the host's chunk cache absorbs: the
@@ -118,6 +129,13 @@ class PlacementScheduler:
             conc = len(h.active_restores) + 1
             ov = h.overlap_frac(fn, profile) if free else 0.0
             base = self.priced(fn, profile, conc, ov)
+        if not h.cxl_healthy and profile.hot_bytes > 0:
+            # browned-out CXL link (DESIGN.md §15): the hot set arrives
+            # page-at-a-time over the RNIC instead of the chunked CXL
+            # pre-install — surcharge by the repriced difference
+            n_hot = int(profile.hot_bytes // PAGE_SIZE)
+            base += max(0.0,
+                        _rdma_pages_faulted(n_hot, 1) - profile.hot_serial_s)
         wait = 0.0 if free else (len(h.queue) + 1) * base
         return -(wait + base)
 

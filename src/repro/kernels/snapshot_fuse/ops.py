@@ -34,13 +34,29 @@ def _on_tpu() -> bool:
 
 
 class ChecksumMismatchError(RuntimeError):
-    """A restored page's checksum disagreed with the publish-time record."""
+    """A restored page's checksum disagreed with the publish-time record.
+
+    ``bad_pages`` is the structured payload — a 1-D int64 array of the
+    failing GUEST page indices — which the serving layer's checksum-repair
+    path consumes (``RestoreEngine._install_verified``).  The message stays
+    human-readable and truncated no matter how many pages failed.
+    """
+
+    MAX_SHOWN = 8
 
     def __init__(self, pages: np.ndarray):
-        self.pages = np.asarray(pages)
+        self.bad_pages = np.atleast_1d(
+            np.asarray(pages, dtype=np.int64)).reshape(-1)
+        shown = self.bad_pages[: self.MAX_SHOWN].tolist()
+        extra = self.bad_pages.size - len(shown)
         super().__init__(
-            f"checksum mismatch on {self.pages.size} restored page(s): "
-            f"{self.pages[:8].tolist()}{'...' if self.pages.size > 8 else ''}")
+            f"checksum mismatch on {self.bad_pages.size} restored page(s): "
+            f"{shown}{f' (+{extra} more)' if extra > 0 else ''}")
+
+    @property
+    def pages(self) -> np.ndarray:
+        """Back-compat alias for :attr:`bad_pages`."""
+        return self.bad_pages
 
 
 @dataclasses.dataclass

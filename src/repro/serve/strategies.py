@@ -334,6 +334,57 @@ def modeled_concurrent_restore_s(reader, conc: int, max_extent_pages: int = 64,
     return t
 
 
+def modeled_degraded_restore_s(reader, conc: int = 1,
+                               max_extent_pages: int = 64) -> float:
+    """Analytic modeled time of one restore while the CXL host link is
+    browned out (DESIGN.md §15): the breaker is open, so EVERY byte that
+    would have crossed the CXL link — machine state, offset array, cold
+    index, and the whole hot set — is fetched over the RDMA fabric instead,
+    at the RDMA demand shape.  This is the analytic twin of the executed
+    degraded path (``SnapshotReader.degraded_cxl_read`` +
+    ``RestoreEngine.drain_degraded_hot``): metadata reads become single RDMA
+    transfers, hot pages demand-fault one page per transfer (the all-cold
+    fault shape of :func:`_rdma_pages_faulted`) with one uffd.copy each, and
+    the zero/cold terms are unchanged from
+    :func:`modeled_concurrent_restore_s`."""
+    r = reader.regions
+    conc = max(1, conc)
+    # metadata over RDMA: one transfer each, no CXL op latency
+    t = _shared(RDMA_LAT_S + r.ms_size / RDMA_BW, r.ms_size, RDMA_BW, conc)
+    oa_bytes = r.total_pages * 8
+    t += _shared(RDMA_LAT_S + oa_bytes / RDMA_BW, oa_bytes, RDMA_BW, conc)
+    if r.cold_compressed and r.n_cold:
+        ci_bytes = r.n_cold * 4
+        t += _shared(RDMA_LAT_S + ci_bytes / RDMA_BW, ci_bytes, RDMA_BW, conc)
+    # the borrow protocol still clflushes the snapshot's CXL sections — the
+    # flush is owner-coherence work, not a host-link read
+    n_lines = -(-(r.ms_size + r.oa_size + max(r.hot_bytes, 0)) // 64)
+    t += n_lines * CLFLUSH_PER_LINE_S
+    # hot set: page-granular demand faults over RDMA (the pre-install was
+    # skipped), one uffd.copy ioctl per page
+    n_hot = int(reader.hot_page_indices().size)
+    if n_hot:
+        t += _rdma_pages_faulted(n_hot, conc)
+        t += uffd_copy_batch_cost(n_hot, n_hot)
+    # zero pages: one uffd.zeropage ioctl per zero run (unchanged)
+    zr = reader.zero_runs()
+    if zr.size:
+        t += uffd_zeropage_range_cost(int(zr[:, 1].sum()), int(zr.shape[0]))
+    # cold prefetch: identical to the healthy path (it never touched CXL)
+    cr = reader.cold_runs()
+    n_cold = int(cr[:, 1].sum()) if cr.size else 0
+    if n_cold:
+        n_ext, cold_bytes = 0, 0
+        for _es, _en, _rank0, _off, nbytes in reader.iter_cold_extents(
+                max_extent_pages):
+            cold_bytes += nbytes
+            n_ext += 1
+        serial = -(-n_ext // RDMA_INFLIGHT) * RDMA_LAT_S + cold_bytes / RDMA_BW
+        t += _shared(serial, cold_bytes, RDMA_BW, conc)
+        t += uffd_copy_batch_cost(n_cold, n_ext)
+    return t
+
+
 # -- content-addressed (dedup) publish/restore economics ---------------------
 # Hashing throughput of the publish-time content hash.  Hand-set at 20 GB/s
 # through PR 5; since the fused publish sweep (kernels/snapshot_fuse,

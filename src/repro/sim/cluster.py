@@ -27,6 +27,7 @@ import numpy as np
 
 from ..core.coherence import Borrow, Catalog
 from ..core.failover import FailoverNode, MasterLease
+from ..core.faults import TierFaultError
 from ..core.master import PoolMaster
 from ..core.pagestore import StateImage
 from ..core.pool import HierarchicalPool
@@ -147,11 +148,15 @@ class SimCluster:
         return img, rec.working_set()
 
     def publish(self, name: str, value: float, master: Optional[PoolMaster] = None,
-                dedup: Optional[bool] = None, **image_kw) -> object:
-        """Immediate (setup-time) publish through the production path."""
+                dedup: Optional[bool] = None, publish_fn=None,
+                **image_kw) -> object:
+        """Immediate (setup-time) publish through the production path.
+        ``publish_fn`` passes through to ``PoolMaster.publish`` — the chaos
+        scenarios use the fused publish so snapshots carry checksum tables."""
         master = master or self.master
         img, ws = self.make_image(value, **image_kw)
-        regions = master.publish(name, img, ws, dedup=dedup)
+        regions = master.publish(name, img, ws, dedup=dedup,
+                                 publish_fn=publish_fn)
         self.content.setdefault(name, {})[regions.version] = img
         self.events.append(f"published:{name}:v{regions.version}")
         return regions
@@ -318,6 +323,23 @@ class SimCluster:
             yield "tick"
             yield ("sleep", node.beat_interval_s)
 
+    def _drain_poll(self, name: str, gen, label: str, polls: int,
+                    drain_limit: Optional[int], drain_sleep: float):
+        """Shared drain/livelock guard for the publish and recurate
+        programs: counts ``draining``/``owner_busy`` polls and aborts the
+        protocol generator with a ``drain_timeout:<name>`` event once
+        ``drain_limit`` is exhausted (the TimeoutError analogue).  Used via
+        ``yield from``; returns ``(polls, aborted)``."""
+        if label not in ("draining", "owner_busy"):
+            return polls, False
+        polls += 1
+        if drain_limit is not None and polls >= drain_limit:
+            self.events.append(f"drain_timeout:{name}")
+            gen.close()
+            return polls, True
+        yield ("sleep", drain_sleep)
+        return polls, False
+
     def publish_program(self, name: str, value: float,
                         master: Optional[PoolMaster] = None,
                         drain_limit: Optional[int] = None,
@@ -351,13 +373,10 @@ class SimCluster:
                 self.content.setdefault(name, {})[val.version] = img
                 self.events.append(f"published:{name}:v{val.version}")
             yield f"publish:{label}"
-            if label in ("draining", "owner_busy"):
-                polls += 1
-                if drain_limit is not None and polls >= drain_limit:
-                    self.events.append(f"drain_timeout:{name}")
-                    gen.close()
-                    return
-                yield ("sleep", drain_sleep)
+            polls, aborted = yield from self._drain_poll(
+                name, gen, label, polls, drain_limit, drain_sleep)
+            if aborted:
+                return
 
     def delete_program(self, name: str, master: Optional[PoolMaster] = None,
                        gc_polls: int = 8, gc_sleep: float = 1e-4):
@@ -512,22 +531,27 @@ class SimCluster:
                 self.content.setdefault(name, {})[val.version] = reconstructed
                 self.events.append(f"recurated:{name}:v{val.version}")
             yield f"recurate:{label}"
-            if label in ("draining", "owner_busy"):
-                polls += 1
-                if drain_limit is not None and polls >= drain_limit:
-                    self.events.append(f"drain_timeout:{name}")
-                    gen.close()
-                    return
-                yield ("sleep", drain_sleep)
+            polls, aborted = yield from self._drain_poll(
+                name, gen, label, polls, drain_limit, drain_sleep)
+            if aborted:
+                return
 
     def restore_program(self, host: str, name: str, rdma=None,
                         use_batch: bool = True, max_retries: int = 6,
-                        retry_backoff_s: float = 1e-4, precheck: bool = True):
+                        retry_backoff_s: float = 1e-4, precheck: bool = True,
+                        scatter_fn=None):
         """Full warm restore via the production ``RestoreSession`` pieces
         (zeropage ranges, run-coalesced hot pre-install, cold extent reads),
         one run per scheduler turn, with SimTimeout retry/backoff on the
         (possibly flaky) RDMA tier.  Verifies the restored image is
-        bit-identical to the canonical one for the borrowed version."""
+        bit-identical to the canonical one for the borrowed version.
+
+        ``scatter_fn`` (e.g. a ``FusedScatter``) turns on checksum
+        verification against the snapshot's publish-time table, so injected
+        page poison is detected at install time and repaired through the
+        session's budgeted re-read path.  A CXL brownout degrades the
+        restore to the RDMA-only path (``drain_degraded_hot``) instead of
+        failing it; either way the bit-identity check below still runs."""
         rec = yield from self.borrow_program_steps(host, name, precheck)
         if rec is None:
             self.events.append(f"cold_start:{host}")
@@ -538,7 +562,8 @@ class SimCluster:
         reader.invalidate_cxl()
         manifest, _meta = reader.machine_state()
         inst = Instance(StateImage.empty_like(manifest), clock=self.clock)
-        session = RestoreSession(reader, inst, None, clock=self.clock)
+        session = RestoreSession(reader, inst, None, scatter_fn=scatter_fn,
+                                 clock=self.clock)
         yield "restore:setup"
         for start, n in reader.zero_runs():
             inst.uffd_zeropage_range(int(start), int(n))
@@ -554,16 +579,26 @@ class SimCluster:
                 try:
                     payload = rdma.read(pool_off, nbytes)
                     break
-                except SimTimeout:
+                # TierFaultError covers both seams: FlakyTier's SimTimeout
+                # subclasses it, and an attached core FaultInjector raises
+                # it from MemoryTier.read directly
+                except TierFaultError:
                     retries += 1
                     if retries > max_retries:
                         self.release(rec)
                         raise
                     yield ("sleep", retry_backoff_s * (2 ** retries))
                     yield "restore:rdma_retry"
-            inst.uffd_copy_batch(np.arange(es, es + en),
-                                 reader.split_cold_extent(rank0, en, payload))
+            session._install_verified(np.arange(es, es + en),
+                                      reader.split_cold_extent(rank0, en, payload))
             yield "restore:cold_run"
+        if session.degraded_cxl:
+            # CXL brownout tripped the breaker during pre-install: the hot
+            # set arrives over the RDMA fabric via the demand path — the
+            # restore degrades, it does not fail
+            session.drain_degraded_hot()
+            self.events.append(f"degraded_restore:{host}:{name}")
+            yield "restore:degraded"
         canonical = self.content[name][rec.version]
         if not inst.all_present() or not np.array_equal(inst.image.buf, canonical.buf):
             raise InvariantViolation(
@@ -572,6 +607,8 @@ class SimCluster:
         self.restored.append({
             "host": host, "name": name, "version": rec.version,
             "retries": retries, "batched": use_batch,
+            "degraded": session.degraded_cxl,
+            "repairs": session.repair_stats["checksum_repairs"],
             "ledger": dict(inst.ledger.seconds),
             "uffd_copies": inst.stats["uffd_copies"],
             "uffd_zeropages": inst.stats["uffd_zeropages"],

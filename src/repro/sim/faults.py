@@ -10,8 +10,13 @@ Two deterministic mechanisms, both scripted per scenario:
 * **step hooks** — run an arbitrary callback just before global step N
   (advance the virtual clock past a lease timeout, crash a node, ...).
 
-``FlakyTier`` wraps a ``MemoryTier`` and fails reads with :class:`SimTimeout`
-per script — the RDMA extent timeout/retry fault.
+``FlakyTier`` wraps a ``MemoryTier`` and fails reads/writes with
+:class:`SimTimeout` per script — the RDMA extent timeout/retry fault.  It is
+the REFERENCE implementation of count-windowed fault schedules: the
+production seam (:class:`repro.core.faults.FaultInjector`) is parity-tested
+against it, and :class:`SimTimeout` subclasses
+:class:`repro.core.faults.TierFaultError` so one ``except`` clause covers
+both.
 """
 from __future__ import annotations
 
@@ -20,10 +25,11 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
+from ..core.faults import TierFaultError
 from ..core.pool import MemoryTier
 
 
-class SimTimeout(Exception):
+class SimTimeout(TierFaultError):
     """Injected transfer timeout (RDMA extent read deadline exceeded)."""
 
 
@@ -71,32 +77,58 @@ class _FailWindow:
 
 
 class FlakyTier:
-    """Read-path proxy over a :class:`MemoryTier` that injects timeouts.
+    """Read/write-path proxy over a :class:`MemoryTier` injecting timeouts.
 
-    Everything except ``read`` is delegated to the wrapped tier, so the proxy
-    can be handed to ``SnapshotReader`` in place of the RDMA tier.  Scripted
-    failures are consumed in call order → deterministic.
+    Everything except ``read``/``write`` is delegated to the wrapped tier,
+    so the proxy can be handed to ``SnapshotReader`` in place of the RDMA
+    tier.  Scripted failures are consumed in call order → deterministic.
+    Stats are symmetric across both directions: ``reads`` /
+    ``injected_timeouts`` mirror ``writes`` / ``injected_write_faults``.
     """
 
     def __init__(self, tier: MemoryTier):
         self._tier = tier
         self._windows: List[_FailWindow] = []
-        self.stats = {"reads": 0, "injected_timeouts": 0}
+        self._write_windows: List[_FailWindow] = []
+        self.stats = {"reads": 0, "injected_timeouts": 0,
+                      "writes": 0, "injected_write_faults": 0}
 
     def fail_reads(self, n: int, lo: int = 0, hi: int = 1 << 62) -> "FlakyTier":
         """Fail the next ``n`` reads that touch [lo, hi)."""
         self._windows.append(_FailWindow(n, lo, hi))
         return self
 
-    def read(self, offset: int, nbytes: int) -> np.ndarray:
-        self.stats["reads"] += 1
-        for w in self._windows:
+    def fail_writes(self, n: int, lo: int = 0, hi: int = 1 << 62) -> "FlakyTier":
+        """Fail the next ``n`` writes that touch [lo, hi)."""
+        self._write_windows.append(_FailWindow(n, lo, hi))
+        return self
+
+    @staticmethod
+    def _take(windows: List[_FailWindow], offset: int, nbytes: int) -> bool:
+        for w in windows:
             if w.remaining > 0 and offset < w.hi and offset + nbytes > w.lo:
                 w.remaining -= 1
-                self.stats["injected_timeouts"] += 1
-                raise SimTimeout(
-                    f"injected RDMA timeout: read({offset}, {nbytes})")
+                return True
+        return False
+
+    def read(self, offset: int, nbytes: int) -> np.ndarray:
+        self.stats["reads"] += 1
+        if self._take(self._windows, offset, nbytes):
+            self.stats["injected_timeouts"] += 1
+            raise SimTimeout(
+                f"injected RDMA timeout: read({offset}, {nbytes})",
+                tier=self._tier.name, kind="timeout")
         return self._tier.read(offset, nbytes)
+
+    def write(self, offset: int, data: np.ndarray) -> None:
+        self.stats["writes"] += 1
+        nbytes = int(np.asarray(data).nbytes)
+        if self._take(self._write_windows, offset, nbytes):
+            self.stats["injected_write_faults"] += 1
+            raise SimTimeout(
+                f"injected RDMA write fault: write({offset}, {nbytes})",
+                tier=self._tier.name, kind="write")
+        return self._tier.write(offset, data)
 
     def __getattr__(self, name):
         return getattr(self._tier, name)

@@ -639,8 +639,104 @@ def scenario_dedup_eviction_shared_with_live_borrower(seed):
     return c
 
 
+# -- PR 8 chaos scenarios: production fault seam under the simulator --------
+
+def scenario_rdma_flap_under_fanout_burst(seed):
+    """A flapping RNIC during a 3-restore burst of the same snapshot: the
+    core FaultInjector (production seam, not the FlakyTier proxy) times out
+    the first 4 RDMA extent reads; every restore retries through and the
+    restored memory is bit-identical (checked inside restore_program) with
+    I1–I6 held at every step."""
+    from repro.core import FaultInjector
+
+    c = SimCluster(n_hosts=3, seed=seed)
+    c.publish("snap", 4.0, hot_pages=4, cold_pages=8, zero_pages=2)
+    inj = FaultInjector(clock=c.clock, seed=seed).fail_reads("rdma", 4)
+    c.pool.attach_fault_injector(inj)
+    for i, host in enumerate(("h1", "h2", "h3")):
+        c.add_program(f"r{i}", c.restore_program(host, "snap"))
+    c.run(max_steps=30000)
+    assert len(c.restored) == 3
+    assert sum(r["retries"] for r in c.restored) == 4
+    assert inj.stats["injected_timeouts"] == 4
+    assert c.catalog.find("snap").refcount.load() == 0
+    return c
+
+
+def scenario_cxl_poison_during_shared_restore(seed):
+    """Per-page CXL poison on a SHARED dedup store page while two variants
+    restore concurrently with checksum-verifying fused scatters: the
+    poisoned install is detected, the store offset is quarantined while it
+    keeps failing, then repaired from the (clean) home tier and
+    re-materialized back into circulation — both restores end bit-identical
+    and I6 (dedup refcount conservation) holds at every step."""
+    from repro.core import FaultInjector
+    from repro.kernels.snapshot_fuse import FusedScatter, make_fused_publish_fn
+
+    c = SimCluster(n_hosts=2, seed=seed)
+    pf = make_fused_publish_fn(use_pallas=False)
+    c.publish("va", 2.0, dedup=True, distinct_hot=True, publish_fn=pf,
+              hot_pages=4, cold_pages=4)
+    c.publish("vb", 2.0, dedup=True, distinct_hot=True, publish_fn=pf,
+              hot_pages=4, cold_pages=4)
+    store = c.pool.dedup_cxl
+    # poison one shared hot page's store offset: the install read, then the
+    # first TWO repair re-reads (forcing a quarantine), then clean
+    off = min(store._hash_of)
+    inj = FaultInjector(clock=c.clock, seed=seed).poison_reads(
+        "cxl", 3, lo=off, hi=off + 4096)
+    c.pool.attach_fault_injector(inj)
+    sf = FusedScatter(use_pallas=False)
+    c.add_program("r1", c.restore_program("h1", "va", scatter_fn=sf))
+    c.add_program("r2", c.restore_program("h2", "vb", scatter_fn=sf))
+    c.run(max_steps=30000)
+    assert len(c.restored) == 2         # bit-identity asserted in-program
+    assert inj.stats["injected_poison"] == 3
+    assert sum(r["repairs"] for r in c.restored) >= 1
+    assert store.stats["quarantined"] >= 1
+    assert store.stats["rematerialized"] >= 1
+    assert not store.quarantined_offsets(), "repaired offset back in service"
+    return c
+
+
+def scenario_brownout_during_recuration(seed):
+    """A CXL host-link brownout window opens while the owner re-curates and
+    a host restores: the owner-side re-curation (pool-fabric reads, never
+    browned out) completes normally, while the restore's breaker degrades
+    it to the RDMA-only path instead of failing — restored memory is still
+    bit-identical and I1–I5 hold throughout."""
+    from repro.core import FaultInjector, HeatRegistry
+
+    c = SimCluster(n_hosts=3, seed=seed)
+    c.publish("s", 1.0, cold_pages=4)
+    registry = HeatRegistry(clock=c.clock, half_life_s=1e6)
+    c.add_program("h1", c.drift_borrower_program("h1", "s", registry,
+                                                 attempts=3, cold_reads=3))
+    c.add_program("owner", c.delayed(1e-3, c.recurate_program(
+        "s", registry, expected_restores=10000, min_restores=1)))
+    c.add_program("h3", c.delayed(4e-3, c.restore_program("h3", "s")))
+    # the brownout window opens just before the delayed restore begins and
+    # outlasts the run: every host-link CXL access inside it fails hard
+    inj = FaultInjector(clock=c.clock, seed=seed).brownout(
+        "cxl", start_s=3.5e-3, duration_s=10.0)
+    c.pool.attach_fault_injector(inj)
+    c.run(max_steps=30000)
+    # owner-side re-curation was untouched by the host-link brownout
+    assert any(e.startswith("recurated:s:v1") for e in c.events), c.events
+    # the restore completed degraded (RDMA-only), not failed
+    assert any(e.startswith("degraded_restore:h3:s") for e in c.events), c.events
+    degraded = [r for r in c.restored if r["host"] == "h3"]
+    assert degraded and degraded[0]["degraded"]
+    assert inj.stats["brownout_rejections"] >= 1
+    return c
+
+
 SCENARIOS = {
     "steady_borrow_release": scenario_steady_borrow_release,
+    "rdma_flap_under_fanout_burst": scenario_rdma_flap_under_fanout_burst,
+    "cxl_poison_during_shared_restore":
+        scenario_cxl_poison_during_shared_restore,
+    "brownout_during_recuration": scenario_brownout_during_recuration,
     "dedup_owner_crash_mid_republish": scenario_dedup_owner_crash_mid_republish,
     "dedup_eviction_shared_with_live_borrower":
         scenario_dedup_eviction_shared_with_live_borrower,
