@@ -114,6 +114,24 @@ BASELINES: Dict[str, List[KeySpec]] = {
         "criteria.profile_matches_restore_model",
         "criteria.all_completed",
     ],
+    # multi-pod topology (DESIGN.md §16): same discrete-event determinism as
+    # fleet_bench_quick; drift means the replica planner, the fabric
+    # surcharge, or the migration-economics gate actually changed
+    "fleet_bench_multipod_quick.json": [
+        "tiers.single_pod.p99_cold_start_s",
+        "tiers.no_replication.p99_cold_start_s",
+        "tiers.replicated.p99_cold_start_s",
+        "tiers.replicated.p50_cold_start_s",
+        "single_vs_replicated_p99_x",
+        "replication_plan.replicas_added",
+        "replication_plan.skipped_uneconomic",
+        "criteria.replicated_beats_single_pod_p99",
+        "criteria.replicated_beats_no_replication_p99",
+        "criteria.economics_gate_filtered",
+        "criteria.bit_deterministic",
+        "criteria.restores_bit_identical",
+        "criteria.all_completed",
+    ],
     # fused data plane (DESIGN.md §13): the modeled keys are roofline byte-
     # math at a canonical workload — deterministic, so drift means the kernel
     # sequence's traffic actually changed; wall-clock keys are never gated
@@ -234,6 +252,7 @@ def run_fresh() -> Dict[str, dict]:
         "dedup_bench_quick.json": dedup_bench.run(quick=True),
         "kernel_bench.json": kernel_bench.run(quick=True),
         "fleet_bench_quick.json": fleet_bench.run(quick=True),
+        "fleet_bench_multipod_quick.json": fleet_bench.run_multipod(quick=True),
         "fault_bench_quick.json": fault_bench.run(quick=True),
     }
 

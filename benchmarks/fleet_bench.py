@@ -50,8 +50,12 @@ from repro.core.pagestore import PAGE_SIZE
 from repro.core.snapshot import exclusive_cxl_bytes
 from repro.fleet import (
     FleetDriver,
+    FleetTopology,
     QueueAutoscaler,
     generate_trace,
+    plan_balanced,
+    plan_replicated,
+    plan_single,
     profile_reader,
     synthesize_fleet,
 )
@@ -244,10 +248,169 @@ def run(quick: bool = False) -> dict:
     return out
 
 
+def drive_topo(fleet, profiles, trace, topo, n_hosts, slots):
+    """One locality-policy run with a FleetTopology surcharging the
+    scheduler's scores and the driver's restore charges.  No autoscaler:
+    the tier comparison is same-hardware, same-budget — only the replica
+    plan differs."""
+    d = FleetDriver(fleet, profiles, policy="locality", seed=SEED,
+                    n_hosts=n_hosts, slots_per_host=slots,
+                    clock=VirtualClock())
+    d.scheduler.topology = topo
+    return d.run(trace)
+
+
+def run_multipod(quick: bool = False) -> dict:
+    """Multi-pod tier (ISSUE 9): replication + migration economics vs the
+    single-big-pod and no-replication baselines at equal TOTAL CXL budget.
+
+    Pods are Octopus-shaped: ``device_ports`` head ports per MHD, so the
+    single big pod CXL-attaches only ``device_ports`` hosts while k pods
+    attach k× as many — but must split the budget and (without
+    replication) scatter each snapshot into exactly one pod.  The
+    replicated tier spends the same budget's headroom on second replicas,
+    gated by ``migration_economics`` priced on MEASURED demand: the
+    per-pod cold-restore counts of the no-replication run (migration
+    toward demand, not toward raw invocation rates — warm-served hot
+    functions don't re-read their hot set)."""
+    if quick:
+        n_types, n_bases = 24, 6
+        hot, cold, zero, delta = 48, 24, 16, 4
+        total_rps, t_end, compute_mean = 500.0, 8.0, 0.25
+        n_hosts, slots = 6, 64
+        n_pods, device_ports = 3, 2
+        target_hot = 64 << 20
+    else:
+        n_types, n_bases = 200, 16
+        hot, cold, zero, delta = 64, 32, 16, 6
+        total_rps, t_end, compute_mean = 2000.0, 45.0, 1.0
+        n_hosts, slots = 48, 96
+        n_pods, device_ports = 4, 12
+        target_hot = 256 << 20
+
+    fleet = synthesize_fleet(n_types, n_bases, total_rps, seed=SEED,
+                             compute_mean_s=compute_mean)
+    pool, master, images, _probes = build_pod(fleet, hot, cold, zero, delta)
+    profiles, model_err = profile_pod(pool, master, fleet)
+    bit_identical, n_verified = verify_restores(pool, master, images, fleet, 4)
+    scale = target_hot / (hot * PAGE_SIZE)
+    profiles = {k: p.scaled(scale) for k, p in profiles.items()}
+    trace = generate_trace(fleet, t_end, seed=SEED)
+
+    # equal TOTAL CXL budget across tiers: 1.5x the fleet's hot bytes —
+    # one copy of everything fits with headroom, full k-replication would not
+    budget = int(1.5 * sum(p.hot_bytes for p in profiles.values()))
+
+    plans = {"single_pod": (1, plan_single(fleet)),
+             "no_replication": (n_pods, plan_balanced(fleet, profiles,
+                                                      n_pods)[0])}
+    tiers, topos = {}, {}
+
+    def run_tier(tier, k, plan):
+        topo = FleetTopology(k, device_ports, plan)
+        result = drive_topo(fleet, profiles, trace, topo, n_hosts, slots)
+        s = result.summary()
+        s["topology"] = dict(topo.stats)
+        s["n_pods"] = k
+        s["attached_hosts"] = sum(1 for h in range(n_hosts)
+                                  if topo.attached(h))
+        tiers[tier] = s
+        topos[tier] = (topo, result)
+        return result
+
+    for tier, (k, plan) in plans.items():
+        run_tier(tier, k, plan)
+
+    # measured demand: a second replica serves one pod's share of the cold
+    # restores actually paid without it — warm hits and joins never re-read
+    # the hot set, so they contribute no replica benefit
+    base = topos["no_replication"][1]
+    cold_mask = base.mode == 0          # MODE_COLD
+    cold_by_fn = np.bincount(base.fn[cold_mask].astype(int),
+                             minlength=n_types)
+    expected_reads = {f.fn_id: float(cold_by_fn[f.fn_id]) / n_pods
+                      for f in fleet}
+    rep_plan, rep_stats = plan_replicated(fleet, profiles, n_pods, budget,
+                                          expected_reads)
+    run_tier("replicated", n_pods, rep_plan)
+
+    # bit-determinism: an identically-seeded replicated re-run must match
+    r1 = topos["replicated"][1]
+    r2 = drive_topo(fleet, profiles, trace,
+                    FleetTopology(n_pods, device_ports, rep_plan),
+                    n_hosts, slots)
+    deterministic = bool(
+        np.array_equal(r1.host, r2.host)
+        and np.array_equal(r1.mode, r2.mode)
+        and np.array_equal(r1.ready_s, r2.ready_s, equal_nan=True)
+        and np.array_equal(r1.done_s, r2.done_s, equal_nan=True))
+
+    rep, single, norep = (tiers["replicated"], tiers["single_pod"],
+                          tiers["no_replication"])
+    criteria = {
+        "replicated_beats_single_pod_p99": bool(
+            rep["p99_cold_start_s"] < single["p99_cold_start_s"]),
+        "replicated_beats_no_replication_p99": bool(
+            rep["p99_cold_start_s"] <= norep["p99_cold_start_s"]),
+        "economics_gate_filtered": bool(
+            rep_stats["replicas_added"] > 0
+            and rep_stats["skipped_uneconomic"] > 0),
+        "bit_deterministic": deterministic,
+        "restores_bit_identical": bit_identical,
+        "profile_matches_restore_model": bool(model_err == 0.0),
+        "all_completed": bool(all(t["completed"] == t["invocations"]
+                                  for t in tiers.values())),
+    }
+    out = {
+        "quick": quick, "seed": SEED,
+        "fleet": {"n_types": n_types, "n_bases": n_bases,
+                  "invocations": len(trace), "t_end_s": t_end,
+                  "n_hosts": n_hosts, "slots_per_host": slots,
+                  "n_pods": n_pods, "device_ports": device_ports,
+                  "total_cxl_budget_bytes": budget,
+                  "restores_verified": n_verified},
+        "replication_plan": rep_stats,
+        "tiers": tiers,
+        "single_vs_replicated_p99_x": (
+            single["p99_cold_start_s"] / rep["p99_cold_start_s"]
+            if rep["p99_cold_start_s"] > 0 else float("inf")),
+        "criteria": criteria,
+    }
+    OUT.mkdir(exist_ok=True)
+    name = ("fleet_bench_multipod_quick.json" if quick
+            else "fleet_bench_multipod.json")
+    (OUT / name).write_text(json.dumps(out, indent=2))
+    return out
+
+
+def main_multipod(quick: bool) -> int:
+    out = run_multipod(quick=quick)
+    f = out["fleet"]
+    print(f"multipod: {f['n_types']} types, {f['invocations']} invocations, "
+          f"{f['n_pods']} pods x {f['device_ports']} ports, "
+          f"budget {f['total_cxl_budget_bytes'] >> 20} MiB total")
+    print(f"replication plan: {out['replication_plan']}")
+    for tier, s in out["tiers"].items():
+        topo = s["topology"]
+        print(f"{tier:>16}: p50 {s['p50_cold_start_s']*1e3:8.3f} ms  "
+              f"p99 {s['p99_cold_start_s']*1e3:8.3f} ms  "
+              f"local/remote/unattached {topo['local_placements']}/"
+              f"{topo['remote_placements']}/{topo['unattached_placements']}")
+    print(f"single_pod vs replicated p99: "
+          f"{out['single_vs_replicated_p99_x']:.2f}x")
+    ok = all(out["criteria"].values())
+    print(f"criteria: {out['criteria']}  ->  {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="CI smoke (small fleet)")
+    ap.add_argument("--multipod", action="store_true",
+                    help="multi-pod replication/migration tier")
     args = ap.parse_args()
+    if args.multipod:
+        raise SystemExit(main_multipod(args.quick))
     out = run(quick=args.quick)
     f = out["fleet"]
     print(f"fleet: {f['n_types']} types / {f['n_bases']} bases, "

@@ -2,8 +2,10 @@
 another, and keep training — the snapshot's offset-array indirection makes
 pages location-independent, so the restore path is mesh-agnostic.
 
-    PYTHONPATH=src python examples/elastic_restore.py
+    PYTHONPATH=src python examples/elastic_restore.py [--quick]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,22 +20,31 @@ from repro.sharding.partition import param_specs
 from repro.train.trainstep import TrainState, init_train_state, make_train_step
 
 
-def main():
-    cfg = get_config("qwen2.5-14b").reduced(vocab=512)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller arch/batch, 2+2 steps (CI smoke)")
+    args = ap.parse_args(argv)
+    arch = "xlstm-125m" if args.quick else "qwen2.5-14b"
+    n_steps = 2 if args.quick else 5
+
+    cfg = get_config(arch).reduced(vocab=512)
     model = build(cfg)
-    data = SyntheticLMData(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8))
+    data = SyntheticLMData(DataConfig(vocab=cfg.vocab, seq_len=32 if args.quick else 64,
+                                      global_batch=4 if args.quick else 8))
     step = jax.jit(make_train_step(model))
 
     # phase 1: "big mesh" run (this container has one device; the mesh
     # plumbing is identical — the dry-run proves the 256/512-chip variants)
     state = init_train_state(model, jax.random.PRNGKey(0))
-    for i in range(5):
+    for i in range(n_steps):
         state, m = step(state, {k: jnp.asarray(v) for k, v in data.batch_at(i).items()})
     print(f"phase1 loss={float(m['loss']):.3f} — checkpointing")
 
     pool = HierarchicalPool(1 << 30, 2 << 30)
     master = PoolMaster(pool)
-    save_checkpoint(master, "elastic", {"params": state.params, "opt": state.opt}, step=5)
+    save_checkpoint(master, "elastic", {"params": state.params, "opt": state.opt},
+                    step=n_steps)
 
     # phase 2: restore on a DIFFERENT mesh ("scale-down" re-shard)
     orch = Orchestrator("new-fleet-host", pool, master.catalog)
@@ -45,7 +56,7 @@ def main():
           f"mesh {dict(mesh.shape)} — time-to-hot={stats['time_to_hot_s']*1e3:.1f}ms")
 
     state2 = TrainState(placed, restored["opt"])
-    for i in range(5, 10):
+    for i in range(n_steps, 2 * n_steps):
         state2, m = step(state2, {k: jnp.asarray(v) for k, v in data.batch_at(i).items()})
     print(f"phase2 (post-reshard) loss={float(m['loss']):.3f} — training continued ✓")
 

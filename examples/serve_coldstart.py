@@ -20,11 +20,16 @@ from repro.serve.coldstart import SkeletonPool, restore_server
 from repro.serve.strategies import STRATEGIES, run_strategy
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="chameleon", choices=all_workloads())
     ap.add_argument("--concurrency", type=int, default=32)
-    args = ap.parse_args()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest workload, fewer tokens (CI smoke)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.workload = "pyaes"       # xlstm-125m — the smallest image
+        args.concurrency = 8
 
     bw = get_workload(args.workload)
     spec = bw.spec()
@@ -58,7 +63,8 @@ def main():
           f"time-to-full={st['time_to_full_s']*1e3:.1f}ms "
           f"(pre-installed {st['instance']['pre_installed']} hot pages, "
           f"{st['instance']['fault_rdma']} async RDMA cold faults)")
-    toks = out["instance"].generate(jnp.asarray([[1, 2, 3]], jnp.int32), 8)
+    toks = out["instance"].generate(jnp.asarray([[1, 2, 3]], jnp.int32),
+                                    2 if args.quick else 8)
     print("served tokens:", toks[0].tolist())
     sp.close()
 

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Fail if docs name repo paths that no longer exist (CI docs gate).
+
+Scans the docs listed in ``DOCS`` for
+  * backticked repo paths   — `src/repro/core/pool.py`, `tests/`, ...
+  * dotted module names     — `repro.sim.cluster`, `benchmarks.fleet_bench`
+  * relative markdown links — [DESIGN.md](../DESIGN.md)
+
+and exits non-zero listing every reference whose target is missing, so a
+rename/delete that leaves ARCHITECTURE.md stale fails CI instead of
+rotting silently.
+
+Usage: python scripts/check_doc_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+DOCS = [
+    REPO / "docs" / "ARCHITECTURE.md",
+    REPO / "docs" / "OPERATIONS.md",
+]
+
+# top-level roots a backticked token must start with to count as a path
+PATH_ROOTS = ("src/", "tests/", "benchmarks/", "examples/", "experiments/",
+              "scripts/", "docs/")
+
+BACKTICK_RE = re.compile(r"`([^`\n]+)`")
+MDLINK_RE = re.compile(r"\[[^\]]+\]\(([^)#\s]+)\)")
+DOTTED_RE = re.compile(r"^(repro|benchmarks)(\.[A-Za-z_][A-Za-z0-9_]*)+$")
+
+
+def module_path(dotted: str) -> list[Path]:
+    """Candidate file locations for a dotted module name."""
+    parts = dotted.split(".")
+    if parts[0] == "repro":
+        base = REPO / "src" / Path(*parts)
+    else:
+        base = REPO / Path(*parts)
+    return [base.with_suffix(".py"), base / "__init__.py"]
+
+
+def check_doc(doc: Path) -> list[str]:
+    text = doc.read_text()
+    rel = doc.relative_to(REPO)
+    missing: list[str] = []
+
+    for tok in BACKTICK_RE.findall(text):
+        tok = tok.strip()
+        if any(c in tok for c in "*<{"):  # glob / placeholder, not a path
+            continue
+        if tok.startswith(PATH_ROOTS) and " " not in tok:
+            target = REPO / tok.rstrip("/")
+            if not target.exists():
+                missing.append(f"{rel}: stale path `{tok}`")
+        elif DOTTED_RE.match(tok):
+            if not any(p.exists() for p in module_path(tok)):
+                missing.append(f"{rel}: stale module `{tok}`")
+
+    for link in MDLINK_RE.findall(text):
+        if "://" in link:  # external URL — not checked
+            continue
+        target = (doc.parent / link).resolve()
+        if not target.exists():
+            missing.append(f"{rel}: broken link ({link})")
+
+    return missing
+
+
+def main() -> int:
+    missing: list[str] = []
+    for doc in DOCS:
+        if not doc.exists():
+            missing.append(f"missing doc: {doc.relative_to(REPO)}")
+            continue
+        missing.extend(check_doc(doc))
+    if missing:
+        print("check_doc_links: FAIL")
+        for m in missing:
+            print(f"  {m}")
+        return 1
+    print(f"check_doc_links: OK ({len(DOCS)} docs)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,8 @@ FAMILIES = ("dense", "moe", "ssm", "hybrid", "audio", "vlm")
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
+    """Architecture hyperparameters for one model family instance."""
+
     name: str
     family: str                       # one of FAMILIES
     n_layers: int

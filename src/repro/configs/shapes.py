@@ -9,6 +9,8 @@ from .base import ModelConfig
 
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:
+    """One named workload shape (sequence/batch geometry + kind)."""
+
     name: str
     seq_len: int
     global_batch: int

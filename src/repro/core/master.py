@@ -223,6 +223,8 @@ class CXLCapacityManager:
 
 
 class PoolMaster:
+    """Ownership-protocol control plane for one pod's snapshot catalog."""
+
     def __init__(self, pool: HierarchicalPool, catalog: Optional[Catalog] = None,
                  clock: Optional[Clock] = None, cxl_budget: Optional[int] = None,
                  heat=None, dedup: bool = False, publish_fn=None):
@@ -266,6 +268,7 @@ class PoolMaster:
         expect_version: Optional[int] = None,
         dedup: Optional[bool] = None,
         publish_fn=None,
+        version: Optional[int] = None,
     ) -> Iterator[Tuple[str, object]]:
         """Generator form of :meth:`publish`, yielding at the owner protocol's
         phase boundaries so the deterministic simulator can interleave
@@ -305,8 +308,14 @@ class PoolMaster:
                 yield ("stale", existing)
                 return
             with self._lock:
-                version = self._versions.get(name, -1) + 1
-                self._versions[name] = version
+                # ``version``: a group-level replica manager (topology layer)
+                # assigns ONE version for a (name, version) replicated across
+                # pods, overriding this master's private counter — replicas
+                # of a snapshot must agree on version, not just bytes (I7)
+                if version is None:
+                    version = self._versions.get(name, -1) + 1
+                self._versions[name] = max(self._versions.get(name, -1),
+                                           version)
             if existing is None:
                 regions = self._build_admitted(
                     name, image, working_set,
@@ -386,13 +395,14 @@ class PoolMaster:
         drain_timeout_s: float = 30.0,
         dedup: Optional[bool] = None,
         publish_fn=None,
+        version: Optional[int] = None,
     ) -> SnapshotRegions:
         """Blocking driver over :meth:`publish_steps` (production path)."""
         regions = self._drive_steps(
             self.publish_steps(name, image, working_set, metadata=metadata,
                                zero_bitmap=zero_bitmap, gather_fn=gather_fn,
                                compress_cold=compress_cold, dedup=dedup,
-                               publish_fn=publish_fn),
+                               publish_fn=publish_fn, version=version),
             name, drain_timeout_s)
         assert regions is not None
         return regions

@@ -35,6 +35,8 @@ from .snapshot import SnapshotReader
 
 @dataclasses.dataclass
 class RestoredInstance:
+    """A restored microVM instance plus the borrow pinning its snapshot."""
+
     name: str
     instance: Instance
     engine: RestoreEngine

@@ -84,7 +84,7 @@ def uffd_zeropage_range_cost(n_pages: int, n_ranges: int = 1) -> float:
 
 
 class AllocError(RuntimeError):
-    pass
+    """A tier allocation could not be satisfied (capacity or fragmentation)."""
 
 
 class CXLBudget:

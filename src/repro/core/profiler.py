@@ -31,6 +31,8 @@ from .pagestore import PAGE_SIZE, Manifest, runs_from_pages
 
 
 class AccessRecorder:
+    """Records page touches against a manifest to derive the working set."""
+
     def __init__(self, manifest: Manifest):
         self.manifest = manifest
         self._extents = manifest.by_name()

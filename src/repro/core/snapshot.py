@@ -99,6 +99,8 @@ def _offset_runs(sorted_offsets: np.ndarray):
 
 @dataclasses.dataclass
 class PageClasses:
+    """Partition of an image's pages into zero / hot / cold classes."""
+
     zero_bitmap: np.ndarray       # bool[total_pages]
     hot_pages: np.ndarray         # sorted int64 page indices (non-zero ∩ working set)
     cold_pages: np.ndarray        # sorted int64 page indices (non-zero ∖ working set)

@@ -23,6 +23,8 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class DataConfig:
+    """Synthetic LM data-stream parameters (vocab, geometry, seed)."""
+
     vocab: int
     seq_len: int
     global_batch: int
@@ -31,6 +33,8 @@ class DataConfig:
 
 
 class SyntheticLMData:
+    """Deterministic sharded token-batch generator for training runs."""
+
     def __init__(self, cfg: DataConfig, shard: int = 0, num_shards: int = 1):
         assert cfg.global_batch % num_shards == 0
         self.cfg = cfg

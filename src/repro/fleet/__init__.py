@@ -23,6 +23,12 @@ from .driver import (
 )
 from .model import RestoreProfile, profile_reader
 from .placement import POLICIES, HostState, PlacementScheduler
+from .topology import (
+    FleetTopology,
+    plan_balanced,
+    plan_replicated,
+    plan_single,
+)
 
 __all__ = [
     "FunctionType", "Trace", "poisson_arrivals", "diurnal_arrivals",
@@ -31,4 +37,5 @@ __all__ = [
     "HostState", "PlacementScheduler", "POLICIES",
     "QueueAutoscaler",
     "FleetDriver", "FleetResult", "MODE_COLD", "MODE_JOIN", "MODE_WARM",
+    "FleetTopology", "plan_single", "plan_balanced", "plan_replicated",
 ]

@@ -15,6 +15,8 @@ import dataclasses
 
 @dataclasses.dataclass
 class QueueAutoscaler:
+    """Queue-depth host autoscaling policy (grow on backlog, shrink idle)."""
+
     min_hosts: int = 4
     max_hosts: int = 256
     up_queue_per_host: float = 8.0     # backlog/host that triggers scale-up

@@ -101,6 +101,8 @@ class FleetResult:
 
 
 class FleetDriver:
+    """Single-heap discrete-event loop serving a trace against the hosts."""
+
     def __init__(self, fleet: List[FunctionType],
                  profiles: Dict[int, RestoreProfile],
                  policy: str = "locality", seed: int = 0,
@@ -245,8 +247,11 @@ class FleetDriver:
             self._mode[i] = MODE_JOIN
         else:
             conc = len(h.active_restores) + 1
-            finish = t + self.scheduler.priced(fn, profile, conc,
-                                               h.overlap_frac(fn, profile))
+            finish = (t + self.scheduler.priced(fn, profile, conc,
+                                                h.overlap_frac(fn, profile))
+                      + self.scheduler.topology_penalty(h, fn, profile, conc))
+            if self.scheduler.topology is not None:
+                self.scheduler.topology.note_placement(h.host_id, fn.fn_id)
             h.active_restores[fn.name] = finish
             self.counters["cold_restores"] += 1
             self._mode[i] = MODE_COLD

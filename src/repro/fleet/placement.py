@@ -96,6 +96,10 @@ class PlacementScheduler:
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; want one of {POLICIES}")
         self.policy = policy
+        # optional FleetTopology (fleet/topology.py): when set, hosts whose
+        # pod lacks a replica (or that hold no MHD port) are surcharged the
+        # inter-pod hot-read penalty in score() AND in the driver's charge
+        self.topology = None
         self._rng = np.random.default_rng(np.random.SeedSequence((seed, 0x91ACE)))
         self._rr = 0
         self.stats = {"placed": 0, "join_hits": 0, "overlap_hits": 0}
@@ -113,6 +117,17 @@ class PlacementScheduler:
             self._cost[key] = v
         return v
 
+    def topology_penalty(self, h: HostState, fn: FunctionType,
+                         profile: RestoreProfile, conc: int) -> float:
+        """Fabric surcharge for a NON-join restore of ``fn`` on ``h``
+        (a joiner shares the group's already-moving reads, so it never
+        pays the fabric again); 0 when no topology is configured."""
+        topo = self.topology
+        if topo is None or profile.hot_bytes <= 0:
+            return 0.0
+        return topo.penalty_s(h.host_id, fn.fn_id,
+                              int(profile.hot_bytes // PAGE_SIZE), conc)
+
     def score(self, h: HostState, fn: FunctionType,
               profile: RestoreProfile) -> float:
         """Negative modeled time-to-ready on this host, priced with the
@@ -129,6 +144,7 @@ class PlacementScheduler:
             conc = len(h.active_restores) + 1
             ov = h.overlap_frac(fn, profile) if free else 0.0
             base = self.priced(fn, profile, conc, ov)
+            base += self.topology_penalty(h, fn, profile, conc)
         if not h.cxl_healthy and profile.hot_bytes > 0:
             # browned-out CXL link (DESIGN.md §15): the hot set arrives
             # page-at-a-time over the RNIC instead of the chunked CXL

@@ -1,3 +1,4 @@
+"""Fused snapshot data-plane kernels (single-sweep publish, verified restore)."""
 from .ops import (
     FusedPublishResult,
     FusedScatter,

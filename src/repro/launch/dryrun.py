@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
-# ^ MUST be the first two lines: jax locks device count on first init.
-
 """Multi-pod dry-run: lower + compile every (arch × shape) cell on the
 production meshes and extract memory/cost/roofline data.
 
@@ -12,6 +7,11 @@ production meshes and extract memory/cost/roofline data.
 
 Outputs one JSON per cell under experiments/dryrun/.
 """
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks device count on first init.
+
 import argparse
 import json
 import sys

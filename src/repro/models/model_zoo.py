@@ -25,6 +25,8 @@ from . import transformer as tf_mod
 
 @dataclasses.dataclass
 class Model:
+    """A built model: config plus its init/forward/cache constructors."""
+
     cfg: ModelConfig
     init: Callable
     forward: Callable

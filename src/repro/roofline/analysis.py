@@ -86,6 +86,8 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
 
 @dataclasses.dataclass
 class RooflineTerms:
+    """Per-device FLOP/byte/collective totals feeding the roofline model."""
+
     flops_per_device: float
     bytes_per_device: float
     collective_bytes_per_device: float

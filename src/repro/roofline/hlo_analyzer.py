@@ -118,6 +118,8 @@ def _call_operands(rem: str) -> List[str]:
 
 @dataclasses.dataclass
 class Instr:
+    """One parsed HLO instruction (name, result shape, op, operands)."""
+
     name: str
     shape: str
     dims: List[int]
@@ -129,6 +131,8 @@ class Instr:
 
 @dataclasses.dataclass
 class CompCost:
+    """Accumulated flop/byte/collective cost of one computation body."""
+
     flops: float = 0.0
     bytes: float = 0.0
     coll: Dict[str, float] = dataclasses.field(default_factory=dict)

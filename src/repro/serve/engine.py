@@ -19,6 +19,8 @@ from ..models.model_zoo import Model, build
 
 @dataclasses.dataclass
 class ServerInstance:
+    """A live serving instance: model, params, and decode caches."""
+
     model: Model
     params: Any
     caches: Any

@@ -59,10 +59,22 @@ RDMA_BW = 100e9 / 8          # per-host RNIC, shared by co-located restores
 CXL_PAGE_READ_S = CXL_LAT_S + PAGE_SIZE / CXL_BW
 RDMA_PAGE_READ_S = RDMA_LAT_S + PAGE_SIZE / RDMA_BW
 RDMA_INFLIGHT = 64
+# Inter-pod fabric (topology layer, DESIGN.md §16): a read that leaves the
+# host's CXL pod rides the RNIC through one extra switch hop.  Octopus-style
+# pods are port-limited and sparse, so the fleet is many small pods and the
+# inter-pod path is what a host pays when its pod holds no replica (or its
+# pod's MHD ports are exhausted).  Bandwidth is the same 100 Gb/s RNIC; the
+# hop adds fixed latency per op.
+INTER_POD_HOP_S = 1.5e-6
+INTER_POD_LAT_S = RDMA_LAT_S + INTER_POD_HOP_S
+INTER_POD_BW = RDMA_BW
+INTER_POD_INFLIGHT = RDMA_INFLIGHT
 
 
 @dataclasses.dataclass
 class RestoreResult:
+    """Timing breakdown of one restore under a named strategy."""
+
     strategy: str
     setup_s: float               # machine state + snapshot API + prefetch
     prefetch_s: float
@@ -590,6 +602,58 @@ def recuration_economics(regions, plan, expected_restores: int = 64) -> Dict[str
         "cost_s": cost,
         "net_s": benefit - cost,
         "expected_restores": float(expected_restores),
+        "worthwhile": bool(benefit > cost),
+    }
+
+
+def interpod_bulk_read_s(n_pages: int, conc: int = 1) -> float:
+    """Pipelined one-sided reads over the inter-pod fabric (RNIC + one
+    switch hop): the chunked hot pre-install repriced for a replica that
+    lives in another pod.  ``conc`` distinct streams share the RNIC."""
+    if n_pages <= 0:
+        return 0.0
+    serial = (-(-n_pages // INTER_POD_INFLIGHT) * INTER_POD_LAT_S
+              + n_pages * PAGE_SIZE / INTER_POD_BW)
+    return _shared(serial, n_pages * PAGE_SIZE, INTER_POD_BW, conc)
+
+
+def interpod_hot_penalty_s(n_hot_pages: int, conc: int = 1) -> float:
+    """Extra modeled seconds a restore pays when its hot set must cross the
+    inter-pod fabric instead of the local pod's CXL link — the surcharge the
+    pod-aware placement score applies to hosts whose pod holds no replica
+    (replica distance 1) or whose MHD ports are exhausted (attach
+    fallthrough).  Never negative: CXL is the faster path by construction."""
+    if n_hot_pages <= 0:
+        return 0.0
+    return max(0.0, interpod_bulk_read_s(n_hot_pages, conc)
+               - _cxl_chunks(n_hot_pages, conc))
+
+
+def migration_economics(hot_bytes: int, cold_bytes: int,
+                        expected_reads: int, conc: int = 1) -> Dict[str, float]:
+    """Break-even model gating snapshot replication/migration toward demand
+    (the analytic twin ``topology.MigrationManager`` consults).
+
+    Benefit: each of the next ``expected_reads`` restores from the demanding
+    pod stops paying the inter-pod hot penalty and reads intra-pod CXL.
+    Cost: the snapshot's payload crosses the inter-pod fabric once (hot +
+    cold), is rewritten into the target pod's tiers, and republishes through
+    the ownership protocol (~ one snapshot-API budget) — the same shape as
+    :func:`recuration_cost_s` with the read side repriced inter-pod."""
+    n_hot = int(hot_bytes) // PAGE_SIZE
+    n_cold = int(cold_bytes) // PAGE_SIZE
+    per_read = interpod_hot_penalty_s(n_hot, conc)
+    benefit = per_read * max(0, int(expected_reads))
+    copy_read = interpod_bulk_read_s(n_hot + n_cold)
+    copy_write = _cxl_chunks(n_hot) + _rdma_bulk(n_cold)
+    cost = copy_read + copy_write + SNAPSHOT_API_S
+    return {
+        "benefit_s": benefit,
+        "cost_s": cost,
+        "net_s": benefit - cost,
+        "per_read_saving_s": per_read,
+        "break_even_reads": (cost / per_read if per_read > 0
+                             else float("inf")),
         "worthwhile": bool(benefit > cost),
     }
 

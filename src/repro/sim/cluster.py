@@ -34,6 +34,16 @@ from ..core.pool import HierarchicalPool
 from ..core.profiler import AccessRecorder
 from ..core.serving import Instance, RestoreSession
 from ..core.snapshot import SnapshotReader
+from ..topology import (
+    InterPodRouter,
+    MigrationManager,
+    Pod,
+    PodGroup,
+    PodLinkDown,
+    PortLimiter,
+    ReplicaManager,
+    split_pod_label,
+)
 from .clock import VirtualClock
 from .faults import FaultPlan, SimTimeout
 from .invariants import InvariantChecker, InvariantViolation
@@ -48,6 +58,7 @@ class BorrowRecord:
     borrow: Borrow
     regions: object
     version: int
+    pod: int = 0
 
 
 @dataclasses.dataclass
@@ -76,6 +87,8 @@ class SimCluster:
         schedule: str = "random",
         step_quantum_s: float = 1e-6,
         cxl_budget: Optional[int] = None,
+        n_pods: int = 1,
+        ports_per_pod: Optional[int] = None,
     ):
         assert schedule in ("random", "round_robin")
         self.seed = seed
@@ -85,12 +98,40 @@ class SimCluster:
         # wake even while non-sleeping programs stay runnable (no starvation)
         self.step_quantum_s = step_quantum_s
         self.clock = VirtualClock()
-        self.pool = HierarchicalPool(cxl_capacity, rdma_capacity, clock=self.clock)
-        self.catalog = Catalog(catalog_capacity, clock=self.clock)
+        # topology: ``n_pods > 1`` builds a PodGroup of per-pod pool/
+        # catalog/master triples plus the replication/routing layer; pod 0
+        # doubles as the legacy single-pod view (self.pool/catalog/master
+        # alias it) so every existing scenario runs unchanged
+        if n_pods > 1:
+            self.group: Optional[PodGroup] = PodGroup(
+                n_pods, cxl_capacity, rdma_capacity,
+                catalog_capacity=catalog_capacity,
+                ports_per_pod=ports_per_pod, cxl_budget=cxl_budget,
+                clock=self.clock)
+            self.pods: List[Pod] = self.group.pods
+            self.pool = self.pods[0].pool
+            self.catalog = self.pods[0].catalog
+            self.master = self.pods[0].master
+            self.router: Optional[InterPodRouter] = InterPodRouter(self.group)
+            self.replicas: Optional[ReplicaManager] = ReplicaManager(
+                self.group, self.router)
+            self.migrator: Optional[MigrationManager] = MigrationManager(
+                self.replicas)
+        else:
+            self.group = None
+            self.router = None
+            self.replicas = None
+            self.migrator = None
+            self.pool = HierarchicalPool(cxl_capacity, rdma_capacity,
+                                         clock=self.clock)
+            self.catalog = Catalog(catalog_capacity, clock=self.clock)
+            # the pod's initial pool master (outside the failover group);
+            # cxl_budget arms the capacity manager for eviction scenarios
+            self.master = PoolMaster(self.pool, self.catalog,
+                                     cxl_budget=cxl_budget)
+            self.pods = [Pod(0, self.pool, self.catalog, self.master,
+                             PortLimiter())]
         self.lease = MasterLease(lease_timeout_s, clock=self.clock)
-        # the pod's initial pool master (outside the failover group);
-        # cxl_budget arms the capacity manager for eviction scenarios
-        self.master = PoolMaster(self.pool, self.catalog, cxl_budget=cxl_budget)
         # failover-capable nodes, one per host (ids 1..N; 0 is NO_MASTER)
         self.nodes: Dict[int, FailoverNode] = {
             i: FailoverNode(i, self.pool, self.catalog, self.lease,
@@ -103,16 +144,21 @@ class SimCluster:
         self.step_no = 0
         self.trace: List[Tuple[int, str, str]] = []
         self.events: List[str] = []
-        # borrow accounting (entry index -> counts); orphans from crashed
-        # programs stay counted — the refcount they leaked is still real.
-        self.live: Dict[int, int] = {}
-        self.midflight: Dict[int, int] = {}
+        # borrow accounting ((pod id, entry index) -> counts); orphans from
+        # crashed programs stay counted — the refcount they leaked is real.
+        self.live: Dict[Tuple[int, int], int] = {}
+        self.midflight: Dict[Tuple[int, int], int] = {}
         self.borrow_records: List[BorrowRecord] = []
         self.orphaned_records: List[BorrowRecord] = []
         # dedup (I6) accounting: regions built by an in-flight publish that
         # the catalog does not point at yet.  A crashed owner leaves its
         # record here forever — the references it leaked are still real.
+        # ``pending_regions`` is pod 0's list (single-pod back-compat);
+        # ``pending_by_pod`` holds every pod's, keyed by pod id.
         self.pending_regions: List[object] = []
+        self.pending_by_pod: Dict[int, List[object]] = {0: self.pending_regions}
+        for _p in self.pods[1:]:
+            self.pending_by_pod[_p.pod_id] = []
         # canonical content per (name, version): the published StateImage
         self.content: Dict[str, Dict[int, StateImage]] = {}
         self.restored: List[dict] = []
@@ -260,40 +306,47 @@ class SimCluster:
     # ------------------------------------------------------------------
     # tracked borrow/release (keeps the invariant accounting honest)
     # ------------------------------------------------------------------
-    def borrow_program_steps(self, host: str, name: str, precheck: bool = True):
+    def borrow_program_steps(self, host: str, name: str, precheck: bool = True,
+                             pod: int = 0):
         """``yield from`` this inside a host program: advances the real
         ``Catalog.borrow_steps`` one protocol phase per scheduler turn and
-        maintains the cluster's refcount accounting.  Returns a
-        :class:`BorrowRecord` (or None ⇒ cold start) via StopIteration."""
+        maintains the cluster's refcount accounting (keyed by ``(pod,
+        entry index)``).  Returns a :class:`BorrowRecord` (or None ⇒ cold
+        start) via StopIteration."""
         result: Optional[BorrowRecord] = None
-        for label, val in self.catalog.borrow_steps(name, state_precheck=precheck):
+        catalog = self.pods[pod].catalog
+        for label, val in catalog.borrow_steps(name, state_precheck=precheck):
             if label == "refcount_incremented":
-                self.midflight[val.index] = self.midflight.get(val.index, 0) + 1
+                key = (pod, val.index)
+                self.midflight[key] = self.midflight.get(key, 0) + 1
             elif label == "doomed":
-                self.midflight[val.index] = self.midflight.get(val.index, 0) - 1
+                key = (pod, val.index)
+                self.midflight[key] = self.midflight.get(key, 0) - 1
             elif label == "done" and val is not None:
-                idx = val.entry.index
-                self.midflight[idx] = self.midflight.get(idx, 0) - 1
-                self.live[idx] = self.live.get(idx, 0) + 1
-                result = BorrowRecord(host, name, val, val.regions, val.version)
+                key = (pod, val.entry.index)
+                self.midflight[key] = self.midflight.get(key, 0) - 1
+                self.live[key] = self.live.get(key, 0) + 1
+                result = BorrowRecord(host, name, val, val.regions,
+                                      val.version, pod=pod)
                 self.borrow_records.append(result)
             yield f"borrow:{label}"
         return result
 
     def release(self, rec: BorrowRecord) -> None:
         rec.borrow.release()
-        self.live[rec.borrow.entry.index] -= 1
+        self.live[(rec.pod, rec.borrow.entry.index)] -= 1
         self.borrow_records.remove(rec)
 
-    def track_borrow(self, host: str, name: str,
-                     borrow: Optional[Borrow]) -> Optional[BorrowRecord]:
+    def track_borrow(self, host: str, name: str, borrow: Optional[Borrow],
+                     pod: int = 0) -> Optional[BorrowRecord]:
         """Account for a borrow acquired outside ``borrow_program_steps``
         (e.g. through ``LeaseFallback.acquire``, which is one atomic RPC)."""
         if borrow is None:
             return None
-        idx = borrow.entry.index
-        self.live[idx] = self.live.get(idx, 0) + 1
-        rec = BorrowRecord(host, name, borrow, borrow.regions, borrow.version)
+        key = (pod, borrow.entry.index)
+        self.live[key] = self.live.get(key, 0) + 1
+        rec = BorrowRecord(host, name, borrow, borrow.regions, borrow.version,
+                           pod=pod)
         self.borrow_records.append(rec)
         return rec
 
@@ -616,3 +669,154 @@ class SimCluster:
         yield "restore:verified"
         self.release(rec)
         yield "restore:released"
+
+    # ------------------------------------------------------------------
+    # multi-pod program library (n_pods > 1; DESIGN.md §16)
+    # ------------------------------------------------------------------
+    def _drive_group_steps(self, tag: str, name: str, gen, img,
+                           drain_limit: Optional[int], drain_sleep: float):
+        """Shared wrapper over the ReplicaManager step generators: tracks
+        per-pod pending regions for I6, records canonical content (``img``)
+        the moment a replica republishes (``pod<i>:done``), translates
+        drain/busy labels into scheduler sleeps, and aborts on
+        ``drain_limit`` exhaustion."""
+        polls = 0
+        built: Dict[int, object] = {}
+        for label, val in gen:
+            pid, base = split_pod_label(label)
+            if pid is not None and base in ("built_new", "rebuilt"):
+                built[pid] = val
+                self.pending_by_pod.setdefault(pid, []).append(val)
+            elif pid is not None and base == "done":
+                if pid in built:
+                    self.pending_by_pod[pid].remove(built.pop(pid))
+                # this replica is borrowable NOW: a borrower scheduled next
+                # turn must find the version's canonical bytes
+                if img is not None:
+                    self.content.setdefault(name, {})[val.version] = img
+                self.events.append(f"{tag}:{name}:pod{pid}:v{val.version}")
+            elif label == "done":
+                self.events.append(f"{tag}_done:{name}")
+            yield f"{tag}:{label}"
+            if base in ("draining", "owner_busy", "gc_pending") \
+                    or label == "group_busy":
+                polls += 1
+                if drain_limit is not None and polls >= drain_limit:
+                    self.events.append(f"drain_timeout:{name}")
+                    gen.close()
+                    return
+                yield ("sleep", drain_sleep)
+
+    def group_publish_program(self, name: str, value: float,
+                              pods: Optional[List[int]] = None,
+                              drain_limit: Optional[int] = None,
+                              drain_sleep: float = 1e-5,
+                              dedup: Optional[bool] = None, **image_kw):
+        """Replicated publish/update through ``ReplicaManager.publish_steps``
+        (group version, lockstep barrier), one protocol phase per turn."""
+        img, ws = self.make_image(value, **image_kw)
+        gen = self.replicas.publish_steps(name, img, ws, pods=pods,
+                                          dedup=dedup)
+        yield from self._drive_group_steps("gpub", name, gen, img,
+                                           drain_limit, drain_sleep)
+
+    def group_delete_program(self, name: str,
+                             drain_limit: Optional[int] = None,
+                             drain_sleep: float = 1e-4):
+        """Replicated delete: tombstones every replica, then drains/GCs
+        each pod — the cross-pod delete drain window of I7."""
+        gen = self.replicas.delete_steps(name)
+        yield from self._drive_group_steps("gdel", name, gen, None,
+                                           drain_limit, drain_sleep)
+
+    def migrate_program(self, name: str, dst_pod: int, expected_reads: int,
+                        drop_source: bool = False,
+                        drain_limit: Optional[int] = None,
+                        drain_sleep: float = 1e-4):
+        """Break-even-gated migration through ``MigrationManager``: adds a
+        replica at the current version (bit-identical reconstruction) and
+        optionally retires the least-demanded source."""
+        gen = self.migrator.migrate_steps(name, dst_pod, expected_reads,
+                                          drop_source=drop_source)
+        yield from self._drive_group_steps("migrate", name, gen, None,
+                                           drain_limit, drain_sleep)
+
+    def group_borrower_program(self, host: str, name: str, attempts: int = 4,
+                               read_pages: int = 2, pause_s: float = 1e-4):
+        """Borrow via replica routing: home-pod CXL when an MHD port
+        grants (held for the borrow, detached at release), else inter-pod
+        RDMA to the least-served reachable replica; partitioned/dead pods
+        fall back to cold start.  Hot reads are verified bit-identical to
+        the canonical image; inter-pod reads are charged on the router
+        (and a partition landing mid-read aborts the attempt cleanly)."""
+        successes = 0
+        for i in range(attempts):
+            route = self.replicas.borrow_route(host, name)
+            if route is None:
+                self.events.append(f"cold_start:{host}")
+                yield ("sleep", pause_s)
+                continue
+            mode, pid = route
+            pod = self.pods[pid]
+            rec = None
+            try:
+                rec = yield from self.borrow_program_steps(host, name, pod=pid)
+                if rec is None:
+                    self.events.append(f"cold_start:{host}")
+                    yield ("sleep", pause_s)
+                    continue
+                view = pod.pool.host_view(f"{host}:g{i}")
+                reader = SnapshotReader(rec.borrow.regions, view,
+                                        pod.pool.rdma)
+                reader.invalidate_cxl()
+                yield "borrower:flushed"
+                canonical = self.content[name][rec.version].pages_matrix()
+                for p in reader.hot_page_indices()[:read_pages]:
+                    if mode == "interpod":
+                        # remote replica: the page crosses the inter-pod
+                        # fabric — modeled charge + partition check
+                        try:
+                            self.router.charge_read(host, pid, 4096)
+                        except PodLinkDown:
+                            self.events.append(
+                                f"partition_abort:{host}:{name}")
+                            break
+                    got = reader.read_page(int(p))
+                    if not np.array_equal(got, canonical[int(p)]):
+                        raise InvariantViolation(
+                            f"[seed={self.seed} step={self.step_no}] {host} "
+                            f"observed torn/stale bytes of {name!r} "
+                            f"v{rec.version} page {int(p)} on pod {pid}")
+                    yield f"borrower:read:{mode}"
+                else:
+                    successes += 1
+            finally:
+                if rec is not None:
+                    self.release(rec)
+                if mode == "cxl":
+                    pod.ports.detach(host)
+            yield "borrower:released"
+            yield ("sleep", pause_s)
+        self.events.append(f"group_borrower_done:{host}:{successes}/{attempts}")
+
+    def partition_program(self, a: int, b: int, delay_s: float,
+                          up: bool = False):
+        """Scripted fabric event: after ``delay_s`` of simulated time the
+        data-plane link between pods ``a`` and ``b`` goes down (or comes
+        back with ``up=True``); catalog atomics are unaffected."""
+        yield ("sleep", delay_s)
+        self.group.set_partition(a, b, up=up)
+        self.events.append(
+            f"{'heal' if up else 'partition'}:{a}-{b}")
+        yield "partitioned" if not up else "healed"
+
+    def pod_loss_program(self, pod_id: int, delay_s: float):
+        """Scripted pod loss: after ``delay_s`` the pod dies and the
+        replica manager promotes survivors; names that lost their last
+        replica are recorded as ``replica_lost:<name>`` events."""
+        yield ("sleep", delay_s)
+        lost = self.replicas.promote(pod_id)
+        self.events.append(f"pod_lost:{pod_id}")
+        for name in lost:
+            self.events.append(f"replica_lost:{name}")
+        yield "pod_lost"

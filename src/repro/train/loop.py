@@ -28,6 +28,8 @@ from .trainstep import TrainState, init_train_state, make_train_step
 
 @dataclasses.dataclass
 class LoopConfig:
+    """Training-loop schedule (total steps and checkpoint cadence)."""
+
     steps: int = 50
     ckpt_every: int = 20
     ckpt_name: str = "train-ckpt"
@@ -36,6 +38,8 @@ class LoopConfig:
 
 
 class Trainer:
+    """Runs the jitted train step over the data stream, checkpointing."""
+
     def __init__(
         self,
         model: Model,

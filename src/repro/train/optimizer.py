@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 
 class AdamWState(NamedTuple):
+    """AdamW optimizer state (step counter plus moment pytrees)."""
+
     step: jnp.ndarray          # int32 scalar
     m: Any                     # first moment (pytree like params)
     v: Any                     # second moment
@@ -21,6 +23,8 @@ class AdamWState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class AdamWConfig:
+    """AdamW hyperparameters (learning rate, betas, weight decay)."""
+
     lr: float = 3e-4
     b1: float = 0.9
     b2: float = 0.95

@@ -16,12 +16,16 @@ from .optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
 
 
 class TrainState(NamedTuple):
+    """Everything a train step carries forward (params + optimizer)."""
+
     params: Any
     opt: AdamWState
 
 
 @dataclasses.dataclass(frozen=True)
 class LossConfig:
+    """Auxiliary-loss weights layered onto the cross-entropy objective."""
+
     z_loss: float = 1e-4
     aux_weight: float = 0.01     # MoE load-balance loss
     mtp_weight: float = 0.3      # DeepSeek-V3 MTP objective weight

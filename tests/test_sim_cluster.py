@@ -119,7 +119,7 @@ def scenario_host_crash_mid_borrow(seed):
     entry = c.catalog.find("s")
     assert "crashed:h1" in c.events
     assert "drain_timeout:s" in c.events, "owner should time out on the leaked refcount"
-    assert entry.refcount.load() == 1 and c.midflight[entry.index] == 1
+    assert entry.refcount.load() == 1 and c.midflight[(0, entry.index)] == 1
     assert entry.state.load() == STATE_TOMBSTONE
     return c
 

@@ -1,0 +1,265 @@
+"""Multi-pod scenario matrix: replica coherence (I7) and the cluster-level
+single writer (I8) under the deterministic simulator (DESIGN.md §16).
+
+Same discipline as ``test_sim_cluster.py``: every scenario is a pure
+function of a seed, drives the *real* topology objects (``PodGroup``,
+``ReplicaManager``, ``MigrationManager``, ``InterPodRouter``) through the
+seeded scheduler, and the invariant checker — now including per-step I7
+bit-identity and I8 writer-lock checks — runs after every step.  Negative
+tests prove the new checks actually fire on protocol bypasses.
+
+Seed control: ``AQUIFER_SIM_SEED`` (default 0) offsets every scenario's
+seed, matching the nightly rotation.
+"""
+import os
+
+import pytest
+
+from repro.core import STATE_PUBLISHED
+from repro.sim import InvariantViolation, SimCluster
+
+SEED = int(os.environ.get("AQUIFER_SIM_SEED", "0"))
+
+
+def _pod_cluster(seed, n_pods=2, ports_per_pod=None, hosts=()):
+    c = SimCluster(n_hosts=max(1, len(hosts)), seed=seed, n_pods=n_pods,
+                   ports_per_pod=ports_per_pod, schedule="round_robin")
+    for host, pod in hosts:
+        c.group.assign_host(host, pod)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# scenario library: name -> callable(seed) -> SimCluster (assertions inside)
+# ---------------------------------------------------------------------------
+
+def scenario_replicated_publish_and_update(seed):
+    """k=2 publish, then an update racing borrowers homed on three pods:
+    the lockstep barrier means no step ever observes mixed PUBLISHED
+    versions (I7 is checked after every one of these steps)."""
+    c = _pod_cluster(seed, n_pods=3,
+                     hosts=[("h1", 0), ("h2", 1), ("h3", 2)])
+    c.add_program("owner", c.group_publish_program("s", 1.0, pods=[0, 1]))
+    c.run()
+    assert c.replicas.replica_pods("s") == [0, 1]
+    c.add_program("owner2", c.group_publish_program("s", 2.0))
+    for h in ("h1", "h2", "h3"):
+        c.add_program(h, c.group_borrower_program(h, "s", attempts=3))
+    c.run()
+    assert c.replicas.version_of("s") == 1
+    for pid in (0, 1):
+        entry = c.pods[pid].catalog.find("s")
+        assert entry.version == 1 and entry.state.load() == STATE_PUBLISHED
+    assert any("barrier" in lbl for _s, _n, lbl in c.trace)
+    done = [e for e in c.events if e.startswith("group_borrower_done")]
+    assert len(done) == 3
+    # h3 has no pod-2 replica: its reads must have crossed the fabric
+    assert c.replicas.stats["routed_interpod"] > 0
+    assert c.router.stats["interpod_reads"] > 0
+    return c
+
+
+def scenario_replica_delete_drain_window(seed):
+    """Group delete while a borrow is live on one replica: every replica
+    tombstones first (no new borrows anywhere), then the delete polls GC
+    until the straggler releases — the cross-pod drain window of I7."""
+    c = _pod_cluster(seed, hosts=[("h1", 1)])
+    c.add_program("owner", c.group_publish_program("s", 1.0, pods=[0, 1]))
+    c.run()
+
+    def holder():
+        rec = yield from c.borrow_program_steps("h1", "s", pod=1)
+        assert rec is not None
+        yield "held"
+        yield ("sleep", 3e-3)       # keep the pin open across the delete
+        c.release(rec)
+        yield "released"
+
+    c.add_program("h1", holder())
+    c.add_program("deleter", c.delayed(
+        1e-4, c.group_delete_program("s", drain_limit=None)))
+    c.run(max_steps=40000)
+    assert "gdel_done:s" in c.events
+    assert c.replicas.names() == []
+    # the drain window actually opened: delete polled GC at least once
+    assert any(":gc_pending" in lbl for _s, n, lbl in c.trace
+               if n == "deleter"), "delete never waited on a live borrow"
+    for pid in (0, 1):
+        entry = c.pods[pid].catalog.find("s")
+        assert entry is None or entry.state.load() != STATE_PUBLISHED
+    return c
+
+
+def scenario_pod_link_partition(seed):
+    """Data-plane partition between a host's home pod and the only replica
+    pod: routed reads refuse cleanly (cold-start fallback, never stale
+    bytes); healing the link restores inter-pod routing."""
+    c = _pod_cluster(seed, hosts=[("h1", 1), ("h2", 1)])
+    c.add_program("owner", c.group_publish_program("s", 1.0, pods=[0]))
+    c.run()
+    c.add_program("cut", c.partition_program(1, 0, delay_s=1.5e-4))
+    c.add_program("h1", c.group_borrower_program("h1", "s", attempts=4,
+                                                 pause_s=1e-4))
+    c.run(max_steps=20000)
+    assert "partition:1-0" in c.events
+    assert c.replicas.stats["routed_none"] > 0, \
+        "partitioned host should have fallen back to cold start"
+    assert any(e.startswith("cold_start:h1") for e in c.events)
+    # heal: routing over the fabric works again (h2 starts after the heal)
+    before = c.replicas.stats["routed_interpod"]
+    c.add_program("heal", c.partition_program(1, 0, delay_s=0.0, up=True))
+    c.add_program("h2", c.delayed(
+        1e-4, c.group_borrower_program("h2", "s", attempts=2)))
+    c.run(max_steps=30000)
+    assert c.replicas.stats["routed_interpod"] > before
+    assert "group_borrower_done:h2:2/2" in c.events
+    return c
+
+
+def scenario_owner_pod_loss_promote(seed):
+    """Losing a whole pod promotes surviving replicas (a routing change,
+    not a copy — survivors are already PUBLISHED at the group version);
+    single-replica names on the dead pod are reported lost."""
+    c = _pod_cluster(seed, hosts=[("h1", 0), ("h2", 1)])
+    c.add_program("owner_s", c.group_publish_program("s", 1.0, pods=[0, 1]))
+    c.add_program("owner_solo", c.group_publish_program("solo", 3.0, pods=[0]))
+    c.run()
+    c.add_program("loss", c.pod_loss_program(0, delay_s=1.5e-4))
+    c.add_program("h1", c.group_borrower_program("h1", "s", attempts=4,
+                                                 pause_s=1e-4))
+    c.add_program("h2", c.group_borrower_program("h2", "solo", attempts=4,
+                                                 pause_s=1e-4))
+    c.run(max_steps=30000)
+    assert "pod_lost:0" in c.events
+    assert "replica_lost:solo" in c.events
+    assert c.replicas.replica_pods("s") == [1]
+    assert c.replicas.stats["promotions"] >= 2
+    # after the loss, "solo" readers cold-start rather than touch dead bytes
+    assert any(e.startswith("cold_start:h2") for e in c.events)
+    # "s" stays servable throughout from the surviving replica
+    assert "group_borrower_done:h1:4/4" in c.events
+    return c
+
+
+def scenario_port_starvation_burst(seed):
+    """Fan-out burst of 5 hosts against a 2-port MHD: beyond-limit borrows
+    fall through to inter-pod RDMA (even toward the home pod) instead of
+    queueing forever; everyone completes, peak attach never exceeds the
+    port limit."""
+    hosts = [(f"h{i}", 0) for i in range(1, 6)]
+    c = _pod_cluster(seed, ports_per_pod=2, hosts=hosts)
+    c.add_program("owner", c.group_publish_program("s", 1.0, pods=[0, 1]))
+    c.run()
+    for h, _pod in hosts:
+        c.add_program(h, c.group_borrower_program(h, "s", attempts=3))
+    c.run(max_steps=40000)
+    done = [e for e in c.events if e.startswith("group_borrower_done")]
+    assert sorted(done) == sorted(
+        f"group_borrower_done:h{i}:3/3" for i in range(1, 6))
+    ports = c.pods[0].ports
+    assert ports.stats["peak"] <= 2, "port limit was exceeded"
+    assert ports.stats["fallthrough"] > 0, \
+        "burst never overflowed to the fabric"
+    assert c.replicas.stats["routed_local"] > 0
+    assert c.replicas.stats["routed_interpod"] > 0
+    return c
+
+
+def scenario_migration_break_even(seed):
+    """Migration is economics-gated: a cold name (1 expected read) stays
+    put; a hot one (10k expected reads) replicates to the demand pod at
+    the same version, after which that pod's hosts borrow locally."""
+    c = _pod_cluster(seed, ports_per_pod=4, hosts=[("h1", 1), ("h2", 1)])
+    c.add_program("owner", c.group_publish_program("s", 1.0, pods=[0]))
+    c.run()
+    c.add_program("mig_cold", c.migrate_program("s", 1, expected_reads=1))
+    c.run()
+    assert c.migrator.stats["skipped_uneconomic"] == 1
+    assert c.replicas.replica_pods("s") == [0]
+    c.add_program("mig_hot", c.migrate_program("s", 1, expected_reads=10000))
+    c.run()
+    assert c.migrator.stats["migrated"] == 1
+    assert c.replicas.replica_pods("s") == [0, 1]
+    assert c.replicas.version_of("s") == 0
+    local_before = c.replicas.stats["routed_local"]
+    c.add_program("h1", c.group_borrower_program("h1", "s", attempts=2))
+    c.run(max_steps=20000)
+    assert c.replicas.stats["routed_local"] > local_before
+    assert "group_borrower_done:h1:2/2" in c.events
+    return c
+
+
+SCENARIOS = {
+    "replicated_publish_and_update": scenario_replicated_publish_and_update,
+    "replica_delete_drain_window": scenario_replica_delete_drain_window,
+    "pod_link_partition": scenario_pod_link_partition,
+    "owner_pod_loss_promote": scenario_owner_pod_loss_promote,
+    "port_starvation_burst": scenario_port_starvation_burst,
+    "migration_break_even": scenario_migration_break_even,
+}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("offset", [0, 1, 2])
+def test_scenario(name, offset):
+    SCENARIOS[name](SEED + 100 * offset + 7 * (sorted(SCENARIOS).index(name) + 1))
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_is_deterministic(name):
+    seed = SEED + 2000 + sorted(SCENARIOS).index(name)
+    a = SCENARIOS[name](seed)
+    b = SCENARIOS[name](seed)
+    assert a.trace == b.trace and a.events == b.events
+
+
+# ---------------------------------------------------------------------------
+# negative tests: the I7/I8 checkers actually fire on protocol bypasses
+# ---------------------------------------------------------------------------
+
+def test_i8_bypass_is_detected():
+    """A pod-local owner mutating a group-managed name without the group
+    writer lock is flagged mid-flight."""
+    c = _pod_cluster(SEED)
+    c.add_program("owner", c.group_publish_program("s", 1.0, pods=[0, 1]))
+    c.run()
+    img, ws = c.make_image(9.0)
+
+    def rogue():
+        for label, _val in c.pods[1].master.publish_steps("s", img, ws):
+            yield f"rogue:{label}"
+
+    c.add_program("rogue", rogue())
+    with pytest.raises(InvariantViolation, match="I8"):
+        c.run()
+
+
+def test_i7_mixed_versions_are_detected():
+    """Two PUBLISHED replicas at different versions (here produced by a
+    blocking pod-local republish outside the group protocol) violate
+    replica version coherence."""
+    c = _pod_cluster(SEED)
+    c.add_program("owner", c.group_publish_program("s", 1.0, pods=[0, 1]))
+    c.run()
+    img, ws = c.make_image(9.0)
+    c.pods[1].master.publish("s", img, ws)   # bypass: pod 1 jumps to v1
+    with pytest.raises(InvariantViolation, match="I7"):
+        c.checker.check_all()
+
+
+def test_i7_divergent_bytes_are_detected():
+    """Same version, different bytes: the bit-identity sweep catches a
+    replica whose content silently diverged."""
+    c = _pod_cluster(SEED)
+    c.add_program("owner", c.group_publish_program("s", 1.0, pods=[0, 1]))
+    c.run()
+    entry = c.pods[1].catalog.find("s")
+    pool = c.pods[1].pool
+    # corrupt one hot page of pod 1's replica in place (private CXL region)
+    r = entry.regions
+    page = pool.cxl.read(r.hot_off, 4096).copy()
+    page[:16] ^= 0xFF
+    pool.cxl.write(r.hot_off, page)
+    c.checker._replica_sigs.pop("s", None)   # force a fresh bit-compare
+    with pytest.raises(InvariantViolation, match="I7"):
+        c.checker.check_all()
