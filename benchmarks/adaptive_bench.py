@@ -41,16 +41,21 @@ from pathlib import Path
 
 import numpy as np
 
+from collections import deque
+
 from repro.core import (
     AccessRecorder,
     HeatRegistry,
     HierarchicalPool,
+    LayoutOrderPolicy,
     Orchestrator,
     PoolMaster,
+    PredictedOrderPolicy,
     StateImage,
+    fit_prefetch_model,
 )
 from repro.core.pagestore import PAGE_SIZE
-from repro.serve.strategies import FAULT_TRAP_S
+from repro.serve.strategies import FAULT_TRAP_S, residual_stall_s
 
 OUT = Path(__file__).resolve().parents[1] / "experiments"
 
@@ -190,6 +195,161 @@ def run_adaptive(quick: bool = False, restores_per_phase: int = 3) -> dict:
     }
 
 
+# -- predictive prefetch A/B (ISSUE 10): phase-shifting first-touch order ----
+
+def make_shift_image(seed: int = 0, quick: bool = False):
+    """Image whose cold ``table`` splits into equal regions that the
+    workload visits in a PERMUTED order — snapshot layout order is
+    maximally wrong about what the guest touches next."""
+    rng = np.random.default_rng(seed)
+    n_regions = 6
+    region_pages = 24 if quick else 48
+    n_table = n_regions * region_pages
+    img = StateImage.build({
+        "params": rng.standard_normal(32 * PAGE_SIZE // 4).astype(np.float32),
+        "table": rng.integers(1, 255, (n_table * PAGE_SIZE,)).astype(np.uint8),
+        "arena": np.zeros(64 * PAGE_SIZE, np.uint8),
+    })
+    rec = AccessRecorder(img.manifest)
+    rec.touch_array("params")               # hot set = params only
+    t0 = img.manifest.by_name()["table"].first_page
+    perm = rng.permutation(n_regions)
+    visit = np.concatenate([
+        np.arange(t0 + r * region_pages, t0 + (r + 1) * region_pages)
+        for r in perm])
+    return img, rec.working_set(), visit, perm.tolist()
+
+
+def paced_drain_restore(orch, name, image, visit, policy,
+                        budget_pages: int = 16) -> dict:
+    """Deterministic, thread-free prefetch-vs-touch interleaving at EQUAL
+    prefetch bandwidth for every policy: each step installs the next
+    ``budget_pages`` pages from the policy-ordered cold-extent queue (real
+    RDMA reads), then the guest touches the next ``budget_pages`` pages of
+    the visit sequence.  A touched page that has not landed is a residual
+    demand fault — charged the full demand stall and served synchronously —
+    and, for a reseeding policy, re-orders the remaining queue from the
+    faulting page exactly like the NodePageServer pump."""
+    ri = orch.restore(name, pre_install=True, prefetch_cold=False)
+    assert ri is not None, "warm restore failed"
+    eng = ri.engine
+    q = deque(policy.order_extents(eng, None))
+    n_demand = 0
+    prefetched_pages = 0
+    i = 0
+    while i < len(visit):
+        budget = budget_pages
+        while budget > 0 and q:
+            es, en, rank0, pool_off, nbytes = q.popleft()
+            if eng.instance.present[es:es + en].all():
+                continue
+            payload = eng.reader.rdma.read(pool_off, nbytes)
+            eng.ledger.add("rdma_prefetch",
+                           eng._rdma_arbiter.charge(nbytes))
+            eng._install_verified(np.arange(es, es + en),
+                                  eng.reader.split_cold_extent(
+                                      rank0, en, payload))
+            prefetched_pages += en
+            budget -= en
+        chunk = visit[i:i + budget_pages]
+        i += budget_pages
+        for p in chunk:
+            p = int(p)
+            if eng.instance.present[p]:
+                continue
+            n_demand += 1            # residual stall: prefetch was elsewhere
+            kind, off = eng.reader.lookup(p)
+            nbytes = (eng.reader.cold_extent(off)[1]
+                      if kind == "rdma_z" else PAGE_SIZE)
+            eng.ledger.add("rdma_read", eng._rdma_arbiter.charge(nbytes))
+            eng.instance.uffd_copy(p, eng.reader.read_page(p))
+            if policy.reseed_on_demand and q:
+                rank = {e[0]: j for j, e in enumerate(
+                    policy.order_extents(eng, faulting_page=p))}
+                q = deque(sorted(q, key=lambda e: rank.get(e[0], len(rank))))
+    eng.install_all_sync()
+    bit_identical = bool(np.array_equal(ri.instance.image.buf, image.buf))
+    ri.shutdown()
+    return {
+        "demand_faults": n_demand,
+        "prefetched_pages": prefetched_pages,
+        "residual_stall_s": residual_stall_s(n_demand),
+        "bit_identical": bit_identical,
+    }
+
+
+def run_prefetch_ab_point(seed: int, quick: bool,
+                          n_training: int = 2) -> dict:
+    """One phase-shift point: train the first-touch model from ``n_training``
+    instrumented restores, then A/B LayoutOrderPolicy vs PredictedOrderPolicy
+    at identical prefetch bandwidth over the same visit sequence."""
+    img, ws, visit, perm = make_shift_image(seed=seed, quick=quick)
+    pool = HierarchicalPool(cxl_capacity=512 << 20, rdma_capacity=1 << 30)
+    heat = HeatRegistry(clock=pool.clock, half_life_s=1e6)
+    master = PoolMaster(pool, heat=heat)
+    regions = master.publish("shift", img, ws)
+
+    # training: synchronous demand-path restores replay the workload and
+    # feed ordered TouchEvents (the engine streams them per session)
+    train = Orchestrator("train-host", pool, master.catalog, heat=heat,
+                         use_node_server=False, use_async_rdma=False)
+    for _ in range(n_training):
+        ri = train.restore("shift", pre_install=True, prefetch_cold=False)
+        assert ri is not None
+        for j in range(0, len(visit), 16):
+            ri.engine.touch_pages(visit[j:j + 16])
+        ri.engine.install_all_sync()
+        assert np.array_equal(ri.instance.image.buf, img.buf)
+        ri.shutdown()
+
+    hm = heat.find("shift", regions.version)
+    # long horizon + gentle discount: rank the WHOLE phase chain, not just
+    # the first few runs (the pump reseeds mid-flight either way)
+    model = fit_prefetch_model(hm, discount=0.9, horizon=int(hm.n_runs))
+    assert model is not None, "training restores produced no sequences"
+
+    # measurement: heat-free orchestrator (the A run must not teach the B
+    # run), same bandwidth + visit sequence for both policies
+    bench = Orchestrator("ab-host", pool, master.catalog,
+                         use_node_server=False, use_async_rdma=False)
+    layout = paced_drain_restore(
+        bench, "shift", img, visit, LayoutOrderPolicy(8))
+    predicted = paced_drain_restore(
+        bench, "shift", img, visit, PredictedOrderPolicy(8, model=model))
+    # a policy that predicts perfectly leaves 0 residual faults; floor the
+    # denominator at one fault so the ratio stays finite / json-clean
+    reduction = (layout["residual_stall_s"]
+                 / max(predicted["residual_stall_s"], residual_stall_s(1)))
+    return {
+        "seed": seed,
+        "region_visit_order": perm,
+        "visit_pages": int(len(visit)),
+        "layout": layout,
+        "predicted": predicted,
+        "layout_stall_s": layout["residual_stall_s"],
+        "predicted_stall_s": predicted["residual_stall_s"],
+        "stall_reduction_x": float(reduction),
+        "bit_identical": bool(layout["bit_identical"]
+                              and predicted["bit_identical"]),
+    }
+
+
+def run_prefetch_ab(quick: bool = False) -> dict:
+    """--quick: one seed (the CI-gated point).  Full: sweep several phase
+    permutations; the acceptance number is the WORST reduction observed."""
+    seeds = [0] if quick else [0, 1, 2, 3]
+    points = [run_prefetch_ab_point(s, quick) for s in seeds]
+    worst = min(p["stall_reduction_x"] for p in points)
+    return {
+        "points": points,
+        "layout_stall_s": points[0]["layout_stall_s"],
+        "predicted_stall_s": points[0]["predicted_stall_s"],
+        "stall_reduction_x": points[0]["stall_reduction_x"],
+        "min_stall_reduction_x": float(worst),
+        "bit_identical": all(p["bit_identical"] for p in points),
+    }
+
+
 def run_capacity(quick: bool = False) -> dict:
     """CXL budget sized for ~2 of 4 snapshots' hot regions: later publishes
     must clock-demote LRU victims (or spill their own hot set) and every
@@ -232,16 +392,20 @@ def run_capacity(quick: bool = False) -> dict:
 
 def run(quick: bool = False) -> dict:
     adaptive = run_adaptive(quick=quick)
+    prefetch_ab = run_prefetch_ab(quick=quick)
     capacity = run_capacity(quick=quick)
     criteria = {
         "recovery_ge_1_3x": bool(adaptive["recovery_x"] >= 1.3),
         "all_restores_bit_identical": bool(adaptive["all_bit_identical"]
-                                           and capacity["all_bit_identical"]),
+                                           and capacity["all_bit_identical"]
+                                           and prefetch_ab["bit_identical"]),
         "recuration_happened": adaptive["snapshot"]["recurated"]["version"] >= 1,
         "capacity_managed": capacity["demoted_or_degraded"] >= 1,
+        "predicted_stall_cut_ge_2x":
+            bool(prefetch_ab["min_stall_reduction_x"] >= 2.0),
     }
-    out = {"adaptive": adaptive, "capacity": capacity,
-           "criteria": criteria, "quick": quick}
+    out = {"adaptive": adaptive, "prefetch_ab": prefetch_ab,
+           "capacity": capacity, "criteria": criteria, "quick": quick}
     OUT.mkdir(exist_ok=True)
     name = "adaptive_bench_quick.json" if quick else "adaptive_bench.json"
     (OUT / name).write_text(json.dumps(out, indent=2))
@@ -264,6 +428,10 @@ def main():
     print(f"restore-to-first-response: frozen {a['frozen_e2e_s']*1e3:.3f} ms "
           f"-> adaptive {a['adaptive_e2e_s']*1e3:.3f} ms "
           f"({a['recovery_x']:.2f}x recovery)")
+    ab = out["prefetch_ab"]
+    print(f"prefetch A/B: layout stall {ab['layout_stall_s']*1e3:.3f} ms -> "
+          f"predicted {ab['predicted_stall_s']*1e3:.3f} ms "
+          f"(min reduction over sweep: {ab['min_stall_reduction_x']:.2f}x)")
     print(f"capacity: {out['capacity']['budget_report']}")
     ok = all(out["criteria"].values())
     print(f"criteria: {out['criteria']}  ->  {'PASS' if ok else 'FAIL'}")

@@ -81,6 +81,13 @@ BASELINES: Dict[str, List[KeySpec]] = {
         "criteria.all_restores_bit_identical",
         "criteria.recuration_happened",
         "criteria.capacity_managed",
+        # predictive prefetch A/B (ISSUE 10): paced-drain residual stalls
+        # are modeled-deterministic, so ±10% only absorbs real drift
+        "prefetch_ab.layout_stall_s",
+        "prefetch_ab.predicted_stall_s",
+        "prefetch_ab.stall_reduction_x",
+        "prefetch_ab.bit_identical",
+        "criteria.predicted_stall_cut_ge_2x",
     ],
     "dedup_bench_quick.json": [
         "effective_capacity_x",

@@ -40,7 +40,8 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import HierarchicalPool, Orchestrator, PoolMaster, StateImage
+from repro.core import (HierarchicalPool, LayoutOrderPolicy, Orchestrator,
+                        PoolMaster, StateImage)
 from repro.core.pagestore import PAGE_SIZE
 from repro.core.profiler import AccessRecorder
 from repro.serve.strategies import modeled_concurrent_restore_s
@@ -79,9 +80,9 @@ def run_point(conc: int, shared: bool, same_snapshot: bool, images,
     for i in range(n_snaps):
         img, ws = images[i]
         master.publish(f"snap{i}", img, ws)
+    policy = LayoutOrderPolicy(max_extent_pages)
     orch = Orchestrator("host0", pool, master.catalog, use_async_rdma=True,
-                        use_node_server=shared,
-                        max_extent_pages=max_extent_pages)
+                        use_node_server=shared, prefetch_policy=policy)
     # attach every restore BEFORE any page movement so all `conc` streams
     # contend for the whole restore window (the load balancer dispatching a
     # co-located burst), then drive them concurrently to completion
@@ -97,7 +98,7 @@ def run_point(conc: int, shared: bool, same_snapshot: bool, images,
         try:
             ri.engine.pre_install_hot()
             ri.engine.install_zero_runs()
-            ri.engine.start_prefetcher(max_extent_pages)
+            ri.engine.start_prefetcher(policy=policy)
             if not ri.engine.wait_prefetch_idle(120.0):
                 raise TimeoutError("prefetch did not complete")
         except Exception as exc:            # pragma: no cover

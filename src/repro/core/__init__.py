@@ -7,7 +7,10 @@ The paper's contribution as a composable library:
 - :mod:`snapshot`   — hotness-based compact snapshot format (§3.2)
 - :mod:`coherence`  — ownership-based coherence protocol (§3.3)
 - :mod:`serving`    — copy-based page serving, async RDMA demand paging (§3.4)
-- :mod:`profiler`   — offline hotness profiling (§3.2)
+- :mod:`profiler`   — offline hotness profiling + online TouchEvent
+  telemetry with first-touch sequences (§3.2, DESIGN.md §17)
+- :mod:`prefetch_model` — learned first-touch ordering: Markov model over
+  page runs + the PrefetchPolicy seam (DESIGN.md §17)
 - :mod:`master`     — pool master: publish/update/delete, eviction (§3.6)
 - :mod:`nodeserver` — host-wide page-serving runtime: shared RDMA engine,
   cross-instance DRR prefetch + doorbell batching, hot-chunk fan-out (§3.5)
@@ -76,11 +79,21 @@ from .serving import (
     mmap_install_cost,
 )
 from .profiler import (
+    RUN_PAGES,
+    START_RUN,
     AccessRecorder,
     HeatMap,
     HeatRegistry,
+    TouchEvent,
     WorkloadProfile,
     profile_invocations,
+)
+from .prefetch_model import (
+    LayoutOrderPolicy,
+    PredictedOrderPolicy,
+    PrefetchModel,
+    PrefetchPolicy,
+    fit_prefetch_model,
 )
 from .master import CXLCapacityManager, PoolMaster
 from .nodeserver import FanoutGroup, HotChunkCache, NodePageServer

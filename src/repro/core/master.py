@@ -23,6 +23,7 @@ from .clock import Clock, REAL_CLOCK
 from .coherence import STATE_PUBLISHED, STATE_TOMBSTONE, Catalog, CatalogEntry
 from .pagestore import StateImage
 from .pool import AllocError, CXLBudget, HierarchicalPool
+from .prefetch_model import fit_prefetch_model
 from .snapshot import (
     SnapshotRegions,
     build_snapshot,
@@ -502,10 +503,16 @@ class PoolMaster:
             if heat is None and self.heat is not None:
                 heat = self.heat.find(name, regions.version)
             if heat is not None:
+                # the same first-touch model the prefetch pump schedules
+                # by: the promote set tracks observed touch ORDER, not just
+                # decayed heat (None with no sequence telemetry — pure
+                # heat-ranked recuration, the pre-§17 behaviour)
+                model = fit_prefetch_model(heat)
                 plan = plan_recuration(self.pool, regions, heat,
                                        min_promote_heat=min_promote_heat,
                                        demote_max_heat=demote_max_heat,
-                                       min_restores=min_restores)
+                                       min_restores=min_restores,
+                                       model=model)
                 econ = recuration_economics(regions, plan, expected_restores)
                 if force or (plan.changed and econ["worthwhile"]):
                     image = reconstruct_image(self.pool, regions)

@@ -40,6 +40,7 @@ import numpy as np
 from .faults import call_with_retries
 from .pagestore import PAGE_SIZE
 from .pool import HierarchicalPool, TimeLedger
+from .prefetch_model import PrefetchPolicy, resolve_policy
 from .serving import AsyncRDMAEngine, BufferPool, Instance, RestoreEngine, ScatterFn
 from .snapshot import SnapshotReader
 
@@ -139,6 +140,10 @@ class FanoutGroup:
         self.deficit = 0
         self.enqueued = False
         self.poster: Optional[RestoreEngine] = None
+        # ordering policy behind the queue (DESIGN.md §17): kept only when
+        # it wants demand-miss re-seeding (PredictedOrderPolicy)
+        self.policy: Optional[PrefetchPolicy] = None
+        self.policy_session: Optional[RestoreEngine] = None
         # extent starts currently covered by the pump (queued or in flight):
         # a session joining AFTER some extents completed re-enqueues exactly
         # the ones it still needs (they are no longer in this set)
@@ -178,7 +183,8 @@ class NodePageServer:
         self._pump_thread: Optional[threading.Thread] = None
         self.stats = {"attached": 0, "detached": 0, "demand_reads": 0,
                       "extents_posted": 0, "extents_skipped": 0,
-                      "doorbells": 0, "fanout_installs": 0}
+                      "doorbells": 0, "fanout_installs": 0,
+                      "demand_fanout_installs": 0, "prefetch_reseeds": 0}
         # post order of (group_key, extent_start): fairness is observable
         self.post_order: Deque[Tuple[object, int]] = deque(maxlen=4096)
 
@@ -317,15 +323,62 @@ class NodePageServer:
     def submit_demand(self, session: RestoreEngine, pool_off: int, nbytes: int,
                       buf: np.ndarray, token_tail: tuple) -> None:
         """Urgent one-sided read for a demand fault: overtakes every queued
-        prefetch extent from EVERY co-located instance."""
+        prefetch extent from EVERY co-located instance.
+
+        Fan-out: the page is marked in flight in every session of the
+        group BEFORE posting, so a sibling faulting the same page records a
+        ``prefetch_hit`` and waits for this read instead of posting a
+        duplicate — one physical read credits (and installs into) the whole
+        group, mirroring the pump's ``gext`` behaviour.  A predicted-order
+        policy additionally re-seeds the group's queued extents from the
+        faulting page (the model's next-touch chain restarts here)."""
+        page = int(token_tail[0])
+        group = session._group
+        gkey = None
+        if group is not None:
+            gkey = group.key
+            with self._lock:
+                others = [s for s in group.sessions.values()
+                          if s is not session]
+            for s in others:
+                with s._inflight_lock:
+                    s._inflight.setdefault(page, True)
         self.stats["demand_reads"] += 1
         self.engine.submit_read(pool_off, nbytes, buf,
-                                ("spage", id(session)) + token_tail,
+                                ("spage", id(session), gkey) + token_tail,
                                 urgent=True, ledger=session.ledger)
+        self._reseed_prefetch(session, page)
+
+    def _reseed_prefetch(self, session: RestoreEngine, page: int) -> None:
+        """Demand miss under a predicted-order policy: re-order the group's
+        still-queued extents by the prediction seeded at the faulting page.
+        Only the fetch ORDER changes — covered/queued membership does not,
+        so installs stay bit-identical."""
+        group = session._group
+        if group is None:
+            return
+        with self._lock:
+            policy = group.policy
+            if policy is None or not group.queue:
+                return
+        rank = {es: i for i, (es, _en, _r0, _off, _nb)
+                in enumerate(policy.order_extents(session, faulting_page=page))}
+        with self._work:
+            if not group.queue:
+                return
+            q = sorted(group.queue, key=lambda e: rank.get(e.es, len(rank)))
+            group.queue.clear()
+            group.queue.extend(q)
+            self.stats["prefetch_reseeds"] += 1
+            self._work.notify_all()
 
     # -- prefetch pump ---------------------------------------------------------
-    def enqueue_prefetch(self, session: RestoreEngine, max_extent_pages: int = 64) -> None:
-        """Queue the group's cold runs (largest-first, split into extents);
+    def enqueue_prefetch(self, session: RestoreEngine,
+                         max_extent_pages: Optional[int] = None,
+                         policy: Optional[PrefetchPolicy] = None) -> None:
+        """Queue the group's cold extents in ``policy`` order (default
+        :class:`LayoutOrderPolicy`: largest runs first, the pre-§17
+        behaviour; ``max_extent_pages=N`` is its deprecated spelling);
         completed extents are scattered into every session of the group.
 
         The first caller enqueues the full walk.  A session that joins the
@@ -333,12 +386,13 @@ class NodePageServer:
         pump no longer covers (an extent that is queued or in flight will
         install into this session on completion, so it is never duplicated;
         one already completed before this session attached is re-fetched)."""
+        policy = resolve_policy(policy, max_extent_pages,
+                                "NodePageServer.enqueue_prefetch")
         group = session._group
-        reader = session.reader
         if group is None:
             return
         extents = [_Extent(*tup)
-                   for tup in reader.iter_cold_extents(max_extent_pages)]
+                   for tup in policy.order_extents(session, None)]
         present = session.instance.present
 
         def needs(ext: _Extent) -> bool:
@@ -361,6 +415,9 @@ class NodePageServer:
             group.enqueued = True
             if first:
                 group.poster = session
+            if policy.reseed_on_demand:
+                group.policy = policy
+                group.policy_session = session
             for ext in extents:
                 if not first and not needs(ext):
                     continue
@@ -495,23 +552,36 @@ class NodePageServer:
             finally:
                 self._sem.release()
             return
-        _tag, sid, page, nbytes, raw, kind = token
+        _tag, sid, gkey, page, nbytes, raw, kind = token
         with self._lock:
             session = self._sessions.get(sid)
+            group = self._groups.get(gkey) if gkey is not None else None
+            if group is not None:
+                # demand fan-out: the single physical read installs into
+                # every session of the group (submit_demand marked the page
+                # in flight in all of them)
+                sessions = list(group.sessions.values())
+                reader = group.reader
+            else:
+                sessions = [session] if session is not None else []
+                reader = session.reader if session is not None else None
         try:
-            if session is not None:
-                data = (session.reader.decompress_page(buf[:nbytes], raw)
+            if sessions:
+                data = (reader.decompress_page(buf[:nbytes], raw)
                         if kind == "rdma_z" else buf[:PAGE_SIZE])
-                try:
-                    session._install_verified(
-                        np.array([int(page)], dtype=np.int64), data)
-                except RuntimeError as e:
-                    if not session._is_fault(e):
-                        raise
-                    session.repair_error = e
-                finally:
-                    with session._inflight_lock:
-                        session._inflight.pop(int(page), None)
+                for s in sessions:
+                    try:
+                        s._install_verified(
+                            np.array([int(page)], dtype=np.int64), data)
+                    except RuntimeError as e:
+                        if not s._is_fault(e):
+                            raise
+                        s.repair_error = e
+                    finally:
+                        with s._inflight_lock:
+                            s._inflight.pop(int(page), None)
+                if len(sessions) > 1:
+                    self.stats["demand_fanout_installs"] += len(sessions) - 1
         finally:
             self.buffers.release(buf)
 

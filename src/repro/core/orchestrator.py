@@ -29,6 +29,7 @@ from .coherence import Borrow, Catalog
 from .nodeserver import NodePageServer
 from .pagestore import StateImage
 from .pool import HierarchicalPool, TimeLedger
+from .prefetch_model import PrefetchPolicy, resolve_policy
 from .serving import AsyncRDMAEngine, BufferPool, Instance, RestoreEngine
 from .snapshot import SnapshotReader
 
@@ -62,11 +63,12 @@ class Orchestrator:
         use_async_rdma: bool = True,
         buffer_pool_pages: int = 256,
         prefetch_cold: bool = False,
-        max_extent_pages: int = 64,
+        max_extent_pages: Optional[int] = None,
         scatter_fn=None,
         node_server: Optional[NodePageServer] = None,
         use_node_server: bool = True,
         heat=None,
+        prefetch_policy: Optional[PrefetchPolicy] = None,
     ):
         self.host = host
         self.pool = pool
@@ -78,7 +80,12 @@ class Orchestrator:
         self.use_async_rdma = use_async_rdma
         self.buffer_pool_pages = buffer_pool_pages
         self.prefetch_cold = prefetch_cold
-        self.max_extent_pages = max_extent_pages
+        # cold-extent ordering seam (DESIGN.md §17); ``max_extent_pages=N``
+        # is the deprecated pre-policy spelling of LayoutOrderPolicy(N)
+        if max_extent_pages is not None or prefetch_policy is None:
+            prefetch_policy = resolve_policy(
+                prefetch_policy, max_extent_pages, "Orchestrator")
+        self.prefetch_policy = prefetch_policy
         self.scatter_fn = scatter_fn
         self.node_server = node_server
         self.use_node_server = bool(use_node_server) and use_async_rdma
@@ -106,13 +113,16 @@ class Orchestrator:
             srv.close()
 
     def restore(self, name: str, pre_install: bool = True,
-                prefetch_cold: Optional[bool] = None) -> Optional[RestoredInstance]:
+                prefetch_cold: Optional[bool] = None,
+                prefetch_policy: Optional[PrefetchPolicy] = None,
+                ) -> Optional[RestoredInstance]:
         """Warm-restore an instance from the pool; None ⇒ caller cold-boots.
 
         The hot set is pre-installed run-at-a-time (one CXL read + one
         uffd.copy ioctl per contiguous run); with ``prefetch_cold`` the cold
-        runs are additionally streamed in the background as multi-page RDMA
-        extents while demand faults retain priority (§3.4)."""
+        extents are additionally streamed in the background in
+        ``prefetch_policy`` order (default: the orchestrator's policy, i.e.
+        snapshot layout) while demand faults retain priority (§3.4)."""
         borrow = self.catalog.borrow(name)
         if borrow is None or borrow.regions is None:
             with self._lock:
@@ -161,7 +171,8 @@ class Orchestrator:
             do_prefetch = (self.prefetch_cold if prefetch_cold is None
                            else prefetch_cold)
             if do_prefetch:
-                engine.start_prefetcher(self.max_extent_pages)
+                engine.start_prefetcher(
+                    policy=prefetch_policy or self.prefetch_policy)
         except BaseException:
             # failed restore (e.g. a fused-scatter checksum mismatch during
             # pre-install) must not leak the engine session or the borrow

@@ -8,11 +8,17 @@ do not separate reads from writes — only touched/untouched matters.
 Online (beyond the paper's frozen hot set): every restore exports
 per-``(name, version)`` access telemetry — demand faults, prefetch hits and
 guest touches — into a :class:`HeatMap`, a decayed per-page counter array.
-The re-curation pipeline (``core/snapshot.plan_recuration`` +
-``PoolMaster.recurate``) consumes the heat map to promote hot-faulting cold
-pages into the CXL region and demote never-touched "hot" pages to RDMA when
-the modeled benefit exceeds the rebuild break-even
-(``serve/strategies.recuration_economics``).
+Telemetry enters as typed :class:`TouchEvent` records through
+``HeatRegistry.record`` (the single public feed seam); events that carry a
+``stream`` id additionally feed a *first-touch sequence* model: the map
+counts page-run → page-run transitions over each stream's first touches
+(``RUN_PAGES`` pages per run, virtual ``START_RUN`` before the first), which
+``core/prefetch_model.fit_prefetch_model`` turns into a Markov
+predicted-next-touch ordering (DESIGN.md §17).  The re-curation pipeline
+(``core/snapshot.plan_recuration`` + ``PoolMaster.recurate``) consumes the
+heat map to promote hot-faulting cold pages into the CXL region and demote
+never-touched "hot" pages to RDMA when the modeled benefit exceeds the
+rebuild break-even (``serve/strategies.recuration_economics``).
 
 `AccessRecorder` is the framework-side hook: model code (embedding gathers,
 MoE routing, KV writes, layer weight reads) reports logical accesses and the
@@ -22,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import warnings
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
@@ -126,6 +133,42 @@ def profile_invocations(
 # Online hotness feedback
 # --------------------------------------------------------------------------
 
+#: pages per sequence "run" — the granule of the first-touch Markov model.
+RUN_PAGES = 8
+#: virtual run a stream is in before its first touch (restore entry point).
+START_RUN = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class TouchEvent:
+    """One typed telemetry observation: pages *in touch order* plus its kind.
+
+    This is the single shape every telemetry producer emits
+    (``HeatRegistry.record`` / ``HeatMap.record`` consume it):
+
+      pages        page indices, ordered as the guest touched them;
+      kind         ``demand_fault`` / ``prefetch_hit`` / ``touch``
+                   (``HeatMap.KIND_WEIGHT`` sets the heat weight);
+      stream       opaque per-restore sequence id — when set, the event also
+                   feeds the first-touch run-transition counts behind
+                   ``core/prefetch_model``; ``None`` means heat-only
+                   (order-free) telemetry;
+      name/version/total_pages
+                   address the target map when fed through
+                   ``HeatRegistry.record``; unused by ``HeatMap.record``;
+      weight/now   optional overrides (tests, replayed traces).
+    """
+
+    pages: object
+    kind: str = "demand_fault"
+    name: Optional[str] = None
+    version: Optional[int] = None
+    total_pages: Optional[int] = None
+    stream: Optional[int] = None
+    weight: Optional[float] = None
+    now: Optional[float] = None
+
+
 class HeatMap:
     """Decayed per-page access-heat accumulator for one ``(name, version)``.
 
@@ -143,22 +186,34 @@ class HeatMap:
                           pre-installed or already prefetched) — the
                           keep-me-hot signal for demotion scoring.
 
+    Beyond decayed heat, events that carry a ``stream`` id feed *first-touch
+    sequences*: pages collapse to runs of ``run_pages``, and for each stream
+    only the first touch of a run counts — recording a ``prev_run → run``
+    transition (``START_RUN`` before the first).  These counts are the
+    sufficient statistic for the Markov predicted-next-touch model in
+    ``core/prefetch_model`` (DESIGN.md §17).
+
     Thread-safe: fault handlers and completion workers record concurrently.
     """
 
     KIND_WEIGHT = {"demand_fault": 1.0, "prefetch_hit": 0.6, "touch": 0.25}
 
     def __init__(self, total_pages: int, half_life_s: float = 30.0,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None, run_pages: int = RUN_PAGES):
         self.total_pages = total_pages
         self.half_life_s = float(half_life_s)
         self.clock = clock or REAL_CLOCK
+        self.run_pages = int(run_pages)
+        self.n_runs = -(-int(total_pages) // self.run_pages)
         self._counts = np.zeros(total_pages, dtype=np.float64)
         self._last_t = self.clock.monotonic()
         self._lock = threading.Lock()
         self.restores = 0
+        self._transitions: Dict[Tuple[int, int], float] = {}
+        self._stream_prev: Dict[int, int] = {}
+        self._stream_seen: Dict[int, set] = {}
         self.stats = {"demand_faults": 0, "prefetch_hits": 0, "touches": 0,
-                      "records": 0}
+                      "records": 0, "seq_transitions": 0}
 
     def _decay_locked(self, now: float) -> None:
         dt = now - self._last_t
@@ -167,24 +222,81 @@ class HeatMap:
         self._counts *= 0.5 ** (dt / self.half_life_s)
         self._last_t = now
 
-    def record(self, pages, kind: str = "demand_fault",
+    def record(self, event, kind: str = "demand_fault",
                weight: Optional[float] = None, now: Optional[float] = None) -> None:
-        """Accumulate heat on ``pages`` (vectorized; duplicates add up)."""
-        pages = np.asarray(pages, dtype=np.int64).reshape(-1)
+        """Accumulate one :class:`TouchEvent` (vectorized; duplicates add up).
+
+        The legacy ``record(pages, kind=...)`` shape still works but is
+        deprecated — ``HeatRegistry.record(TouchEvent)`` is the public seam.
+        """
+        if not isinstance(event, TouchEvent):
+            warnings.warn(
+                "HeatMap.record(pages, kind=...) is deprecated; pass a "
+                "TouchEvent (HeatRegistry.record is the public entrypoint)",
+                DeprecationWarning, stacklevel=2)
+            event = TouchEvent(pages=event, kind=kind, weight=weight, now=now)
+        pages = np.asarray(event.pages, dtype=np.int64).reshape(-1)
         if pages.size == 0:
             return
-        w = self.KIND_WEIGHT[kind] if weight is None else float(weight)
-        t = self.clock.monotonic() if now is None else float(now)
+        w = (self.KIND_WEIGHT[event.kind] if event.weight is None
+             else float(event.weight))
+        t = self.clock.monotonic() if event.now is None else float(event.now)
         with self._lock:
             self._decay_locked(t)
             np.add.at(self._counts, pages, w)
             self.stats["records"] += 1
-            if kind == "demand_fault":
+            if event.kind == "demand_fault":
                 self.stats["demand_faults"] += int(pages.size)
-            elif kind == "prefetch_hit":
+            elif event.kind == "prefetch_hit":
                 self.stats["prefetch_hits"] += int(pages.size)
             else:
                 self.stats["touches"] += int(pages.size)
+            if event.stream is not None:
+                self._record_sequence_locked(int(event.stream), pages)
+
+    # -- first-touch sequence telemetry ------------------------------------
+    def _record_sequence_locked(self, stream: int, pages: np.ndarray) -> None:
+        runs = pages // self.run_pages
+        if runs.size > 1:
+            keep = np.empty(runs.size, dtype=bool)
+            keep[0] = True
+            keep[1:] = runs[1:] != runs[:-1]          # collapse intra-run steps
+            runs = runs[keep]
+        seen = self._stream_seen.setdefault(stream, set())
+        prev = self._stream_prev.get(stream, START_RUN)
+        added = 0
+        for r in runs.tolist():
+            if r in seen:
+                continue                              # first touch only
+            seen.add(r)
+            key = (prev, r)
+            self._transitions[key] = self._transitions.get(key, 0.0) + 1.0
+            prev = r
+            added += 1
+        self._stream_prev[stream] = prev
+        self.stats["seq_transitions"] += added
+
+    def end_stream(self, stream: int) -> None:
+        """Forget a stream's cursor (restore detached); its recorded
+        transitions stay — only the per-stream dedup state is dropped."""
+        with self._lock:
+            self._stream_prev.pop(int(stream), None)
+            self._stream_seen.pop(int(stream), None)
+
+    def transition_counts(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(src_runs, dst_runs, counts)`` of recorded first-touch
+        transitions, sorted by ``(src, dst)`` for deterministic model fits.
+        ``src`` may be ``START_RUN``; counts are raw (undecayed) tallies."""
+        with self._lock:
+            if not self._transitions:
+                z = np.zeros(0, dtype=np.int64)
+                return z, z.copy(), np.zeros(0, dtype=np.float64)
+            keys = sorted(self._transitions)
+            src = np.asarray([k[0] for k in keys], dtype=np.int64)
+            dst = np.asarray([k[1] for k in keys], dtype=np.int64)
+            cnt = np.asarray([self._transitions[k] for k in keys],
+                             dtype=np.float64)
+            return src, dst, cnt
 
     def note_restore(self) -> None:
         """Called once per restore of this snapshot (demotion scoring needs
@@ -245,6 +357,20 @@ class HeatRegistry:
                 hm = self.maps[key] = HeatMap(total_pages, self.half_life_s,
                                               clock=self.clock)
             return hm
+
+    def record(self, event: TouchEvent) -> HeatMap:
+        """THE typed telemetry entrypoint: resolve the event's
+        ``(name, version)`` map and feed it (sequence order included when
+        the event carries a ``stream``).  Returns the map so callers can
+        cache it for the session's lifetime."""
+        if event.name is None or event.version is None \
+                or event.total_pages is None:
+            raise ValueError(
+                "HeatRegistry.record needs name, version and total_pages "
+                "set on the TouchEvent")
+        hm = self.map_for(event.name, event.version, int(event.total_pages))
+        hm.record(event)
+        return hm
 
     def find(self, name: str, version: int) -> Optional[HeatMap]:
         with self._lock:

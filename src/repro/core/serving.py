@@ -42,6 +42,8 @@ from .faults import (
     call_with_retries,
 )
 from .pagestore import PAGE_SIZE, StateImage, runs_from_pages
+from .prefetch_model import LayoutOrderPolicy, PrefetchPolicy, resolve_policy
+from .profiler import TouchEvent
 from .pool import (
     MMAP_PER_PAGE_S,
     MMAP_SYSCALL_S,
@@ -361,6 +363,7 @@ class RestoreEngine:
         server=None,
         retry_policy: Optional[RetryPolicy] = None,
         retry_seed: int = 0,
+        policy: Optional[PrefetchPolicy] = None,
     ):
         self.reader = reader
         self.instance = instance
@@ -390,8 +393,12 @@ class RestoreEngine:
         self._group = None          # FanoutGroup, set by NodePageServer.attach
         # online hotness feedback: when set (NodePageServer.attach or the
         # Orchestrator's per-instance path), demand faults / prefetch hits /
-        # guest touches are recorded into the snapshot's HeatMap
+        # guest touches are recorded into the snapshot's HeatMap as
+        # TouchEvents carrying this engine as the sequence stream
         self.heat = None
+        # cold-extent ordering seam (DESIGN.md §17): default policy for
+        # start_prefetcher when the caller passes none
+        self.policy = policy
         self.buffers = buffer_pool or BufferPool()
         self._rdma_arbiter = reader.rdma.arbiter_for(reader.view.host)
         self.link_keys: List[Tuple[object, object]] = []   # (arbiter, key)
@@ -415,6 +422,13 @@ class RestoreEngine:
                              "degraded_preinstalls": 0, "degraded_faults": 0}
         self.degraded_cxl = False
         self.repair_error: Optional[Exception] = None
+
+    def _record_heat(self, pages, kind: str) -> None:
+        """Typed telemetry: pages in touch order, this restore as the
+        sequence stream (feeds the first-touch Markov model)."""
+        if self.heat is not None:
+            self.heat.record(TouchEvent(pages=pages, kind=kind,
+                                        stream=id(self)))
 
     # -- phase 1: hot-set pre-installation (§3.4) ------------------------------
     HOT_CHUNK_PAGES = 256   # 1 MiB sequential CXL reads over the compact region
@@ -638,24 +652,35 @@ class RestoreEngine:
         self._completion_thread = threading.Thread(target=self._completion_loop, daemon=True)
         self._completion_thread.start()
 
-    def start_prefetcher(self, max_extent_pages: int = 64) -> None:
-        """Background cold-run prefetch: walk cold runs largest-first, post
-        multi-page one-sided reads (up to `max_extent_pages` each), install
-        completed extents via the batch API.  Demand faults for pages not yet
+    def start_prefetcher(self, max_extent_pages: Optional[int] = None,
+                         policy: Optional[PrefetchPolicy] = None) -> None:
+        """Background cold-extent prefetch in ``policy`` order.
+
+        The :class:`~repro.core.prefetch_model.PrefetchPolicy` is the only
+        ordering seam: the default :class:`LayoutOrderPolicy` walks cold
+        runs largest-first exactly as before; ``PredictedOrderPolicy``
+        fetches by predicted next-touch.  Demand faults for pages not yet
         in flight still take priority on the RDMA engine's submit queue.
+        (``max_extent_pages=N`` is the deprecated pre-policy spelling of
+        ``LayoutOrderPolicy(N)``.)
 
         Under a NodePageServer the extents are enqueued ONCE per fan-out
         group on the host-wide pump, which drains them round-robin across
         all co-located restores instead of spawning a private thread."""
+        if policy is None and max_extent_pages is None \
+                and self.policy is not None:
+            policy = self.policy
+        policy = resolve_policy(policy, max_extent_pages,
+                                "RestoreEngine.start_prefetcher")
         if self.server is not None:
-            self.server.enqueue_prefetch(self, max_extent_pages)
+            self.server.enqueue_prefetch(self, policy=policy)
             return
         if self.rdma_engine is None or self._prefetch_thread is not None:
             return
         inflight = max(1, self.rdma_engine.tier.cost.max_inflight)
         self._prefetch_sem = threading.Semaphore(inflight)
         self._prefetch_thread = threading.Thread(
-            target=self._prefetch_loop, args=(max_extent_pages,), daemon=True)
+            target=self._prefetch_loop, args=(policy,), daemon=True)
         self._prefetch_thread.start()
 
     def stop(self) -> None:
@@ -664,6 +689,8 @@ class RestoreEngine:
         pages install normally) and stale ``_inflight`` entries are cleared.
         Node-server sessions detach from the shared runtime instead."""
         self._stop.set()
+        if self.heat is not None:
+            self.heat.end_stream(id(self))
         if self.server is not None:
             self.server.detach(self)
             self._unregister_links()
@@ -701,8 +728,7 @@ class RestoreEngine:
             return
         if kind == "cxl":
             self.instance.stats["fault_cxl"] += 1
-            if self.heat is not None:
-                self.heat.record([page], kind="touch")
+            self._record_heat([page], "touch")
             ht = self.reader.cxl_health()
             if ht is not None and not ht.allow():
                 self._degraded_cxl_fault(page, off)
@@ -732,8 +758,7 @@ class RestoreEngine:
         else:
             pool_off, nbytes, raw = off, PAGE_SIZE, True
         if self.rdma_engine is None and self.server is None:
-            if self.heat is not None:
-                self.heat.record([page], kind="demand_fault")
+            self._record_heat([page], "demand_fault")
             payload = call_with_retries(
                 lambda: self.reader.rdma.read(pool_off, nbytes),
                 policy=self.retry, rng=self._retry_rng,
@@ -749,12 +774,11 @@ class RestoreEngine:
             covered = bool(self._inflight.get(page))
             if not covered:
                 self._inflight[page] = True
-        if self.heat is not None:
-            # a fault landing on an in-flight prefetch extent is a prefetch
-            # hit: the page is clearly part of the live working set, but the
-            # demand-path latency was (partially) hidden
-            self.heat.record([page],
-                             kind="prefetch_hit" if covered else "demand_fault")
+        # a fault landing on an in-flight prefetch extent is a prefetch
+        # hit: the page is clearly part of the live working set, but the
+        # demand-path latency was (partially) hidden
+        self._record_heat([page],
+                          "prefetch_hit" if covered else "demand_fault")
         if covered:
             return     # already in flight (demand or prefetch extent)
         buf = self.buffers.acquire()
@@ -769,8 +793,7 @@ class RestoreEngine:
     def access(self, page: int, timeout_s: float = 30.0) -> None:
         """Guest touch: fault if needed and wait for install (test/replay API)."""
         if self.instance.present[page]:
-            if self.heat is not None:
-                self.heat.record([page], kind="touch")
+            self._record_heat([page], "touch")
             return
         self.handle_fault(page)
         if not self.instance.wait_present(page, timeout_s):
@@ -788,10 +811,9 @@ class RestoreEngine:
         if pages.size == 0:
             return {"present": 0, "faulted": 0}
         present_mask = self.instance.present[pages]
-        if self.heat is not None:
-            hit = pages[present_mask]
-            if hit.size:
-                self.heat.record(hit, kind="touch")
+        hit = pages[present_mask]
+        if hit.size:
+            self._record_heat(hit, "touch")
         missing = pages[~present_mask]
         for p in missing:
             if not self.instance.present[p]:
@@ -855,8 +877,8 @@ class RestoreEngine:
                         break
                 item = polled
 
-    # -- cold extent prefetcher (§3.4, DESIGN.md §6) ---------------------------
-    def _prefetch_loop(self, max_extent_pages: int) -> None:
+    # -- cold extent prefetcher (§3.4, DESIGN.md §6, §17) ----------------------
+    def _prefetch_loop(self, policy: PrefetchPolicy) -> None:
         eng = self.rdma_engine
         assert eng is not None and self._prefetch_sem is not None
         cost = eng.tier.cost
@@ -873,8 +895,7 @@ class RestoreEngine:
                 self.prefetch_stats["doorbells"] += 1
                 pending_bytes, pending_ops = 0, 0
 
-        for es, en, rank0, pool_off, nbytes in self.reader.iter_cold_extents(
-                max_extent_pages):
+        for es, en, rank0, pool_off, nbytes in policy.order_extents(self, None):
             if self._stop.is_set():
                 flush_doorbell()
                 return

@@ -625,6 +625,8 @@ class RecurationPlan:
     new_working_set: np.ndarray
     n_hot_before: int
     n_hot_after: int
+    # promote set ordered by the predicted-first-touch model (DESIGN.md §17)
+    model_ordered: bool = False
 
     @property
     def changed(self) -> bool:
@@ -636,6 +638,7 @@ class RecurationPlan:
             "demote": int(self.demote.size),
             "hot_before": self.n_hot_before,
             "hot_after": self.n_hot_after,
+            "model_ordered": int(self.model_ordered),
         }
 
 
@@ -646,12 +649,20 @@ def plan_recuration(
     min_promote_heat: float = 1.0,
     demote_max_heat: float = 1e-3,
     min_restores: int = 2,
+    model=None,
+    max_promote: Optional[int] = None,
 ) -> RecurationPlan:
     """Derive promote/demote sets for one snapshot from its heat map.
 
     Owner-side: the offset array is read directly from the tier (the owner
     wrote it; no HostView cache in the path).  ``heat`` is the snapshot's
     :class:`~repro.core.profiler.HeatMap`.
+
+    ``model`` (a :class:`~repro.core.prefetch_model.PrefetchModel`, usually
+    fitted from the same heat map) re-ranks the promote set by predicted
+    first-touch order so the rebuilt hot set tracks *observed touch order*,
+    not just decayed heat — under a ``max_promote`` budget the model decides
+    which drifted pages make the cut (earliest-touched first).
     """
     oa = pool.cxl.read(regions.oa_off, regions.total_pages * 8).view(np.uint64)
     nonzero = oa != ZERO_SENTINEL
@@ -659,6 +670,12 @@ def plan_recuration(
     hot = np.nonzero(nonzero & (tiers == np.uint64(TIER_CXL)))[0].astype(np.int64)
     cold = np.nonzero(nonzero & (tiers == np.uint64(TIER_RDMA)))[0].astype(np.int64)
     promote = heat.promotion_candidates(cold, min_heat=min_promote_heat)
+    model_ordered = False
+    if model is not None and promote.size:
+        promote = model.page_order(promote)
+        model_ordered = True
+    if max_promote is not None:
+        promote = promote[:int(max_promote)]
     demote = heat.demotion_candidates(hot, max_heat=demote_max_heat,
                                       min_restores=min_restores)
     keep = hot[~np.isin(hot, demote)] if demote.size else hot
@@ -667,6 +684,7 @@ def plan_recuration(
         name=regions.name, version=regions.version,
         promote=promote, demote=demote, new_working_set=new_ws,
         n_hot_before=int(hot.size), n_hot_after=int(new_ws.size),
+        model_ordered=model_ordered,
     )
 
 

@@ -59,6 +59,13 @@ RDMA_BW = 100e9 / 8          # per-host RNIC, shared by co-located restores
 CXL_PAGE_READ_S = CXL_LAT_S + PAGE_SIZE / CXL_BW
 RDMA_PAGE_READ_S = RDMA_LAT_S + PAGE_SIZE / RDMA_BW
 RDMA_INFLIGHT = 64
+# Residual stall accounting for the predictive-prefetch A/B (DESIGN.md §17):
+# a demand fault on an UNCOVERED cold page pays the trap plus the full
+# synchronous RDMA page read plus the install; a fault that lands on a page
+# whose prefetch is already in flight ("prefetch hit") pays only trap +
+# install — the wire latency is (modeled as fully) hidden by the prefetcher.
+DEMAND_FAULT_STALL_S = FAULT_TRAP_S + RDMA_PAGE_READ_S + UFFD_COPY_PER_PAGE_S
+PREFETCH_HIT_STALL_S = FAULT_TRAP_S + UFFD_COPY_PER_PAGE_S
 # Inter-pod fabric (topology layer, DESIGN.md §16): a read that leaves the
 # host's CXL pod rides the RNIC through one extra switch hop.  Octopus-style
 # pods are port-limited and sparse, so the fleet is many small pods and the
@@ -106,6 +113,15 @@ class WorkloadSpec:
     touched: np.ndarray                  # pages touched by THIS invocation
     compute_s: float                     # function execution compute time
     scale: float = 1.0                   # page-count extrapolation factor
+
+
+def residual_stall_s(n_demand_faults: int, n_prefetch_hits: int = 0) -> float:
+    """Modeled guest-visible stall from cold-page faults during one
+    invocation: uncovered faults pay the full demand shape, covered ones
+    the hit shape.  The quantity the predicted-order prefetch policy is
+    scored on (adaptive_bench phase-shift A/B)."""
+    return (n_demand_faults * DEMAND_FAULT_STALL_S
+            + n_prefetch_hits * PREFETCH_HIT_STALL_S)
 
 
 def _shared(serial_s: float, nbytes: int, bw: float, conc: int) -> float:

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
+import zlib
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -31,7 +32,7 @@ from ..core.faults import TierFaultError
 from ..core.master import PoolMaster
 from ..core.pagestore import StateImage
 from ..core.pool import HierarchicalPool
-from ..core.profiler import AccessRecorder
+from ..core.profiler import AccessRecorder, TouchEvent
 from ..core.serving import Instance, RestoreSession
 from ..core.snapshot import SnapshotReader
 from ..topology import (
@@ -526,10 +527,15 @@ class SimCluster:
             hm = heat_registry.map_for(name, rec.version,
                                        rec.borrow.regions.total_pages)
             hm.note_restore()
+            # one sequence stream per restore attempt (deterministic id:
+            # crc of host+attempt) — the cold reads below feed first-touch
+            # transitions in demand order, not just decayed heat
+            stream = zlib.crc32(f"{host}:{i}".encode())
             canonical = self.content[name][rec.version].pages_matrix()
             hot = reader.hot_page_indices()
             if hot.size:
-                hm.record(hot[:1], kind="touch")
+                hm.record(TouchEvent(pages=hot[:1], kind="touch",
+                                     stream=stream))
             for p in reader.cold_page_indices()[:cold_reads]:
                 got = reader.read_page(int(p))
                 if not np.array_equal(got, canonical[int(p)]):
@@ -537,7 +543,8 @@ class SimCluster:
                         f"[seed={self.seed} step={self.step_no}] {host} observed "
                         f"torn/stale cold bytes of {name!r} v{rec.version} "
                         f"page {int(p)}")
-                hm.record([int(p)], kind="demand_fault")
+                hm.record(TouchEvent(pages=[int(p)], kind="demand_fault",
+                                     stream=stream))
                 yield "borrower:cold_read"
             self.release(rec)
             yield "borrower:released"
@@ -666,6 +673,63 @@ class SimCluster:
             "uffd_copies": inst.stats["uffd_copies"],
             "uffd_zeropages": inst.stats["uffd_zeropages"],
         })
+        yield "restore:verified"
+        self.release(rec)
+        yield "restore:released"
+
+    def predicted_restore_program(self, host: str, name: str, heat_registry,
+                                  max_extent_pages: int = 8):
+        """Warm restore that installs cold extents in PREDICTED first-touch
+        order (:class:`~repro.core.prefetch_model.PredictedOrderPolicy` over
+        the pod's heat telemetry) instead of layout order, one extent per
+        scheduler turn, then verifies bit-identity against the canonical
+        content — the §17 invariant: a policy re-orders fetches, it can
+        never change installed bytes.  Falls back to layout order when the
+        registry holds no sequence telemetry for the borrowed version."""
+        from ..core.prefetch_model import PredictedOrderPolicy
+
+        rec = yield from self.borrow_program_steps(host, name)
+        if rec is None:
+            self.events.append(f"cold_start:{host}")
+            return
+        view = self.pool.host_view(host)
+        reader = SnapshotReader(rec.borrow.regions, view, self.pool.rdma)
+        reader.invalidate_cxl()
+        manifest, _meta = reader.machine_state()
+        inst = Instance(StateImage.empty_like(manifest), clock=self.clock)
+        session = RestoreSession(reader, inst, None, clock=self.clock)
+        session.heat = heat_registry.find(name, rec.version)
+        yield "restore:setup"
+        for start, n in reader.zero_runs():
+            inst.uffd_zeropage_range(int(start), int(n))
+        session.pre_install_hot()
+        yield "restore:hot"
+        policy = PredictedOrderPolicy(max_extent_pages)
+        predicted = (session.heat is not None
+                     and session.heat.stats.get("seq_transitions", 0) > 0)
+        for es, en, rank0, pool_off, nbytes in policy.order_extents(
+                session, None):
+            payload = self.pool.rdma.read(pool_off, nbytes)
+            session._install_verified(
+                np.arange(es, es + en),
+                reader.split_cold_extent(rank0, en, payload))
+            yield "restore:predicted_cold"
+        canonical = self.content[name][rec.version]
+        if not inst.all_present() or not np.array_equal(inst.image.buf,
+                                                        canonical.buf):
+            raise InvariantViolation(
+                f"[seed={self.seed} step={self.step_no}] {host}: predicted-"
+                f"order restore of {name!r} v{rec.version} is not "
+                f"bit-identical")
+        self.restored.append({
+            "host": host, "name": name, "version": rec.version,
+            "predicted_order": predicted,
+            "ledger": dict(inst.ledger.seconds),
+            "uffd_copies": inst.stats["uffd_copies"],
+        })
+        self.events.append(
+            f"predicted_restore:{host}:{name}:"
+            f"{'model' if predicted else 'layout'}")
         yield "restore:verified"
         self.release(rec)
         yield "restore:released"

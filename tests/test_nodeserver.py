@@ -22,6 +22,7 @@ import pytest
 from repro.core import (
     HierarchicalPool,
     Instance,
+    LayoutOrderPolicy,
     LinkArbiter,
     NodePageServer,
     Orchestrator,
@@ -67,16 +68,17 @@ def make_stack(images, names=None):
     return pool, master, names
 
 
-def drive_full_restore(ris, max_extent_pages=64):
+def drive_full_restore(ris, policy=None):
     """Concurrently run each restore to completion: hot pre-install + zero
     ranges + cold extent prefetch (the benchmark flow)."""
     errs = []
+    policy = policy or LayoutOrderPolicy()
 
     def drive(ri):
         try:
             ri.engine.pre_install_hot()
             ri.engine.install_zero_runs()
-            ri.engine.start_prefetcher(max_extent_pages)
+            ri.engine.start_prefetcher(policy=policy)
             assert ri.engine.wait_prefetch_idle(60.0)
         except Exception as exc:            # pragma: no cover
             errs.append(exc)
@@ -205,6 +207,46 @@ class TestHotChunkFanout:
         ri_b.shutdown()
         server.close()
 
+    def test_demand_fanout_one_read_credits_every_session(self):
+        """Regression (ISSUE 10 satellite): two same-group sessions faulting
+        the SAME cold page must issue ONE physical demand read; the sibling
+        records a prefetch_hit and the completion installs into both.
+        Pre-fix, in-flight cover was per-session, so the sibling posted a
+        duplicate read and nobody got hit credit."""
+        from repro.core import HeatRegistry
+        img, ws = make_image(seed=21)
+        pool, master, names = make_stack([(img, ws)])
+        heat = HeatRegistry(clock=pool.clock, half_life_s=1e6)
+        server = NodePageServer("h0", pool, heat=heat)
+        orch = Orchestrator("h0", pool, master.catalog, node_server=server)
+        ri_a = orch.restore(names[0], pre_install=False, prefetch_cold=False)
+        ri_b = orch.restore(names[0], pre_install=False, prefetch_cold=False)
+        # park the shared engine so A's read is still queued when B faults
+        server.engine._stop.set()
+        server.engine._worker.join(timeout=10)
+        assert not server.engine._worker.is_alive()
+
+        page = int(ri_a.engine.reader.cold_page_indices()[0])
+        ri_a.engine.handle_fault(page)      # posts the one physical read
+        ri_b.engine.handle_fault(page)      # covered → prefetch_hit, no post
+        assert server.stats["demand_reads"] == 1
+
+        server.engine.start()               # resume; completion fans out
+        assert ri_a.instance.wait_present(page, 30.0)
+        assert ri_b.instance.wait_present(page, 30.0)
+        assert server.stats["demand_reads"] == 1
+        assert server.stats["demand_fanout_installs"] >= 1
+        hm = heat.find(names[0], 0)
+        assert hm.stats["prefetch_hits"] >= 1
+        assert hm.stats["demand_faults"] == 1
+        want = img.buf[page * PAGE_SIZE:(page + 1) * PAGE_SIZE]
+        for ri in (ri_a, ri_b):
+            got = ri.instance.image.buf[page * PAGE_SIZE:(page + 1) * PAGE_SIZE]
+            assert np.array_equal(got, want)
+        ri_a.shutdown()
+        ri_b.shutdown()
+        server.close()
+
 
 class TestDemandOverPrefetchPriority:
     def test_urgent_overtakes_queued_prefetch_across_instances(self):
@@ -267,11 +309,11 @@ class TestCrossInstanceFairness:
         # quantum = one 8-page extent: strict round-robin alternation
         server = NodePageServer("h0", pool, drr_quantum=8 * PAGE_SIZE)
         orch = Orchestrator("h0", pool, master.catalog, node_server=server,
-                            max_extent_pages=8)
+                            prefetch_policy=LayoutOrderPolicy(8))
         ri_h = orch.restore("heavy", pre_install=False, prefetch_cold=False)
         ri_l = orch.restore("light", pre_install=False, prefetch_cold=False)
-        ri_h.engine.start_prefetcher(max_extent_pages=8)   # heavy first
-        ri_l.engine.start_prefetcher(max_extent_pages=8)
+        ri_h.engine.start_prefetcher(policy=LayoutOrderPolicy(8))  # heavy 1st
+        ri_l.engine.start_prefetcher(policy=LayoutOrderPolicy(8))
         assert ri_h.engine.wait_prefetch_idle(60)
         assert ri_l.engine.wait_prefetch_idle(60)
 
@@ -289,7 +331,7 @@ class TestCrossInstanceFairness:
         assert any(h > light_posts[0] for h in heavy_posts)
 
         # both restores complete exactly
-        drive_full_restore([ri_h, ri_l], max_extent_pages=8)
+        drive_full_restore([ri_h, ri_l], policy=LayoutOrderPolicy(8))
         assert np.array_equal(ri_h.instance.image.buf, heavy[0].buf)
         assert np.array_equal(ri_l.instance.image.buf, light[0].buf)
         ri_h.shutdown()

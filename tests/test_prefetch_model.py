@@ -1,0 +1,221 @@
+"""Predictive prefetch (ISSUE 10): PrefetchModel determinism, the
+PrefetchPolicy seam's cold-start fallback, bit-identity of predicted-order
+installs, and the permutation property of predicted extent orders."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    HeatRegistry,
+    HierarchicalPool,
+    LayoutOrderPolicy,
+    NodePageServer,
+    Orchestrator,
+    PoolMaster,
+    PredictedOrderPolicy,
+    StateImage,
+    TouchEvent,
+    fit_prefetch_model,
+)
+from repro.core.pagestore import PAGE_SIZE
+from repro.core.profiler import RUN_PAGES, HeatMap
+from repro.core.prefetch_model import PrefetchPolicy, resolve_policy
+from repro.core.profiler import AccessRecorder
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def monotonic(self):
+        return self.t
+
+
+def make_image(seed=0, hot_pages=64, cold_pages=192, zero_pages=128):
+    rng = np.random.default_rng(seed)
+    arrays = {
+        "params": rng.standard_normal(hot_pages * PAGE_SIZE // 4).astype(np.float32),
+        "runtime": rng.integers(1, 7, (cold_pages * PAGE_SIZE,)).astype(np.uint8),
+        "arena": np.zeros(zero_pages * PAGE_SIZE, np.uint8),
+    }
+    img = StateImage.build(arrays)
+    rec = AccessRecorder(img.manifest)
+    rec.touch_array("params")
+    return img, rec.working_set()
+
+
+def feed_sequence(hm, run_sequence, stream=0):
+    """Record a first-touch walk visiting each run's pages in order."""
+    for r in run_sequence:
+        hm.record(TouchEvent(
+            pages=np.arange(r * RUN_PAGES, (r + 1) * RUN_PAGES),
+            kind="demand_fault", stream=stream))
+    hm.end_stream(stream)
+
+
+# -- model determinism -------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 7, 42])
+def test_model_fit_and_order_deterministic_per_seed(seed):
+    rng = np.random.default_rng(seed)
+    n_runs = 12
+    hm = HeatMap(n_runs * RUN_PAGES, clock=FakeClock())
+    for s in range(4):
+        feed_sequence(hm, rng.permutation(n_runs).tolist(), stream=s)
+
+    m1 = fit_prefetch_model(hm)
+    m2 = fit_prefetch_model(hm)
+    assert m1 is not None and m2 is not None
+    assert np.array_equal(m1.trans, m2.trans)
+    assert np.array_equal(m1.start, m2.start)
+    # same telemetry → identical order, call after call and model after model
+    assert np.array_equal(m1.run_order(), m2.run_order())
+    assert np.array_equal(m1.run_order(3), m2.run_order(3))
+    pages = rng.integers(0, n_runs * RUN_PAGES, 40)
+    assert np.array_equal(m1.page_order(pages), m2.page_order(pages))
+
+
+def test_model_learns_the_taught_chain():
+    n_runs = 6
+    hm = HeatMap(n_runs * RUN_PAGES, clock=FakeClock())
+    chain = [4, 1, 5, 0, 2, 3]
+    for s in range(3):
+        feed_sequence(hm, chain, stream=s)
+    m = fit_prefetch_model(hm)
+    order = m.run_order().tolist()
+    # with a single observed chain, predicted order IS the chain
+    assert order[:len(chain)] == chain
+    # seeded mid-chain, successors come first and the seed run drops out
+    seeded = m.run_order(seed_run=1).tolist()
+    assert seeded[0] == 5 and seeded[1] == 0
+
+
+def test_fit_returns_none_without_sequence_telemetry():
+    hm = HeatMap(4 * RUN_PAGES, clock=FakeClock())
+    hm.record(TouchEvent(pages=[0, 1], kind="demand_fault"))   # no stream
+    assert fit_prefetch_model(hm) is None
+    assert fit_prefetch_model(None) is None
+
+
+# -- the policy seam ---------------------------------------------------------
+
+class _FakeReader:
+    """Stands in for SnapshotReader: fixed cold-extent table."""
+
+    def __init__(self, extents):
+        self._extents = list(extents)
+
+    def iter_cold_extents(self, max_extent_pages):
+        return iter(self._extents)
+
+
+class _FakeSession:
+    def __init__(self, extents, heat=None):
+        self.reader = _FakeReader(extents)
+        self.heat = heat
+
+
+def make_extents(n, pages_per_extent=RUN_PAGES):
+    return [(i * pages_per_extent, pages_per_extent, i, 0, pages_per_extent * PAGE_SIZE)
+            for i in range(n)]
+
+
+def test_cold_start_falls_back_to_layout_order():
+    exts = make_extents(8)
+    sess = _FakeSession(exts, heat=HeatMap(8 * RUN_PAGES, clock=FakeClock()))
+    layout = list(LayoutOrderPolicy().order_extents(sess, None))
+    predicted = list(PredictedOrderPolicy().order_extents(sess, None))
+    assert predicted == layout == exts
+    # no heat object at all: same fallback
+    sess2 = _FakeSession(exts)
+    assert list(PredictedOrderPolicy().order_extents(sess2, None)) == exts
+
+
+def test_predicted_policy_reorders_and_reseeds():
+    hm = HeatMap(8 * RUN_PAGES, clock=FakeClock())
+    feed_sequence(hm, [5, 2, 7, 0], stream=0)
+    sess = _FakeSession(make_extents(8), heat=hm)
+    pol = PredictedOrderPolicy()
+    start_order = [e[0] // RUN_PAGES for e in pol.order_extents(sess, None)]
+    assert start_order[:4] == [5, 2, 7, 0]
+    # demand miss in run 2 re-seeds: 7 then 0 follow
+    fault_order = [e[0] // RUN_PAGES
+                   for e in pol.order_extents(sess, faulting_page=2 * RUN_PAGES)]
+    assert fault_order[:2] == [7, 0]
+    assert pol.reseed_on_demand
+
+
+def test_resolve_policy_shim_warns_and_maps():
+    with pytest.warns(DeprecationWarning):
+        pol = resolve_policy(None, 16, "test")
+    assert isinstance(pol, LayoutOrderPolicy)
+    assert pol.max_extent_pages == 16
+    default = resolve_policy(None, None, "test")
+    assert isinstance(default, LayoutOrderPolicy)
+    keep = PredictedOrderPolicy()
+    assert resolve_policy(keep, None, "test") is keep
+
+
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1),
+       st.integers(min_value=1, max_value=24))
+@settings(max_examples=25, deadline=None)
+def test_predicted_order_is_permutation_of_cold_set(seed, n_ext):
+    """Whatever the model says, a policy only RE-ORDERS the reader's cold
+    extents — the multiset of extents is preserved exactly."""
+    rng = np.random.default_rng(seed)
+    n_runs = max(n_ext, 4)
+    hm = HeatMap(n_runs * RUN_PAGES, clock=FakeClock())
+    for s in range(int(rng.integers(0, 3))):
+        feed_sequence(hm, rng.permutation(n_runs).tolist(), stream=s)
+    exts = make_extents(n_ext)
+    sess = _FakeSession(exts, heat=hm)
+    pol = PredictedOrderPolicy()
+    out = list(pol.order_extents(sess, None))
+    assert sorted(out) == sorted(exts)
+    fault_page = int(rng.integers(0, n_ext * RUN_PAGES))
+    out2 = list(pol.order_extents(sess, faulting_page=fault_page))
+    assert sorted(out2) == sorted(exts)
+
+
+# -- end-to-end bit-identity -------------------------------------------------
+
+def run_full_restore(img, ws, policy, heat=None):
+    pool = HierarchicalPool(256 << 20, 512 << 20)
+    master = PoolMaster(pool)
+    master.publish("s", img, ws)
+    server = NodePageServer("h0", pool, heat=heat)
+    orch = Orchestrator("h0", pool, master.catalog, node_server=server,
+                        prefetch_policy=policy)
+    ri = orch.restore("s", pre_install=True, prefetch_cold=True)
+    assert ri is not None
+    assert ri.engine.wait_prefetch_idle(60)
+    ri.engine.install_zero_runs()
+    buf = ri.instance.image.buf.copy()
+    present = bool(ri.instance.present.all())
+    ri.shutdown()
+    server.close()
+    return buf, present
+
+
+def test_predicted_and_layout_installs_bit_identical():
+    """A trained PredictedOrderPolicy changes only the ORDER bytes land in;
+    the final restored image is bit-identical to the snapshot either way."""
+    img, ws = make_image(seed=3)
+    heat = HeatRegistry(half_life_s=1e6)
+    hm = heat.map_for("s", 0, img.total_pages)
+    rng = np.random.default_rng(11)
+    feed_sequence(hm, rng.permutation(img.total_pages // RUN_PAGES).tolist())
+
+    layout_buf, ok_l = run_full_restore(img, ws, LayoutOrderPolicy(16))
+    pred_buf, ok_p = run_full_restore(img, ws, PredictedOrderPolicy(16),
+                                      heat=heat)
+    assert ok_l and ok_p
+    assert np.array_equal(layout_buf, img.buf)
+    assert np.array_equal(pred_buf, img.buf)
+    assert np.array_equal(pred_buf, layout_buf)
+
+
+def test_policy_base_class_is_abstract():
+    with pytest.raises(NotImplementedError):
+        PrefetchPolicy().order_extents(None)

@@ -7,9 +7,12 @@ from hypothesis import strategies as st
 
 from repro.core.pagestore import PAGE_SIZE, Manifest, StateImage, runs_from_pages
 from repro.core.profiler import (
+    RUN_PAGES,
+    START_RUN,
     AccessRecorder,
     HeatMap,
     HeatRegistry,
+    TouchEvent,
     WorkloadProfile,
 )
 
@@ -110,9 +113,9 @@ class FakeClock:
 def test_heatmap_record_weights_and_stats():
     clk = FakeClock()
     hm = HeatMap(16, half_life_s=10.0, clock=clk)
-    hm.record([1, 2, 2], kind="demand_fault")
-    hm.record([3], kind="prefetch_hit")
-    hm.record([4], kind="touch")
+    hm.record(TouchEvent(pages=[1, 2, 2], kind="demand_fault"))
+    hm.record(TouchEvent(pages=[3], kind="prefetch_hit"))
+    hm.record(TouchEvent(pages=[4], kind="touch"))
     c = hm.counts()
     assert c[1] == pytest.approx(1.0)
     assert c[2] == pytest.approx(2.0)          # duplicates accumulate
@@ -126,7 +129,7 @@ def test_heatmap_record_weights_and_stats():
 def test_heatmap_half_life_decay_exact():
     clk = FakeClock()
     hm = HeatMap(4, half_life_s=5.0, clock=clk)
-    hm.record([0], kind="demand_fault")
+    hm.record(TouchEvent(pages=[0], kind="demand_fault"))
     clk.t = 5.0
     assert hm.counts()[0] == pytest.approx(0.5)
     clk.t = 15.0
@@ -143,7 +146,7 @@ def test_heatmap_decay_monotone_property(pages, dt1_ms, dt2_ms):
     one (decay monotonicity, per page)."""
     clk = FakeClock()
     hm = HeatMap(32, half_life_s=0.25, clock=clk)
-    hm.record(pages, kind="demand_fault")
+    hm.record(TouchEvent(pages=pages, kind="demand_fault"))
     t1 = dt1_ms / 1000.0
     t2 = t1 + dt2_ms / 1000.0
     c0 = hm.counts(now=0.0)
@@ -157,8 +160,8 @@ def test_heatmap_decay_monotone_property(pages, dt1_ms, dt2_ms):
 def test_heatmap_candidates():
     clk = FakeClock()
     hm = HeatMap(10, half_life_s=100.0, clock=clk)
-    hm.record([2, 3], kind="demand_fault")
-    hm.record([5], kind="touch")
+    hm.record(TouchEvent(pages=[2, 3], kind="demand_fault"))
+    hm.record(TouchEvent(pages=[5], kind="touch"))
     cold = np.asarray([1, 2, 3, 4])
     assert hm.promotion_candidates(cold, min_heat=1.0).tolist() == [2, 3]
     hot = np.asarray([5, 6, 7])
@@ -180,3 +183,63 @@ def test_heat_registry_keys_and_latest():
     assert reg.find("w", 1) is None
     assert reg.latest("w") == (3, b)
     assert reg.latest("nope") is None
+
+
+# -- first-touch sequence telemetry (DESIGN.md §17) --------------------------
+
+def test_touchevent_sequence_transitions():
+    hm = HeatMap(8 * RUN_PAGES, clock=FakeClock())
+    # stream 7 first-touches runs 3 → 1 → 2 (dedup within the stream)
+    hm.record(TouchEvent(pages=np.arange(3 * RUN_PAGES, 4 * RUN_PAGES),
+                         kind="demand_fault", stream=7))
+    hm.record(TouchEvent(pages=[1 * RUN_PAGES, 1 * RUN_PAGES + 1],
+                         kind="demand_fault", stream=7))
+    hm.record(TouchEvent(pages=[3 * RUN_PAGES + 2],   # run 3 again: no-op
+                         kind="demand_fault", stream=7))
+    hm.record(TouchEvent(pages=[2 * RUN_PAGES], kind="touch", stream=7))
+    src, dst, cnt = hm.transition_counts()
+    got = {(int(s), int(d)): float(c) for s, d, c in zip(src, dst, cnt)}
+    assert got == {(START_RUN, 3): 1.0, (3, 1): 1.0, (1, 2): 1.0}
+    assert hm.stats["seq_transitions"] == 3
+
+
+def test_touchevent_streams_are_independent_and_endable():
+    hm = HeatMap(4 * RUN_PAGES, clock=FakeClock())
+    hm.record(TouchEvent(pages=[0], kind="demand_fault", stream=1))
+    hm.record(TouchEvent(pages=[RUN_PAGES], kind="demand_fault", stream=2))
+    src, dst, _ = hm.transition_counts()
+    # both streams start at START_RUN — neither sees the other's prev
+    assert sorted(zip(src.tolist(), dst.tolist())) == [
+        (START_RUN, 0), (START_RUN, 1)]
+    hm.end_stream(1)
+    # a reused stream id starts over from START_RUN
+    hm.record(TouchEvent(pages=[2 * RUN_PAGES], kind="demand_fault", stream=1))
+    src, dst, cnt = hm.transition_counts()
+    got = dict(zip(zip(src.tolist(), dst.tolist()), cnt.tolist()))
+    assert got[(START_RUN, 2)] == 1.0
+
+
+def test_touchevent_without_stream_records_no_sequence():
+    hm = HeatMap(4 * RUN_PAGES, clock=FakeClock())
+    hm.record(TouchEvent(pages=[0, RUN_PAGES], kind="demand_fault"))
+    _, _, cnt = hm.transition_counts()
+    assert cnt.size == 0
+    assert hm.stats["demand_faults"] == 2      # heat still accumulates
+
+
+def test_heat_registry_record_entrypoint():
+    reg = HeatRegistry()
+    ev = TouchEvent(pages=[0, 1], kind="demand_fault", name="w", version=2,
+                    total_pages=64, stream=5)
+    hm = reg.record(ev)
+    assert reg.find("w", 2) is hm
+    assert hm.stats["demand_faults"] == 2
+    with pytest.raises(ValueError):
+        reg.record(TouchEvent(pages=[0]))       # no (name, version) routing
+
+
+def test_legacy_record_spelling_warns_and_still_works():
+    hm = HeatMap(16, clock=FakeClock())
+    with pytest.warns(DeprecationWarning):
+        hm.record([1, 2], kind="demand_fault")
+    assert hm.stats["demand_faults"] == 2

@@ -11,6 +11,7 @@ from repro.core import (
     Orchestrator,
     PoolMaster,
     StateImage,
+    TouchEvent,
     estimate_snapshot_cxl_size,
     plan_recuration,
     reconstruct_image,
@@ -117,11 +118,11 @@ def test_plan_recuration_promotes_and_demotes():
     hm = heat.map_for("s", 0, regions.total_pages)
     rt = img.manifest.by_name()["runtime"]
     drift = np.arange(rt.first_page, rt.first_page + 10)
-    hm.record(drift, kind="demand_fault")
-    hm.record(drift, kind="demand_fault")
+    hm.record(TouchEvent(pages=drift, kind="demand_fault"))
+    hm.record(TouchEvent(pages=drift, kind="demand_fault"))
     pm = img.manifest.by_name()["params"]
     touched_hot = np.arange(pm.first_page, pm.first_page + 8)
-    hm.record(touched_hot, kind="touch")
+    hm.record(TouchEvent(pages=touched_hot, kind="touch"))
     hm.note_restore(); hm.note_restore()
     plan = plan_recuration(pool, regions, hm, min_restores=2)
     assert plan.changed
@@ -140,8 +141,10 @@ def test_recuration_economics_break_even():
     regions = master.publish("s", img, ws)
     hm = heat.map_for("s", 0, regions.total_pages)
     rt = img.manifest.by_name()["runtime"]
-    hm.record(np.arange(rt.first_page, rt.first_page + 10), "demand_fault")
-    hm.record(np.arange(rt.first_page, rt.first_page + 10), "demand_fault")
+    hm.record(TouchEvent(pages=np.arange(rt.first_page, rt.first_page + 10),
+                         kind="demand_fault"))
+    hm.record(TouchEvent(pages=np.arange(rt.first_page, rt.first_page + 10),
+                         kind="demand_fault"))
     hm.note_restore()
     plan = plan_recuration(pool, regions, hm, min_restores=1)
     cheap = recuration_economics(regions, plan, expected_restores=1)
@@ -207,8 +210,10 @@ def test_recurate_aborts_stale_when_update_races_in():
     regions = master.publish("s", img, ws)
     hm = heat.map_for("s", 0, regions.total_pages)
     rt = img.manifest.by_name()["runtime"]
-    hm.record(np.arange(rt.first_page, rt.first_page + 8), "demand_fault")
-    hm.record(np.arange(rt.first_page, rt.first_page + 8), "demand_fault")
+    hm.record(TouchEvent(pages=np.arange(rt.first_page, rt.first_page + 8),
+                         kind="demand_fault"))
+    hm.record(TouchEvent(pages=np.arange(rt.first_page, rt.first_page + 8),
+                         kind="demand_fault"))
     hm.note_restore()
     gen = master.recurate_steps("s", force=True)
     labels = []

@@ -10,6 +10,7 @@ import pytest
 from repro.core import (
     HierarchicalPool,
     Instance,
+    LayoutOrderPolicy,
     Orchestrator,
     PoolMaster,
     RestoreEngine,
@@ -122,7 +123,8 @@ class TestBatchedRestoreBitIdentical:
         img, ws = make_fragmented_image(seed=5)
         pool, master, _ = publish(img, ws)
         orch = Orchestrator("h0", pool, master.catalog, use_async_rdma=True,
-                            prefetch_cold=True, max_extent_pages=16)
+                            prefetch_cold=True,
+                            prefetch_policy=LayoutOrderPolicy(16))
         ri = orch.restore("t")
         assert ri is not None
         assert ri.engine.wait_prefetch_idle(30)
@@ -224,7 +226,8 @@ class TestPrefetcherDemandRace:
         img, ws = make_fragmented_image(seed=9)
         pool, master, _ = publish(img, ws)
         orch = Orchestrator("h0", pool, master.catalog, use_async_rdma=True,
-                            prefetch_cold=True, max_extent_pages=8)
+                            prefetch_cold=True,
+                            prefetch_policy=LayoutOrderPolicy(8))
         ri = orch.restore("t")
         assert ri is not None
         cold = ri.engine.reader.cold_page_indices()

@@ -17,7 +17,8 @@ import random
 import numpy as np
 import pytest
 
-from repro.core import STATE_FREE, STATE_PUBLISHED, STATE_TOMBSTONE, SnapshotReader
+from repro.core import (STATE_FREE, STATE_PUBLISHED, STATE_TOMBSTONE,
+                        SnapshotReader, TouchEvent)
 from repro.core.coherence import LeaseFallback
 from repro.sim import FlakyTier, SimCluster, SimTimeout
 
@@ -506,6 +507,35 @@ def scenario_drift_recuration_feedback(seed):
     return c
 
 
+def scenario_predicted_order_restore(seed):
+    """Predicted-order installs stay bit-identical (§17): drift borrowers
+    feed first-touch sequence telemetry, then a restore drains its cold
+    extents in the fitted model's order instead of snapshot layout.  The
+    bytes must verify against the canonical image, and a cold-start
+    predicted restore of a telemetry-free snapshot must also verify (layout
+    fallback).  I1–I5 are checked after every step throughout."""
+    from repro.core import HeatRegistry
+
+    c = SimCluster(n_hosts=3, seed=seed)
+    c.publish("s", 1.0, cold_pages=6)
+    c.publish("fresh", 2.0, cold_pages=4)
+    registry = HeatRegistry(clock=c.clock, half_life_s=1e6)
+    c.add_program("h1", c.drift_borrower_program("h1", "s", registry,
+                                                 attempts=2, cold_reads=4))
+    c.add_program("h2", c.delayed(2e-3, c.predicted_restore_program(
+        "h2", "s", registry)))
+    # no telemetry for "fresh": the policy must fall back to layout order
+    c.add_program("h3", c.predicted_restore_program("h3", "fresh", registry))
+    c.run(max_steps=30000)
+    assert any(e.startswith("predicted_restore:h2:s:model")
+               for e in c.events), c.events
+    assert any(e.startswith("predicted_restore:h3:fresh:layout")
+               for e in c.events), c.events
+    assert any(r["name"] == "s" and r.get("predicted_order")
+               for r in c.restored)
+    return c
+
+
 def scenario_recuration_owner_crash_mid_republish(seed):
     """Host crash mid-re-curation: the recurator dies between rebuilding
     the data regions and republishing the catalog entry.  Borrowers fall
@@ -517,8 +547,10 @@ def scenario_recuration_owner_crash_mid_republish(seed):
     regions0 = c.publish("s", 1.0)
     registry = HeatRegistry(clock=c.clock, half_life_s=1e6)
     hm = registry.map_for("s", 0, regions0.total_pages)
-    hm.record(np.arange(regions0.total_pages), kind="demand_fault")
-    hm.record(np.arange(regions0.total_pages), kind="demand_fault")
+    hm.record(TouchEvent(pages=np.arange(regions0.total_pages),
+                         kind="demand_fault"))
+    hm.record(TouchEvent(pages=np.arange(regions0.total_pages),
+                         kind="demand_fault"))
     hm.note_restore()
     hm.note_restore()
     c.add_program("recurator", c.recurate_program("s", registry, force=True,
@@ -741,6 +773,7 @@ SCENARIOS = {
     "dedup_eviction_shared_with_live_borrower":
         scenario_dedup_eviction_shared_with_live_borrower,
     "drift_recuration_feedback": scenario_drift_recuration_feedback,
+    "predicted_order_restore": scenario_predicted_order_restore,
     "recuration_owner_crash_mid_republish":
         scenario_recuration_owner_crash_mid_republish,
     "owner_update_vs_borrowers": scenario_owner_update_vs_borrowers,
